@@ -1,0 +1,81 @@
+"""Beyond-paper ablations (report-only).
+
+1. Heterogeneous energy budgets H_k (the paper defines per-client H_k but
+   evaluates homogeneous 0.15 J): selection frequency should track the
+   budget, and every client should still respect its own budget softly.
+2. Frame structure R < T with a per-frame V_m schedule (paper Alg. 1
+   supports it; experiments use R = T): queue resets trade energy
+   smoothness for responsiveness.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import T, K, claim, emit, ocean_cfg, sample_channel
+from repro.core import OceanConfig, RadioParams, eta_schedule, simulate
+
+
+def run() -> bool:
+    ok = True
+    h2 = sample_channel(9)
+    eta = eta_schedule("uniform", T)
+
+    # --- heterogeneous budgets -------------------------------------------
+    budgets = np.full(K, 0.15, np.float32)
+    budgets[:3] = 0.05   # energy-poor clients
+    budgets[-3:] = 0.45  # energy-rich clients
+    cfg = OceanConfig(
+        num_clients=K, num_rounds=T, radio=RadioParams(),
+        energy_budget_j=budgets,  # type: ignore[arg-type]
+    )
+    final, decs = simulate(cfg, h2, eta, 1e-5)
+    freq = np.asarray(decs.a).mean(axis=0)
+    spent = np.asarray(final.energy_spent)
+    emit("ablation_hetero_budget", "poor_clients_selected", freq[:3].mean())
+    emit("ablation_hetero_budget", "mid_clients_selected", freq[3:7].mean())
+    emit("ablation_hetero_budget", "rich_clients_selected", freq[-3:].mean())
+    emit("ablation_hetero_budget", "poor_spent_j", spent[:3].mean(), "budget=0.05")
+    emit("ablation_hetero_budget", "rich_spent_j", spent[-3:].mean(), "budget=0.45")
+    # NOTE: raw selection *frequency* is non-monotone in the budget — rich
+    # clients oscillate (a b_min selection can cost >> H/T, spiking the
+    # queue) — but energy *spend* tracks the budget monotonically.
+    ok &= claim(
+        "ablation_hetero_budget",
+        "energy-poor clients selected least",
+        freq[:3].mean() < min(freq[3:7].mean(), freq[-3:].mean()),
+    )
+    mid_spent = spent[3:7].mean()
+    ok &= claim(
+        "ablation_hetero_budget",
+        "energy spend ordered by budget (poor < mid < rich)",
+        spent[:3].mean() < mid_spent < spent[-3:].mean(),
+    )
+    ok &= claim(
+        "ablation_hetero_budget",
+        "energy-poor clients stay near their smaller budget",
+        spent[:3].mean() < 2.5 * 0.05,
+    )
+
+    # --- frames R < T with ascending V_m ----------------------------------
+    cfg_frames = OceanConfig(
+        num_clients=K, num_rounds=T, radio=RadioParams(),
+        energy_budget_j=0.15, frame_len=T // 3,
+    )
+    v_seq = np.asarray([0.5e-5, 1e-5, 2e-5], np.float32)
+    final_f, decs_f = simulate(cfg_frames, h2, eta, v_seq)
+    ns = np.asarray(decs_f.num_selected)
+    for m in range(3):
+        emit(
+            "ablation_frames",
+            f"frame{m}_selected",
+            ns[m * (T // 3) : (m + 1) * (T // 3)].mean(),
+            f"V_m={v_seq[m]:g}",
+        )
+    emit("ablation_frames", "energy_mean_j", np.asarray(final_f.energy_spent).mean())
+    ok &= claim(
+        "ablation_frames",
+        "per-frame V_m schedule shapes selection across frames",
+        ns[: T // 3].mean() < ns[-T // 3 :].mean(),
+    )
+    return ok

@@ -1,0 +1,48 @@
+"""Paper Fig 7: per-client total energy after 300 rounds, per policy.
+
+Select-All blows far past the 0.15 J budget, SMO under-utilizes, AMO and
+OCEAN-a land close to the budget.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import V_DEFAULT, claim, emit, ocean_cfg, sample_channel
+from repro.fed.loop import policy_trace
+
+
+def run() -> bool:
+    cfg = ocean_cfg()
+    h2 = sample_channel(1)
+    ok = True
+    budget = 0.15
+    spent = {}
+    for name in ("select_all", "smo", "amo", "ocean-a"):
+        tr = policy_trace(name, cfg, h2, v=V_DEFAULT, key=jax.random.PRNGKey(1))
+        e = np.asarray(tr.e.sum(0))
+        spent[name] = e
+        emit("fig7_energy", f"{name}_mean_energy_j", e.mean(), f"budget={budget}")
+        emit("fig7_energy", f"{name}_max_energy_j", e.max())
+
+    ok &= claim(
+        "fig7_energy",
+        "Select-All far exceeds the budget (Fig 7)",
+        spent["select_all"].mean() > 3 * budget,
+    )
+    ok &= claim(
+        "fig7_energy",
+        "SMO under-utilizes the budget (Fig 7)",
+        spent["smo"].mean() < 0.5 * budget,
+    )
+    ok &= claim(
+        "fig7_energy",
+        "AMO lands at the budget (Fig 7)",
+        abs(spent["amo"].mean() - budget) < 0.15 * budget,
+    )
+    ok &= claim(
+        "fig7_energy",
+        "OCEAN-a lands near the budget (soft O(sqrt V) violation, Fig 7)",
+        abs(spent["ocean-a"].mean() - budget) < 0.25 * budget,
+    )
+    return ok

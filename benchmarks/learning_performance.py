@@ -1,0 +1,62 @@
+"""Paper Figs 8-9: FL loss/accuracy when policies drive FedAvg.
+
+Select-All (energy-oblivious ideal) best; OCEAN-a comparable to AMO and
+close to Select-All; SMO considerably worse.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    Timer,
+    V_DEFAULT,
+    claim,
+    emit,
+    image_experiment,
+    ocean_cfg,
+    sample_channel,
+)
+from repro.fed.loop import policy_trace
+
+SEEDS = 6
+
+
+def run() -> bool:
+    cfg = ocean_cfg()
+    exp = image_experiment()
+    ok = True
+    finals = {}
+    with Timer() as t:
+        for name in ("select_all", "smo", "amo", "ocean-a"):
+            accs, losses = [], []
+            for seed in range(SEEDS):
+                h2 = sample_channel(seed + 3)
+                tr = policy_trace(name, cfg, h2, v=V_DEFAULT, key=jax.random.PRNGKey(seed))
+                hist = jax.jit(exp.run)(jax.random.PRNGKey(100 + seed), tr)
+                accs.append(float(hist["test_accuracy"][-1]))
+                losses.append(float(hist["test_loss"][-1]))
+            finals[name] = (np.mean(losses), np.mean(accs))
+            emit("fig8_9_learning", f"{name}_final_loss", finals[name][0])
+            emit("fig8_9_learning", f"{name}_final_accuracy", finals[name][1])
+    emit("fig8_9_learning", "runtime_s", t.elapsed)
+
+    ok &= claim(
+        "fig8_9_learning",
+        "Select-All at or near the best loss (Fig 8; ties within seed "
+        "noise of 0.05 accepted)",
+        finals["select_all"][0] <= min(v[0] for v in finals.values()) + 0.05,
+    )
+    ok &= claim(
+        "fig8_9_learning",
+        "SMO is the worst performer (Fig 8-9; margin 0.01)",
+        finals["smo"][1]
+        <= min(finals["ocean-a"][1], finals["amo"][1], finals["select_all"][1]) + 0.01,
+    )
+    ok &= claim(
+        "fig8_9_learning",
+        "OCEAN-a close to Select-All (within 10%% accuracy, Fig 9)",
+        finals["ocean-a"][1] >= 0.9 * finals["select_all"][1],
+    )
+    return ok

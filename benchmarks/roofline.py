@@ -1,0 +1,135 @@
+"""Roofline analysis from the multi-pod dry-run artifacts (deliverable g).
+
+Reads results/dryrun_single_pod.json (written by
+``python -m repro.launch.dryrun --all --out ...``) and derives, per
+(arch x shape):
+
+  compute term    = per-device HLO FLOPs / 197e12        [s]
+  memory term     = per-device HLO bytes  / 819e9        [s]
+  collective term = per-device collective bytes / 50e9   [s]
+
+plus MODEL_FLOPS = 6*N(active)*tokens (train) or 2*N(active)*tokens
+(inference) against compiled FLOPs — the useful-compute ratio that
+exposes remat/redundancy.  Emits CSV rows and writes
+results/roofline.md for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+from repro.configs import ARCH_CONFIGS, SHAPES
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+RESULTS = "results/dryrun_single_pod.json"
+OUT_MD = "results/roofline.md"
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    cfg = ARCH_CONFIGS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / devices
+
+
+def analyze(records: List[Dict]) -> List[Dict]:
+    rows = []
+    for r in records:
+        if r.get("status") != "ok":
+            if r.get("status") == "skipped":
+                rows.append(
+                    {"arch": r.get("arch", "?"), "shape": r.get("shape", "?"),
+                     "skip": r.get("reason", "")}
+                )
+            continue
+        analytic = r.get("analytic") or {}
+        # prefer the loop-aware analytic terms; fall back to XLA's (which
+        # count while bodies once — see launch/hlo_cost.py)
+        flops = analytic.get("flops") or r["cost"].get("flops", 0.0)
+        # write-traffic proxy x2.5 approximates read+write HBM bytes
+        bytes_ = (
+            2.5 * analytic["hbm_bytes"]
+            if analytic.get("hbm_bytes")
+            else r["cost"].get("bytes accessed", 0.0)
+        )
+        coll = (
+            analytic.get("collective_bytes")
+            or r["collectives"]["total_bytes"]
+        )
+        t_c = flops / PEAK_FLOPS
+        t_m = bytes_ / HBM_BW
+        t_x = coll / ICI_BW
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+        mf = model_flops_per_device(r["arch"], r["shape"], r["devices"])
+        rows.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "kind": r["kind"],
+                "compute_s": t_c,
+                "memory_s": t_m,
+                "collective_s": t_x,
+                "dominant": dom,
+                "model_flops": mf,
+                "hlo_flops": flops,
+                "useful_ratio": (mf / flops) if flops else 0.0,
+                "temp_gib": r["memory"].get("temp_size_in_bytes", 0) / 2**30,
+            }
+        )
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful FLOP ratio | temp GiB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} | {r['temp_gib']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> bool:
+    if not os.path.exists(RESULTS):
+        emit("roofline", "CLAIM", "SKIP", f"{RESULTS} missing — run the dry-run first")
+        return True
+    with open(RESULTS) as f:
+        records = json.load(f)
+    rows = analyze(records)
+    n_ok = sum(1 for r in rows if "skip" not in r)
+    emit("roofline", "pairs_analyzed", n_ok)
+    for r in rows:
+        if "skip" in r:
+            emit("roofline", f"{r['arch']}|{r['shape']}", "SKIP", r["skip"])
+            continue
+        emit(
+            "roofline",
+            f"{r['arch']}|{r['shape']}",
+            r["dominant"],
+            f"c={r['compute_s']:.2e}s m={r['memory_s']:.2e}s x={r['collective_s']:.2e}s "
+            f"useful={r['useful_ratio']:.2f}",
+        )
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write(to_markdown(rows) + "\n")
+    emit("roofline", "markdown", OUT_MD)
+    return n_ok >= 39

@@ -1,0 +1,69 @@
+"""Benchmark driver — one module per paper figure/table (deliverable d).
+
+Each module's ``run()`` prints ``benchmark,metric,value,note`` CSV rows,
+validates the paper's claims (CLAIM rows), and returns overall success.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig16_tradeoff]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    ablations,
+    energy_consumption,
+    learning_performance,
+    roofline,
+    scenarios,
+    selection_patterns,
+    structure,
+    temporal_pattern,
+    tradeoff,
+)
+
+BENCHMARKS = {
+    "fig1_4_temporal_pattern": temporal_pattern.run,
+    "fig5_6_selection_patterns": selection_patterns.run,
+    "fig7_energy_consumption": energy_consumption.run,
+    "fig8_9_learning_performance": learning_performance.run,
+    "fig10_14_scenarios": scenarios.run,
+    "fig15_structure": structure.run,
+    "fig16_tradeoff": tradeoff.run,
+    "ablations_beyond_paper": ablations.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    print("benchmark,metric,value,note")
+    failures = []
+    for name, fn in BENCHMARKS.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            ok = fn()
+        except Exception as e:  # pragma: no cover
+            import traceback
+
+            traceback.print_exc()
+            print(f"{name},ERROR,{type(e).__name__},{str(e)[:120]}")
+            ok = False
+        print(f"{name},total_runtime_s,{time.time()-t0:.1f},")
+        if not ok:
+            failures.append(name)
+    if failures:
+        print(f"SUMMARY,failed,{len(failures)},{';'.join(failures)}")
+        return 1
+    print(f"SUMMARY,all_passed,{len([n for n in BENCHMARKS if not args.only or args.only in n])},")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

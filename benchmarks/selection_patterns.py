@@ -1,0 +1,69 @@
+"""Paper Figs 5-6: temporal client-selection patterns of OCEAN vs benchmarks.
+
+Fig 5: Select-All(10) >> OCEAN-a > AMO > SMO in average selected clients.
+Fig 6: OCEAN-a ascending, OCEAN-d descending, OCEAN-u flat.
+Averaged over 10 channel realizations (as in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import K, T, V_DEFAULT, claim, emit, ocean_cfg, sample_channel
+from repro.fed.loop import policy_trace
+
+RUNS = 10
+
+
+def _avg_counts(name):
+    cfg = ocean_cfg()
+    counts = []
+    for seed in range(RUNS):
+        h2 = sample_channel(seed)
+        tr = policy_trace(name, cfg, h2, v=V_DEFAULT, key=jax.random.PRNGKey(seed))
+        counts.append(np.asarray(tr.num_selected))
+    return np.mean(np.stack(counts), axis=0)
+
+
+def run() -> bool:
+    ok = True
+    series = {}
+    for name in ("select_all", "smo", "amo", "ocean-a", "ocean-d", "ocean-u"):
+        c = _avg_counts(name)
+        series[name] = c
+        emit("fig5_6_selection", f"{name}_avg", c.mean())
+        emit("fig5_6_selection", f"{name}_first50", c[:50].mean())
+        emit("fig5_6_selection", f"{name}_last50", c[-50:].mean())
+
+    ok &= claim(
+        "fig5_6_selection",
+        "Select-All selects all 10 every round (Fig 5)",
+        abs(series["select_all"].mean() - K) < 1e-6,
+    )
+    ok &= claim(
+        "fig5_6_selection",
+        "OCEAN-a selects far more than SMO (Fig 5)",
+        series["ocean-a"].mean() > 2 * series["smo"].mean(),
+    )
+    ok &= claim(
+        "fig5_6_selection",
+        "AMO ascends as a by-product of budget recycling (Fig 5)",
+        series["amo"][-50:].mean() > series["amo"][:50].mean(),
+    )
+    ok &= claim(
+        "fig5_6_selection",
+        "OCEAN-a ascending pattern (Fig 6)",
+        series["ocean-a"][-50:].mean() > series["ocean-a"][:50].mean(),
+    )
+    ok &= claim(
+        "fig5_6_selection",
+        "OCEAN-d descending pattern (Fig 6)",
+        series["ocean-d"][-50:].mean() < series["ocean-d"][:50].mean(),
+    )
+    drift = abs(series["ocean-u"][-50:].mean() - series["ocean-u"][:50].mean())
+    ok &= claim(
+        "fig5_6_selection",
+        "OCEAN-u roughly flat (Fig 6)",
+        drift < 0.35 * series["ocean-u"].mean(),
+    )
+    return ok

@@ -1,0 +1,53 @@
+"""Paper Fig 15 + Theorem 1 / Proposition 1 structure, in one round.
+
+Selected clients are exactly the low-rho prefix; among the selected,
+bandwidth is non-decreasing in rho (worse channel / larger deficit gets
+MORE bandwidth — the inversion of throughput-oriented allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RADIO, claim, emit
+from repro.core import ocean_p
+
+
+def run() -> bool:
+    rng = np.random.default_rng(42)
+    K = 10
+    q = rng.uniform(0.0, 0.05, K).astype(np.float32)
+    q[[2, 7]] = 0.0
+    h2 = (2.5e-4 * rng.exponential(size=K)).astype(np.float32)
+    sol = ocean_p(jnp.asarray(q), jnp.asarray(h2), jnp.asarray(2e-5), jnp.asarray(1.0), RADIO)
+
+    rho = np.asarray(sol.rho)
+    a = np.asarray(sol.a)
+    b = np.asarray(sol.b)
+    for k in range(K):
+        emit("fig15_structure", f"client{k}", f"rho={rho[k]:.4g} a={int(a[k])} b={b[k]:.4f}")
+
+    ok = True
+    ok &= claim(
+        "fig15_structure",
+        "selected set is the low-rho prefix (Thm 1)",
+        (not a.any()) or (not (~a).any()) or rho[a].max() <= rho[~a].min() + 1e-12,
+    )
+    sel = a & (rho > 0)
+    if sel.sum() >= 2:
+        order = np.argsort(rho[sel])
+        bs = b[sel][order]
+        ok &= claim(
+            "fig15_structure",
+            "bandwidth non-decreasing in rho among selected (Prop 1)",
+            bool(np.all(np.diff(bs) >= -1e-4)),
+        )
+    s0 = rho <= 1e-30
+    ok &= claim(
+        "fig15_structure",
+        "zero-deficit clients always selected (OCEAN-P S0 rule)",
+        bool(a[s0].all()),
+    )
+    emit("fig15_structure", "num_selected", int(a.sum()))
+    return ok

@@ -1,0 +1,32 @@
+"""Batched serving example: decode with a KV cache on any assigned arch.
+
+Uses the reduced smoke variant on CPU; on a TPU pod drop --smoke and the
+same code runs the full config under the production mesh.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma2-27b
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    arch = "gemma2-27b"
+    if "--arch" in sys.argv:
+        arch = sys.argv[sys.argv.index("--arch") + 1]
+    raise SystemExit(
+        subprocess.call(
+            [
+                sys.executable,
+                "-m",
+                "repro.launch.serve",
+                "--arch",
+                arch,
+                "--smoke",
+                "--batch",
+                "4",
+                "--prompt-len",
+                "16",
+                "--gen",
+                "24",
+            ]
+        )
+    )

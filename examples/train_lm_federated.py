@@ -1,0 +1,36 @@
+"""Federated LM training with OCEAN gating, at datacenter shape.
+
+Each batch row is a client group; OCEAN's per-round selection mask gates
+whose gradients enter the FedAvg aggregation (the all-reduce *is* the
+wireless uplink — DESIGN.md §3).  Runs the reduced gemma3 variant on CPU;
+the identical step lowers onto the 16x16 / 2x16x16 meshes in the dry-run.
+
+    PYTHONPATH=src python examples/train_lm_federated.py --steps 30
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+    raise SystemExit(
+        subprocess.call(
+            [
+                sys.executable,
+                "-m",
+                "repro.launch.train",
+                "--arch",
+                args.arch,
+                "--smoke",
+                "--steps",
+                str(args.steps),
+                "--batch",
+                "8",
+                "--seq",
+                "128",
+            ]
+        )
+    )

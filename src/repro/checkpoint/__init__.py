@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import load_pytree, save_pytree, latest_step
+
+__all__ = ["save_pytree", "load_pytree", "latest_step"]

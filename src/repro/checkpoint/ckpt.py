@@ -1,0 +1,82 @@
+"""Minimal npz-based pytree checkpointing with step management.
+
+Layout: <dir>/step_<N>.npz with leaves flattened to path-keyed arrays
+plus a json-encoded treedef for faithful restoration (lists/dicts/
+namedtuple-as-dict).  Good enough for the CPU-scale federated runs; a
+production TPU deployment would swap in tensorstore behind the same API.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree: Any):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(directory: str, tree: Any, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def load_pytree(
+    directory: str, like: Any, step: Optional[int] = None
+) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    ref_flat = _flatten(like)
+    missing = set(ref_flat) - set(flat)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for lpath, leaf in leaves_with_paths:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in lpath
+        )
+        arr = flat[key]
+        if arr.shape != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {np.shape(leaf)}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for f in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)\.npz", f)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

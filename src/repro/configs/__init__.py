@@ -1,0 +1,60 @@
+"""Assigned architecture configs (+ input shapes + smoke variants)."""
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import (
+    SHAPES,
+    InputShape,
+    adapt_config,
+    input_specs,
+    smoke_variant,
+)
+
+from repro.configs import (
+    command_r_35b,
+    gemma2_27b,
+    gemma3_1b,
+    granite_20b,
+    granite_moe_3b_a800m,
+    grok_1_314b,
+    jamba_1_5_large_398b,
+    phi_3_vision_4_2b,
+    rwkv6_1_6b,
+    whisper_base,
+)
+
+_MODULES = (
+    phi_3_vision_4_2b,
+    gemma3_1b,
+    rwkv6_1_6b,
+    granite_20b,
+    command_r_35b,
+    jamba_1_5_large_398b,
+    whisper_base,
+    granite_moe_3b_a800m,
+    gemma2_27b,
+    grok_1_314b,
+)
+
+ARCH_CONFIGS = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+LONG_CTX = {m.CONFIG.name: m.LONG_CTX for m in _MODULES}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCH_CONFIGS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {name!r}; available: {sorted(ARCH_CONFIGS)}"
+        ) from None
+
+
+__all__ = [
+    "ModelConfig",
+    "SHAPES",
+    "InputShape",
+    "adapt_config",
+    "input_specs",
+    "smoke_variant",
+    "ARCH_CONFIGS",
+    "LONG_CTX",
+    "get_config",
+]

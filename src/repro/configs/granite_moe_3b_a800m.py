@@ -1,0 +1,30 @@
+"""granite-moe-3b-a800m [moe] — 40 experts top-8, tiny per-expert FFN.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base family].  32L, d_model=1536,
+24 heads (GQA kv=8), per-expert d_ff=512, vocab=49155 (odd — logits are
+d_model-sharded, see sharding rules).  40 experts do not divide the
+16-way model axis => expert FFN hidden is tensor-parallel instead of
+expert-parallel.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    arch_type="moe",
+    num_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49_155,
+    num_experts=40,
+    top_k=8,
+    moe_every=1,
+    act="silu",
+    mlp_gated=True,
+    tie_embeddings=True,
+    max_seq_len=131_072,
+    citation="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)
+
+LONG_CTX = "window"

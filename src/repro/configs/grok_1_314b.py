@@ -1,0 +1,28 @@
+"""grok-1-314b [moe] — 8 experts top-2 on every layer.
+
+[hf:xai-org/grok-1].  64L, d_model=6144, 48 heads (GQA kv=8),
+d_ff=32768 per expert, vocab=131072.  8 experts < 16-way model axis =>
+expert FFN hidden is tensor-parallel (see sharding rules).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    arch_type="moe",
+    num_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32_768,
+    vocab=131_072,
+    num_experts=8,
+    top_k=2,
+    moe_every=1,
+    act="gelu",
+    mlp_gated=True,
+    tie_embeddings=False,
+    max_seq_len=8192 * 16,
+    citation="hf:xai-org/grok-1",
+)
+
+LONG_CTX = "window"

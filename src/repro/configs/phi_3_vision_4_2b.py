@@ -1,0 +1,31 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini text backbone + CLIP vision stub.
+
+[hf:microsoft/Phi-3-vision-128k-instruct].  Backbone: 32L, d_model=3072,
+32 heads (GQA kv=32 => full MHA), d_ff=8192, vocab=32064.  The ViT/CLIP
+encoder + projector is a STUB: input_specs supplies 576 patch embeddings
+(24x24 grid, CLIP-L width 1024) which the model projects to d_model and
+prepends to the token stream.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    arch_type="vlm",
+    num_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32064,
+    num_patches=576,
+    frontend_dim=1024,
+    tie_embeddings=False,
+    act="silu",
+    mlp_gated=True,
+    rope_theta=10_000.0,
+    max_seq_len=131_072,
+    citation="hf:microsoft/Phi-3-vision-128k-instruct",
+)
+
+# long_500k handling: pure full-attention arch -> sliding-window variant
+LONG_CTX = "window"

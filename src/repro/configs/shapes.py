@@ -1,0 +1,150 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs.
+
+``input_specs(cfg, shape_name)`` returns the exact keyword arguments the
+lowered step function takes, as ShapeDtypeStructs (no allocation) — the
+pattern the multi-pod dry-run lowers against.
+
+Shape semantics:
+  train_4k    -> train_step   (tokens+labels+client mask, global batch 256)
+  prefill_32k -> prefill_step (forward + last-token logits)
+  decode_32k  -> serve_step   (ONE token, KV cache of seq_len)
+  long_500k   -> serve_step   (ONE token, 512k cache; sub-quadratic archs)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape, long_ctx: str) -> ModelConfig:
+    """Apply the long-context variant for full-attention archs at 500k.
+
+    long_ctx: "native" (run as-is), "native_window" (global layers become
+    windowed), "window" (all layers windowed — the beyond-paper variant for
+    pure dense archs), "skip".
+    """
+    if shape.name != "long_500k" or long_ctx == "native":
+        return cfg
+    if long_ctx == "skip":
+        raise ValueError(f"{cfg.name} skips long_500k (see DESIGN.md §4)")
+    if long_ctx in ("window", "native_window"):
+        pattern = cfg.layer_pattern or ("global",)
+        new_pattern = tuple(
+            "local" if k == "global" else k for k in pattern
+        )
+        return dataclasses.replace(
+            cfg,
+            layer_pattern=new_pattern,
+            sliding_window=min(cfg.sliding_window, 4096),
+        )
+    raise ValueError(long_ctx)
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model inputs (not params/cache) for the given step kind."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {}
+        if cfg.arch_type == "vlm":
+            s_text = s - cfg.num_patches
+            specs["tokens"] = _tok(b, s_text)
+            specs["labels"] = _tok(b, s_text)
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.frontend_dim or cfg.d_model), dt
+            )
+        elif cfg.arch_type == "audio":
+            specs["tokens"] = _tok(b, s)
+            specs["labels"] = _tok(b, s)
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.source_len, cfg.d_model), dt
+            )
+        else:
+            specs["tokens"] = _tok(b, s)
+            specs["labels"] = _tok(b, s)
+        specs["client_mask"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {}
+        if cfg.arch_type == "vlm":
+            specs["tokens"] = _tok(b, s - cfg.num_patches)
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.frontend_dim or cfg.d_model), dt
+            )
+        elif cfg.arch_type == "audio":
+            specs["tokens"] = _tok(b, s)
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.source_len, cfg.d_model), dt
+            )
+        else:
+            specs["tokens"] = _tok(b, s)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {
+        "token": _tok(b, 1),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests.
+
+    2 superblocks' worth of layers (preserving the pattern), d_model <= 256,
+    <= 4 experts, tiny vocab.
+    """
+    bl = cfg.block_len
+    layers = min(2 * bl, max(cfg.num_layers, 2)) if bl > 1 else 2
+    n_heads = min(cfg.n_heads, 4)
+    n_kv = min(cfg.n_kv_heads, n_heads)
+    # keep GQA ratio valid
+    while n_heads % n_kv:
+        n_kv -= 1
+    d_model = 128 if cfg.ssm_kind != "rwkv6" else 128  # 2 rwkv heads of 64
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=32 if cfg.ssm_kind != "rwkv6" else None,
+        d_ff=256,
+        vocab=256,
+        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        source_len=16 if cfg.encoder_layers else cfg.source_len,
+        num_patches=8 if cfg.num_patches else 0,
+        frontend_dim=64 if cfg.num_patches else None,
+        sliding_window=min(cfg.sliding_window, 16),
+        max_seq_len=128,
+        expand=2,
+        d_state=8,
+        rwkv_decay_lora=16,
+        dtype="float32",
+    )

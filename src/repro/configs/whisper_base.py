@@ -1,0 +1,32 @@
+"""whisper-base [audio] — encoder-decoder with conv frontend STUB.
+
+[arXiv:2212.04356].  6 encoder + 6 decoder layers, d_model=512, 8 heads,
+d_ff=2048 (non-gated GELU), vocab=51865, LayerNorm.  input_specs supplies
+(B, 1500, 512) post-conv frame embeddings.  NOTE: real whisper caps the
+decoder at 448 tokens; the assigned decode shapes treat the cache length
+abstractly (learned positions sized to max_seq_len).  long_500k is
+SKIPPED per DESIGN.md §4.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    arch_type="audio",
+    num_layers=6,
+    encoder_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51_865,
+    source_len=1500,
+    use_rope=False,  # learned decoder positions; sinusoidal encoder
+    norm="layernorm",
+    act="gelu",
+    mlp_gated=False,
+    tie_embeddings=True,
+    max_seq_len=32_768,
+    citation="arXiv:2212.04356",
+)
+
+LONG_CTX = "skip"

@@ -1,0 +1,59 @@
+"""Core — the paper's contribution: OCEAN online client selection and
+bandwidth allocation under long-term energy constraints."""
+from repro.core.energy import RadioParams, energy, f_shannon, f_shannon_prime
+from repro.core.bandwidth import solve_p4
+from repro.core.selection import OceanPSolution, ocean_p, p3_value, priorities
+from repro.core.ocean import (
+    OceanConfig,
+    OceanState,
+    RoundDecision,
+    init_state,
+    ocean_round,
+    simulate,
+)
+from repro.core.channel import (
+    ChannelModel,
+    scenario1_channel,
+    scenario2_channel,
+    stationary_channel,
+)
+from repro.core.patterns import eta_schedule, ETA_SCHEDULES, COUNT_PATTERNS
+from repro.core.baselines import (
+    PolicyTrace,
+    amo,
+    lookahead_dual,
+    select_all,
+    smo,
+    utility,
+)
+
+__all__ = [
+    "RadioParams",
+    "energy",
+    "f_shannon",
+    "f_shannon_prime",
+    "solve_p4",
+    "OceanPSolution",
+    "ocean_p",
+    "p3_value",
+    "priorities",
+    "OceanConfig",
+    "OceanState",
+    "RoundDecision",
+    "init_state",
+    "ocean_round",
+    "simulate",
+    "ChannelModel",
+    "scenario1_channel",
+    "scenario2_channel",
+    "stationary_channel",
+    "eta_schedule",
+    "ETA_SCHEDULES",
+    "COUNT_PATTERNS",
+    "PolicyTrace",
+    "amo",
+    "lookahead_dual",
+    "select_all",
+    "smo",
+    "utility",
+]

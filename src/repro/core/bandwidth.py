@@ -1,0 +1,148 @@
+"""P4 — the per-selection-set convex bandwidth-allocation problem (paper §V-B).
+
+Given a selection set S (encoded as a boolean mask over clients with
+priority rho_k = q_k / h_k^2 > 0) and a bandwidth budget ``delta``:
+
+    minimize    sum_k rho_k * f(b_k)          (equivalently maximize P4)
+    subject to  sum_k b_k = delta,   b_k >= b_min
+
+with f(b) = b (2^{beta/b} - 1), which is decreasing and convex (Lemma 1),
+so the problem is convex.  The KKT conditions give, for interior clients,
+
+    rho_k * f'(b_k) = -lam   (lam >= 0)
+
+with f' negative and strictly increasing, so b_k(lam) is found by an inner
+bisection on f' and the waterfilling level lam by an outer bisection on the
+budget residual.  Both loops are fixed-iteration ``lax.fori_loop``s so the
+whole solver jits, vmaps (over candidate selection sets — OCEAN-P) and
+differentiates-nowhere (it is piecewise constant in integers; we never need
+gradients through it).
+
+This replaces the CVX calls of the paper with an accelerator-native exact
+solver (see DESIGN.md §3, hardware adaptation).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import RadioParams, f_shannon, f_shannon_prime
+
+Array = jax.Array
+
+
+def _b_of_lam(
+    lam: Array, rho: Array, beta: float, b_min: float, b_max: Array, iters: int
+) -> Array:
+    """Solve rho_k f'(b) = -lam for each k by bisection; clamp to [b_min, b_max].
+
+    f' is strictly increasing, so we bisect on b.  Where rho_k == 0 the
+    client has no energy cost and the KKT stationarity never binds; callers
+    mask those out (they sit in S0 with b = b_min).
+    """
+    target = -lam / jnp.maximum(rho, 1e-30)  # want f'(b) = target (<0)
+
+    lo = jnp.full_like(rho, b_min)
+    hi = jnp.broadcast_to(b_max, rho.shape).astype(rho.dtype)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        below = f_shannon_prime(mid, beta) < target  # need larger b
+        lo = jnp.where(below, mid, lo)
+        hi = jnp.where(below, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def solve_p4(
+    rho: Array,
+    mask: Array,
+    delta: Array,
+    radio: RadioParams,
+    outer_iters: int = 42,
+    inner_iters: int = 42,
+) -> Tuple[Array, Array]:
+    """Optimal bandwidth split of ``delta`` among ``mask``-ed clients.
+
+    Args:
+      rho:   (K,) priorities q_k / h_k^2 (>0 for genuine P4 members).
+      mask:  (K,) bool — membership of S - S0.
+      delta: scalar — total ratio to distribute (= 1 - |S0| * b_min).
+      radio: physics.
+
+    Returns:
+      b:    (K,) allocation, 0 outside the mask, sum(b[mask]) == delta.
+      cost: scalar — sum_k rho_k f(b_k) over the mask (the energy-weighted
+            objective P4 minimizes, *without* the N0*tau*B prefactor).
+    """
+    rho = jnp.asarray(rho)
+    mask = jnp.asarray(mask, bool)
+    delta = jnp.asarray(delta, rho.dtype)
+    beta = radio.beta
+    b_min = radio.b_min
+
+    n = jnp.sum(mask)
+    has_any = n > 0
+    n_safe = jnp.maximum(n, 1)
+    # No member may exceed delta - (n-1) * b_min.
+    b_max = jnp.maximum(delta - (n_safe - 1) * b_min, b_min)
+
+    # --- outer bisection on the waterfilling level lam -------------------
+    # lam = 0          => every b at its unconstrained max (sum too big)
+    # lam = lam_hi     => every b at b_min (sum = n*b_min <= delta)
+    fp_min = -f_shannon_prime(jnp.asarray(b_min, rho.dtype), beta)  # > 0
+    lam_hi = jnp.max(jnp.where(mask, rho, 0.0)) * fp_min * (1.0 + 1e-6) + 1e-30
+
+    def sum_b(lam):
+        b = _b_of_lam(lam, rho, beta, b_min, b_max, inner_iters)
+        return jnp.sum(jnp.where(mask, b, 0.0)), b
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        s, _ = sum_b(mid)
+        too_big = s > delta  # allocation too generous -> raise lam
+        lo = jnp.where(too_big, mid, lo)
+        hi = jnp.where(too_big, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(
+        0, outer_iters, body, (jnp.zeros_like(lam_hi), lam_hi)
+    )
+    lam = 0.5 * (lo + hi)
+    _, b = sum_b(lam)
+    b = jnp.where(mask, b, 0.0)
+
+    # Exact budget repair: bisection leaves a tiny residual; distribute it
+    # proportionally over the headroom above b_min so sum(b) == delta and
+    # b >= b_min stay exact.  (For uniform-rho sets this is a no-op.)
+    s = jnp.sum(b)
+    residual = delta - s
+    headroom = jnp.where(mask, jnp.maximum(b_max - b, 0.0), 0.0)
+    slack = jnp.where(mask, jnp.maximum(b - b_min, 0.0), 0.0)
+    pos_w = headroom / jnp.maximum(jnp.sum(headroom), 1e-30)
+    neg_w = slack / jnp.maximum(jnp.sum(slack), 1e-30)
+    b = jnp.where(
+        residual >= 0, b + residual * pos_w, b + residual * neg_w
+    )
+    b = jnp.where(mask, jnp.clip(b, b_min, b_max), 0.0)
+
+    cost = jnp.sum(jnp.where(mask, rho * f_shannon(jnp.maximum(b, b_min), beta), 0.0))
+    b = jnp.where(has_any, b, jnp.zeros_like(b))
+    cost = jnp.where(has_any, cost, 0.0)
+    return b, cost
+
+
+def p4_objective(
+    rho: Array, b: Array, mask: Array, v_eta: Array, radio: RadioParams
+) -> Array:
+    """W*(S) contribution of S - S0:  sum_k (V*eta - rho_k N0 tau B f(b_k))."""
+    per_client = v_eta - rho * radio.energy_scale * f_shannon(
+        jnp.maximum(b, radio.b_min), radio.beta
+    )
+    return jnp.sum(jnp.where(jnp.asarray(mask, bool), per_client, 0.0))

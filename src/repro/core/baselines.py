@@ -1,0 +1,150 @@
+"""Benchmark policies from the paper (§VI-A) plus an offline oracle.
+
+* ``select_all``  — all K clients every round; bandwidth minimizes total
+  energy subject to the deadline (ignores budgets).
+* ``smo``         — Static Myopic Optimal: hard per-round budget H_k/T;
+  equivalent to the 1-round-lookahead algorithm (paper Eq. 19-20).
+* ``amo``         — Adaptive Myopic Optimal: recycles unused budget,
+  per-round budget (H_k - spent) / (T - t).
+* ``lookahead_dual`` — offline R=T oracle approximated by Lagrangian dual
+  decomposition over the *known* channel sequence: dualizing the long-term
+  energy constraints turns each round into a P3 with static multipliers
+  mu_k in place of the queues; projected subgradient ascent on mu.  This
+  realizes the paper's T-round-lookahead benchmark (§IV-D) to dual
+  precision, which upper-bounds within the duality gap of the per-round
+  mixed-integer problems.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import RadioParams, energy, min_bandwidth_for_energy
+from repro.core.ocean import OceanConfig
+from repro.core.selection import ocean_p
+
+Array = jax.Array
+
+
+class PolicyTrace(NamedTuple):
+    a: Array   # (T, K) selections
+    b: Array   # (T, K) bandwidth ratios
+    e: Array   # (T, K) per-round energy
+    num_selected: Array  # (T,)
+
+
+def _trace(a, b, e):
+    return PolicyTrace(a=a, b=b, e=e, num_selected=jnp.sum(a, axis=-1))
+
+
+# --------------------------------------------------------------------------
+# Select-All
+# --------------------------------------------------------------------------
+def select_all(cfg: OceanConfig, h2_seq: Array) -> PolicyTrace:
+    """Select everyone; minimize total energy via the P4 waterfiller."""
+    from repro.core.bandwidth import solve_p4
+
+    K = cfg.num_clients
+
+    def per_round(h2):
+        rho = 1.0 / jnp.maximum(h2, 1e-30)  # energy weights, all positive
+        b, _ = solve_p4(rho, jnp.ones((K,), bool), jnp.asarray(1.0), cfg.radio)
+        a = jnp.ones((K,), bool)
+        return a, b, energy(b, h2, cfg.radio, a)
+
+    a, b, e = jax.vmap(per_round)(h2_seq)
+    return _trace(a, b, e)
+
+
+# --------------------------------------------------------------------------
+# SMO / AMO
+# --------------------------------------------------------------------------
+def _myopic_round(h2: Array, budget: Array, radio: RadioParams):
+    """Greedy of §VI-A: cheapest-bandwidth clients first until B is exhausted."""
+    b_dag = min_bandwidth_for_energy(budget, h2, radio)   # (K,), inf if infeasible
+    order = jnp.argsort(b_dag)
+    b_sorted = b_dag[order]
+    csum = jnp.cumsum(jnp.where(jnp.isfinite(b_sorted), b_sorted, 1e9))
+    take_sorted = (csum <= 1.0) & jnp.isfinite(b_sorted)
+    inv = jnp.argsort(order)
+    a = take_sorted[inv]
+    b = jnp.where(a, b_dag, 0.0)
+    return a, b
+
+
+def smo(cfg: OceanConfig, h2_seq: Array) -> PolicyTrace:
+    budgets = cfg.budgets() / cfg.num_rounds
+
+    def per_round(h2):
+        a, b = _myopic_round(h2, budgets, cfg.radio)
+        return a, b, energy(b, h2, cfg.radio, a)
+
+    a, b, e = jax.vmap(per_round)(h2_seq)
+    return _trace(a, b, e)
+
+
+def amo(cfg: OceanConfig, h2_seq: Array) -> PolicyTrace:
+    budgets = cfg.budgets()
+    T = cfg.num_rounds
+
+    def step(spent, inputs):
+        h2, t = inputs
+        remaining = jnp.maximum(budgets - spent, 0.0)
+        per_round_budget = remaining / jnp.maximum(T - t, 1).astype(jnp.float32)
+        a, b = _myopic_round(h2, per_round_budget, cfg.radio)
+        e = energy(b, h2, cfg.radio, a)
+        return spent + e, (a, b, e)
+
+    _, (a, b, e) = jax.lax.scan(
+        step, jnp.zeros_like(budgets), (h2_seq, jnp.arange(T))
+    )
+    return _trace(a, b, e)
+
+
+# --------------------------------------------------------------------------
+# Offline T-round lookahead oracle via Lagrangian dual decomposition
+# --------------------------------------------------------------------------
+def lookahead_dual(
+    cfg: OceanConfig,
+    h2_seq: Array,
+    eta_seq: Array,
+    num_iters: int = 400,
+    lr: float = 50.0,
+) -> Tuple[PolicyTrace, Array]:
+    """Approximate the R=T lookahead oracle with full channel knowledge.
+
+    Returns the primal trace of the final multipliers and the dual value
+    (an upper bound on the oracle utility, used in Theorem-2 checks).
+    """
+    T, K = h2_seq.shape
+    eta_seq = jnp.asarray(eta_seq, jnp.float32)
+    budgets = cfg.budgets()
+
+    def rounds_for(mu):
+        def per_round(h2, eta_t):
+            sol = ocean_p(mu, h2, jnp.asarray(1.0), eta_t, cfg.radio)
+            e = energy(sol.b, h2, cfg.radio, sol.a)
+            return sol.a, sol.b, e
+
+        return jax.vmap(per_round)(h2_seq, eta_seq)
+
+    def dual_step(mu, _):
+        a, b, e = rounds_for(mu)
+        viol = jnp.sum(e, axis=0) - budgets          # (K,) subgradient
+        mu_next = jnp.maximum(mu + lr * viol, 0.0)
+        util = jnp.sum(eta_seq * jnp.sum(a, axis=-1))
+        dual_val = util - jnp.sum(mu * viol)
+        return mu_next, dual_val
+
+    mu, dual_vals = jax.lax.scan(
+        dual_step, jnp.zeros((K,), jnp.float32), None, length=num_iters
+    )
+    a, b, e = rounds_for(mu)
+    return _trace(a, b, e), dual_vals[-1]
+
+
+def utility(trace: PolicyTrace, eta_seq: Array) -> Array:
+    """sum_t eta^t * |S^t| — the paper's long-term objective (Eq. 4)."""
+    return jnp.sum(jnp.asarray(eta_seq) * trace.num_selected.astype(jnp.float32))

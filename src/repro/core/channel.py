@@ -1,0 +1,75 @@
+"""Wireless channel simulator for the WFLN (paper §VI).
+
+The paper models each client's channel as independent free-space fading
+with a given average path loss (36 dB in the stationary experiments;
+linearly drifting 32->45 dB / 45->32 dB in scenarios 1 / 2).  We model the
+channel *power* gain as
+
+    h^2 = g * X,    g = 10^{-PL_dB / 10},   X ~ Exp(1)
+
+i.e. Rayleigh envelope => exponential power fading around the path-loss
+mean, redrawn i.i.d. every round (block fading).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pathloss_to_gain(pl_db: Array) -> Array:
+    return jnp.power(10.0, -jnp.asarray(pl_db, jnp.float32) / 10.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """Block-fading channel with a per-round path-loss schedule."""
+
+    num_clients: int
+    pathloss_db: Callable[[Array], Array]  # round index (int array) -> dB
+    fading: bool = True
+
+    def sample(self, key: Array, num_rounds: int) -> Array:
+        """Draw the (T, K) matrix of channel power gains h^2."""
+        t = jnp.arange(num_rounds)
+        g = pathloss_to_gain(self.pathloss_db(t))[:, None]  # (T, 1)
+        if not self.fading:
+            return jnp.broadcast_to(g, (num_rounds, self.num_clients))
+        u = jax.random.uniform(
+            key, (num_rounds, self.num_clients), minval=1e-6, maxval=1.0
+        )
+        x = -jnp.log(u)  # Exp(1)
+        return g * x
+
+
+def constant_pathloss(pl_db: float) -> Callable[[Array], Array]:
+    return lambda t: jnp.full(jnp.shape(t), pl_db, jnp.float32)
+
+
+def linear_pathloss(start_db: float, end_db: float, num_rounds: int):
+    """Linear drift over the run — scenarios 1 (32->45) and 2 (45->32)."""
+
+    def sched(t):
+        frac = jnp.asarray(t, jnp.float32) / max(num_rounds - 1, 1)
+        return start_db + (end_db - start_db) * frac
+
+    return sched
+
+
+def stationary_channel(num_clients: int, pl_db: float = 36.0) -> ChannelModel:
+    """Paper §VI default: 36 dB average path loss, i.i.d. fading."""
+    return ChannelModel(num_clients, constant_pathloss(pl_db))
+
+
+def scenario1_channel(num_clients: int, num_rounds: int) -> ChannelModel:
+    """Clients move away from the server: 32 dB -> 45 dB."""
+    return ChannelModel(num_clients, linear_pathloss(32.0, 45.0, num_rounds))
+
+
+def scenario2_channel(num_clients: int, num_rounds: int) -> ChannelModel:
+    """Clients move toward the server: 45 dB -> 32 dB."""
+    return ChannelModel(num_clients, linear_pathloss(45.0, 32.0, num_rounds))

@@ -1,0 +1,165 @@
+"""Radio physics of the WFLN uplink (paper §IV-A).
+
+Implements the Shannon-rate inversion behind Eq. (2) of the paper:
+
+    E(a, b | h) = tau * N0 * B * b / h^2 * (2^{L / (tau * B * b)} - 1) * a
+
+where ``b`` is the bandwidth *ratio* allocated to the client, ``h^2`` the
+channel power gain, ``L`` the model size in bits that must be uploaded
+within the deadline ``tau`` over total bandwidth ``B``.
+
+The workhorse is ``f(b) = b * (2^{beta / b} - 1)`` with ``beta = L/(tau*B)``
+(Lemma 1: decreasing and convex on b > 0).  All functions are jittable and
+dtype-polymorphic; ``exp2`` exponents are clipped so that physically
+impossible allocations (e.g. uploading a 400B-parameter model through a
+10 MHz link in 300 ms) saturate to a huge-but-finite energy instead of
+producing inf/nan inside the optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Scalar = Union[float, Array]
+
+# Exponent clip for 2^x — 2^80 ~ 1.2e24 keeps comparisons meaningful in
+# float32 while never overflowing.
+_EXP2_CLIP = 80.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RadioParams:
+    """Static radio parameters of the WFLN (paper §VI defaults).
+
+    Attributes:
+      bandwidth_hz:  total OFDMA uplink bandwidth B (Hz).
+      noise_w:       complex white Gaussian noise variance N0 (W).
+      deadline_s:    per-round upload deadline tau-bar (s).
+      model_bits:    L, size of the model update uploaded per round (bits).
+      b_min:         minimum bandwidth *ratio* assignable to a selected
+                     client (paper: b_min_hz / B; must satisfy b_min <= 1/K).
+    """
+
+    bandwidth_hz: float = 10e6
+    noise_w: float = 1e-12
+    deadline_s: float = 0.3
+    model_bits: float = 3.4e5
+    b_min: float = 0.02
+
+    @property
+    def beta(self) -> float:
+        """L / (tau * B): exponent scale of the Shannon inversion."""
+        return float(self.model_bits) / (self.deadline_s * self.bandwidth_hz)
+
+    @property
+    def energy_scale(self) -> float:
+        """tau * N0 * B: prefactor of E before the 1/h^2 term."""
+        return self.deadline_s * self.noise_w * self.bandwidth_hz
+
+    def with_model_bits(self, model_bits: float) -> "RadioParams":
+        return dataclasses.replace(self, model_bits=float(model_bits))
+
+    def validate(self, num_clients: int) -> None:
+        if self.b_min * num_clients > 1.0 + 1e-9:
+            raise ValueError(
+                f"b_min={self.b_min} infeasible for K={num_clients} clients "
+                f"(need b_min <= 1/K)"
+            )
+
+
+def exp2m1(x: Array) -> Array:
+    """2^x - 1 with overflow clipping (x >= 0 in our use)."""
+    return jnp.exp2(jnp.clip(x, -_EXP2_CLIP, _EXP2_CLIP)) - 1.0
+
+
+def f_shannon(b: Array, beta: Scalar) -> Array:
+    """f(b) = b * (2^{beta/b} - 1); Lemma 1: decreasing & convex on b>0."""
+    b = jnp.asarray(b)
+    safe_b = jnp.maximum(b, 1e-30)
+    return safe_b * exp2m1(beta / safe_b)
+
+
+def f_shannon_prime(b: Array, beta: Scalar) -> Array:
+    """f'(b) = 2^{beta/b} (1 - ln2 * beta/b) - 1  (Eq. 21; negative, increasing)."""
+    b = jnp.asarray(b)
+    safe_b = jnp.maximum(b, 1e-30)
+    y = beta / safe_b
+    p = jnp.exp2(jnp.clip(y, -_EXP2_CLIP, _EXP2_CLIP))
+    return p * (1.0 - jnp.log(2.0) * y) - 1.0
+
+
+def f_shannon_second(b: Array, beta: Scalar) -> Array:
+    """f''(b) = (ln2)^2 2^{beta/b} beta^2 / b^3  (Eq. 22; positive on b>0)."""
+    b = jnp.asarray(b)
+    safe_b = jnp.maximum(b, 1e-30)
+    y = beta / safe_b
+    p = jnp.exp2(jnp.clip(y, -_EXP2_CLIP, _EXP2_CLIP))
+    return (jnp.log(2.0) ** 2) * p * beta**2 / safe_b**3
+
+
+def transmit_power_w_per_hz(b: Array, h2: Array, radio: RadioParams) -> Array:
+    """p = N0 (2^{L/(tau B b)} - 1) / h^2 — inverted from Shannon (Eq. 1)."""
+    b = jnp.asarray(b)
+    return radio.noise_w * exp2m1(radio.beta / jnp.maximum(b, 1e-30)) / h2
+
+
+def energy(
+    b: Array,
+    h2: Array,
+    radio: RadioParams,
+    a: Union[Array, None] = None,
+) -> Array:
+    """Uplink energy E(a, b | h) of Eq. (2).  ``h2`` is the channel power gain.
+
+    Returns 0 where ``a == 0`` or ``b == 0``.
+    """
+    b = jnp.asarray(b)
+    e = radio.energy_scale * f_shannon(b, radio.beta) / h2
+    e = jnp.where(b > 0, e, 0.0)
+    if a is not None:
+        e = e * jnp.asarray(a)
+    return e
+
+
+def min_bandwidth_for_energy(
+    e_budget: Array,
+    h2: Array,
+    radio: RadioParams,
+    iters: int = 60,
+) -> Array:
+    """Smallest bandwidth ratio b with E(b | h) <= e_budget (vector, bisection).
+
+    E is decreasing in b, so this is the cheapest allocation meeting the
+    budget.  Returns b in [b_min, 1]; where even b = 1 exceeds the budget
+    the client is infeasible and we return +inf (callers mask on it).
+    Used by the SMO/AMO baselines (paper §VI-A).
+    """
+    e_budget = jnp.asarray(e_budget)
+    h2 = jnp.asarray(h2)
+
+    def e_of(b):
+        return energy(b, h2, radio)
+
+    lo = jnp.full(jnp.broadcast_shapes(e_budget.shape, h2.shape), radio.b_min)
+    hi = jnp.ones_like(lo)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        too_much = e_of(mid) > e_budget  # need more bandwidth
+        lo = jnp.where(too_much, mid, lo)
+        hi = jnp.where(too_much, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    b = hi  # upper end guarantees E(b) <= budget (within tolerance)
+    feasible = e_of(jnp.ones_like(lo)) <= e_budget
+    b = jnp.where(feasible, jnp.maximum(b, radio.b_min), jnp.inf)
+    # Clients whose minimum allocation already satisfies the budget:
+    min_ok = e_of(jnp.full_like(lo, radio.b_min)) <= e_budget
+    b = jnp.where(min_ok, radio.b_min, b)
+    return b

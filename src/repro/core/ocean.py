@@ -1,0 +1,147 @@
+"""OCEAN — Online Client sElection and bAndwidth allocatioN (paper Alg. 1).
+
+Maintains a virtual energy-deficit queue per client,
+
+    q_k(t+1) = [ E(a_k^t, b_k^t | h_k^t) - H_k / T + q_k(t) ]^+ ,
+
+resets the queues at every frame boundary t = m*R (m = 1..M-1), and in
+every round solves the drift-plus-penalty problem P3 via OCEAN-P with the
+frame's control parameter V_m and temporal weight eta^t.
+
+Everything here is jittable; ``simulate`` optionally runs the whole
+T-round trajectory as one ``lax.scan`` given a precomputed channel matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import RadioParams, energy
+from repro.core.selection import OceanPSolution, ocean_p
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OceanConfig:
+    """Static configuration of one OCEAN run.
+
+    Attributes:
+      num_clients: K.
+      num_rounds:  T.
+      frame_len:   R (queues reset every R rounds; R = T => single frame,
+                   the setting used in the paper's experiments §VI-A).
+      radio:       physics (bandwidth, noise, deadline, model bits, b_min).
+      energy_budget_j: per-client long-term budget H_k (scalar or (K,)).
+    """
+
+    num_clients: int
+    num_rounds: int
+    radio: RadioParams
+    energy_budget_j: float = 0.15
+    frame_len: Optional[int] = None  # default: R = T
+
+    def __post_init__(self):
+        self.radio.validate(self.num_clients)
+
+    @property
+    def R(self) -> int:
+        return self.frame_len or self.num_rounds
+
+    @property
+    def num_frames(self) -> int:
+        return -(-self.num_rounds // self.R)
+
+    def budgets(self) -> Array:
+        h = jnp.asarray(self.energy_budget_j, jnp.float32)
+        return jnp.broadcast_to(h, (self.num_clients,))
+
+
+class OceanState(NamedTuple):
+    q: Array            # (K,) energy-deficit queues
+    t: Array            # scalar int32 round index
+    energy_spent: Array  # (K,) cumulative true energy (diagnostics)
+
+
+class RoundDecision(NamedTuple):
+    a: Array            # (K,) bool selection
+    b: Array            # (K,) bandwidth ratios
+    e: Array            # (K,) energy consumed this round
+    q: Array            # (K,) queues *before* update (as used by P3)
+    rho: Array          # (K,) priorities
+    objective: Array    # P3 optimum
+    num_selected: Array
+
+
+def init_state(cfg: OceanConfig) -> OceanState:
+    k = cfg.num_clients
+    return OceanState(
+        q=jnp.zeros((k,), jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+        energy_spent=jnp.zeros((k,), jnp.float32),
+    )
+
+
+def ocean_round(
+    state: OceanState,
+    h2: Array,
+    v: Array,
+    eta: Array,
+    cfg: OceanConfig,
+) -> Tuple[OceanState, RoundDecision]:
+    """One OCEAN round: frame-reset -> P3 solve -> act -> queue update."""
+    R = cfg.R
+    # Frame boundary reset (Alg. 1 line 3-5): at t = m*R, m >= 1.
+    at_boundary = (state.t > 0) & (jnp.mod(state.t, R) == 0)
+    q = jnp.where(at_boundary, jnp.zeros_like(state.q), state.q)
+
+    sol: OceanPSolution = ocean_p(q, h2, v, eta, cfg.radio)
+    e = energy(sol.b, h2, cfg.radio, sol.a)
+
+    budgets = cfg.budgets()
+    q_next = jnp.maximum(q + e - budgets / cfg.num_rounds, 0.0)
+
+    new_state = OceanState(
+        q=q_next,
+        t=state.t + 1,
+        energy_spent=state.energy_spent + e,
+    )
+    dec = RoundDecision(
+        a=sol.a,
+        b=sol.b,
+        e=e,
+        q=q,
+        rho=sol.rho,
+        objective=sol.objective,
+        num_selected=sol.num_selected,
+    )
+    return new_state, dec
+
+
+def v_schedule(cfg: OceanConfig, v: float | Array) -> Array:
+    """Broadcast a scalar V (or per-frame (M,) sequence) to per-round (T,)."""
+    v = jnp.asarray(v, jnp.float32)
+    if v.ndim == 0:
+        return jnp.full((cfg.num_rounds,), v)
+    frame_idx = jnp.arange(cfg.num_rounds) // cfg.R
+    return v[jnp.clip(frame_idx, 0, v.shape[0] - 1)]
+
+
+def simulate(
+    cfg: OceanConfig,
+    h2_seq: Array,       # (T, K) channel power gains
+    eta_seq: Array,      # (T,)   temporal weights
+    v: float | Array,    # scalar or per-frame (M,)
+) -> Tuple[OceanState, RoundDecision]:
+    """Run T rounds as one lax.scan; returns final state + stacked decisions."""
+    v_seq = v_schedule(cfg, v)
+    eta_seq = jnp.asarray(eta_seq, jnp.float32)
+
+    def step(state, inputs):
+        h2, v_t, eta_t = inputs
+        return ocean_round(state, h2, v_t, eta_t, cfg)
+
+    return jax.lax.scan(step, init_state(cfg), (h2_seq, v_seq, eta_seq))

@@ -1,0 +1,72 @@
+"""Temporal weight schedules eta^t and client-count patterns (paper §III/§VI).
+
+Two families live here:
+
+* ``eta_*`` — the per-round significance weights of the learning metric
+  U^t(a) = eta^t * sum_k a_k (paper Eq. 3).  OCEAN-a / OCEAN-d / OCEAN-u
+  use ascending / descending / uniform eta sequences.
+* ``count_*`` — explicit numbers-of-selected-clients schedules used in the
+  §III motivating experiments (Uniform 5 / Ascend 1->10 / Descend 10->1
+  over 300 rounds with equal average).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# eta^t schedules (normalized to mean 1 so V is comparable across variants)
+# --------------------------------------------------------------------------
+def eta_uniform(num_rounds: int) -> Array:
+    return jnp.ones((num_rounds,), jnp.float32)
+
+
+def eta_ascend(num_rounds: int, lo: float = 0.2, hi: float = 1.8) -> Array:
+    e = jnp.linspace(lo, hi, num_rounds, dtype=jnp.float32)
+    return e / e.mean()
+
+
+def eta_descend(num_rounds: int, lo: float = 0.2, hi: float = 1.8) -> Array:
+    return eta_ascend(num_rounds, lo, hi)[::-1]
+
+
+ETA_SCHEDULES = {
+    "ascend": eta_ascend,
+    "descend": eta_descend,
+    "uniform": eta_uniform,
+}
+
+
+def eta_schedule(name: str, num_rounds: int) -> Array:
+    try:
+        return ETA_SCHEDULES[name](num_rounds)
+    except KeyError:
+        raise ValueError(
+            f"unknown eta schedule {name!r}; choose from {sorted(ETA_SCHEDULES)}"
+        ) from None
+
+
+# --------------------------------------------------------------------------
+# explicit client-count patterns for the §III temporal-pattern experiments
+# --------------------------------------------------------------------------
+def count_uniform(num_rounds: int, num_clients: int, avg: int) -> Array:
+    return jnp.full((num_rounds,), avg, jnp.int32)
+
+
+def count_ascend(num_rounds: int, num_clients: int, avg: int | None = None) -> Array:
+    """1 -> K linearly; average (K+1)/2 (= 5.5 for K=10, paper rounds to 5)."""
+    c = jnp.linspace(1.0, num_clients, num_rounds)
+    return jnp.round(c).astype(jnp.int32)
+
+
+def count_descend(num_rounds: int, num_clients: int, avg: int | None = None) -> Array:
+    return count_ascend(num_rounds, num_clients)[::-1]
+
+
+COUNT_PATTERNS = {
+    "ascend": count_ascend,
+    "descend": count_descend,
+    "uniform": lambda t, k, avg=5: count_uniform(t, k, avg),
+}

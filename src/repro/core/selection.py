@@ -1,0 +1,128 @@
+"""OCEAN-P — optimal solver of the per-round problem P3 (paper §V-B, Alg. 2).
+
+P3:  max_{a, b}  V * eta * sum_k a_k  -  sum_k q_k E(a_k, b_k | h_k)
+     s.t.        sum_k b_k = 1,  b_k >= b_min for selected k,  a_k in {0,1}
+
+Theorem 1 proves the optimal selection is a prefix of the clients sorted by
+priority rho_k = q_k / h_k^2 (ascending), so only K candidate sets matter.
+The paper iterates them serially with an early-termination test; we instead
+evaluate *all* prefixes in parallel with ``vmap`` over the masked P4 solver
+and take the argmax — same optimum, one XLA program (DESIGN.md §3).
+
+Clients with rho_k == 0 (zero energy-deficit queue) form S0: they are
+always selected and pinned at b_min; the remaining budget
+delta = 1 - |S0| * b_min is waterfilled over the positive-rho prefix by P4.
+Leftover bandwidth when *only* S0 is selected is spread evenly over S0
+(costless — their weighted energy is zero).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandwidth import solve_p4
+from repro.core.energy import RadioParams, f_shannon
+
+Array = jax.Array
+
+_RHO_ZERO_TOL = 1e-30
+
+
+class OceanPSolution(NamedTuple):
+    a: Array          # (K,) bool  — selection decisions
+    b: Array          # (K,) float — bandwidth ratios (sum == 1 over selected)
+    objective: Array  # scalar     — optimal P3 value W*(S*)
+    rho: Array        # (K,) float — priorities (diagnostics / Fig 15)
+    num_selected: Array  # scalar int
+
+
+def priorities(q: Array, h2: Array) -> Array:
+    """rho_k = q_k / h_k^2 — lower is higher selection priority."""
+    return jnp.asarray(q) / jnp.maximum(jnp.asarray(h2), 1e-30)
+
+
+def ocean_p(
+    q: Array,
+    h2: Array,
+    v: Array,
+    eta: Array,
+    radio: RadioParams,
+    outer_iters: int = 42,
+    inner_iters: int = 42,
+) -> OceanPSolution:
+    """Solve P3 exactly.  All args jittable; shapes: q, h2 -> (K,)."""
+    q = jnp.asarray(q, jnp.float32) if jnp.asarray(q).dtype == jnp.int32 else jnp.asarray(q)
+    h2 = jnp.asarray(h2)
+    dtype = jnp.result_type(q.dtype, h2.dtype, jnp.float32)
+    q = q.astype(dtype)
+    h2 = h2.astype(dtype)
+    K = q.shape[0]
+    v_eta = (jnp.asarray(v, dtype) * jnp.asarray(eta, dtype)).astype(dtype)
+
+    rho = priorities(q, h2)
+    order = jnp.argsort(rho)          # ascending priority value
+    rho_sorted = rho[order]
+
+    in_s0 = rho_sorted <= _RHO_ZERO_TOL      # S0 members (always selected)
+    n0 = jnp.sum(in_s0)
+    delta = 1.0 - n0.astype(dtype) * radio.b_min
+
+    # Candidate m = number of positive-rho clients admitted, m in [0, K].
+    # Sorted rank r belongs to candidate m's P4 iff n0 <= r < n0 + m.
+    ranks = jnp.arange(K)
+
+    def eval_candidate(m):
+        mask = (ranks >= n0) & (ranks < n0 + m)
+        feasible = m <= (K - n0)
+        b_sorted, cost = solve_p4(
+            rho_sorted, mask, delta, radio, outer_iters, inner_iters
+        )
+        # W*(S) = V*eta*(n0 + m) - energy_scale * cost      (paper Eq. 13/14)
+        w = v_eta * (n0 + m).astype(dtype) - radio.energy_scale * cost
+        w = jnp.where(feasible, w, -jnp.inf)
+        return w, b_sorted, mask
+
+    ms = jnp.arange(K + 1)
+    w_all, b_all, mask_all = jax.vmap(eval_candidate)(ms)
+
+    best = jnp.argmax(w_all)
+    w_star = w_all[best]
+    b_pos_sorted = b_all[best]          # positive-rho members' allocation
+    sel_pos_sorted = mask_all[best]
+
+    # S0 allocation: b_min each, plus any leftover when nobody else is
+    # selected (so sum b == 1 always holds when anyone is selected).
+    m_star = ms[best]
+    leftover = jnp.where(m_star == 0, delta, 0.0)
+    b0_each = radio.b_min + leftover / jnp.maximum(n0.astype(dtype), 1.0)
+    b_sorted_full = jnp.where(in_s0, b0_each, b_pos_sorted)
+    a_sorted = in_s0 | sel_pos_sorted
+
+    # Un-sort back to client order.
+    inv = jnp.argsort(order)
+    a = a_sorted[inv]
+    b = jnp.where(a_sorted, b_sorted_full, 0.0)[inv]
+
+    return OceanPSolution(
+        a=a,
+        b=b,
+        objective=w_star,
+        rho=rho,
+        num_selected=jnp.sum(a),
+    )
+
+
+def p3_value(
+    a: Array, b: Array, q: Array, h2: Array, v: Array, eta: Array, radio: RadioParams
+) -> Array:
+    """Evaluate the P3 objective for arbitrary (a, b) — used by tests/oracles."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    rho = priorities(q, h2)
+    util = jnp.asarray(v) * jnp.asarray(eta) * jnp.sum(a)
+    en = radio.energy_scale * jnp.sum(
+        jnp.where(a > 0, rho * f_shannon(jnp.maximum(b, radio.b_min), radio.beta), 0.0)
+    )
+    return util - en

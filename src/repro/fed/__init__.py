@@ -1,0 +1,21 @@
+"""Federated-learning substrate: datasets, FedAvg client/server, WFLN loop."""
+from repro.fed.data import (
+    FederatedDataset,
+    synthetic_image_classification,
+    synthetic_char_text,
+)
+from repro.fed.client import local_update
+from repro.fed.server import aggregate, masked_fedavg
+from repro.fed.loop import FedTask, WflnExperiment, make_classification_task
+
+__all__ = [
+    "FederatedDataset",
+    "synthetic_image_classification",
+    "synthetic_char_text",
+    "local_update",
+    "aggregate",
+    "masked_fedavg",
+    "FedTask",
+    "WflnExperiment",
+    "make_classification_task",
+]

@@ -1,0 +1,58 @@
+"""Client-side FedAvg local update.
+
+A selected client downloads the global params, runs E local epochs of
+minibatch SGD on its own data, and returns the model *delta* (what FedAvg
+uploads; its size in bits is the ``L`` in the paper's energy model).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+LossFn = Callable[[Params, Any, Any], jax.Array]  # (params, x, y) -> scalar
+
+
+def local_update(
+    params: Params,
+    x: jax.Array,
+    y: jax.Array,
+    loss_fn: LossFn,
+    lr: float,
+    local_steps: int = 1,
+    batch_size: int | None = None,
+    key: jax.Array | None = None,
+) -> Tuple[Params, jax.Array]:
+    """Run ``local_steps`` SGD steps; return (delta, final_loss).
+
+    If ``batch_size`` is given, each step uses a fresh random minibatch
+    (requires ``key``); otherwise full-batch gradient descent on the
+    client's shard.
+    """
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(carry, k):
+        p = carry
+        if batch_size is not None:
+            idx = jax.random.randint(k, (batch_size,), 0, x.shape[0])
+            bx, by = x[idx], y[idx]
+        else:
+            bx, by = x, y
+        loss, g = grad_fn(p, bx, by)
+        p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+        return p, loss
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, local_steps)
+    new_params, losses = jax.lax.scan(step, params, keys)
+    delta = jax.tree.map(lambda n, o: n - o, new_params, params)
+    return delta, losses[-1]
+
+
+def model_bits(params: Params, bits_per_param: int = 32) -> float:
+    """L — size of one model update in bits (feeds RadioParams.model_bits)."""
+    n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+    return float(n * bits_per_param)

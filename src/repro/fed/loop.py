@@ -1,0 +1,228 @@
+"""The WFLN simulation loop: channel -> policy -> federated round (paper §VI).
+
+Selection/bandwidth decisions in the paper do not depend on model state
+(the learning metric U^t is a weighted client count), so an experiment
+factors cleanly into two stages:
+
+  1. a *policy trace* — (T, K) selection + bandwidth matrices from OCEAN or
+     a benchmark policy, given the sampled channel sequence;
+  2. a *learning trajectory* — FedAvg over T rounds consuming the trace's
+     selection masks, all inside one ``lax.scan``.
+
+This mirrors the paper's evaluation (Figs 5-14) and lets the same policy
+trace drive models of any size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    OceanConfig,
+    PolicyTrace,
+    amo,
+    eta_schedule,
+    select_all,
+    simulate,
+    smo,
+)
+from repro.fed.client import local_update
+from repro.fed.data import FederatedDataset, client_batch
+from repro.fed.server import masked_fedavg
+
+Array = jax.Array
+Params = Any
+
+
+class FedTask(NamedTuple):
+    """Model-agnostic task description consumed by the loop."""
+
+    init: Callable[[Array], Params]
+    loss: Callable[[Params, Array, Array], Array]
+    metrics: Callable[[Params, Array, Array], Dict[str, Array]]
+
+
+def make_classification_task(dim: int, hidden: int, num_classes: int) -> FedTask:
+    """The paper's own model: 3-layer DNN (input -> 10 neurons -> softmax)."""
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        scale1 = 1.0 / jnp.sqrt(dim)
+        scale2 = 1.0 / jnp.sqrt(hidden)
+        return {
+            "w1": scale1 * jax.random.normal(k1, (dim, hidden)),
+            "b1": jnp.zeros((hidden,)),
+            "w2": scale2 * jax.random.normal(k2, (hidden, num_classes)),
+            "b2": jnp.zeros((num_classes,)),
+        }
+
+    def logits_fn(p, x):
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    def loss(p, x, y):
+        logits = logits_fn(p, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    def metrics(p, x, y):
+        logits = logits_fn(p, x)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+        acc = jnp.mean(jnp.argmax(logits, -1) == y)
+        return {"loss": nll, "accuracy": acc}
+
+    return FedTask(init=init, loss=loss, metrics=metrics)
+
+
+def make_char_lm_task(vocab: int, dim: int = 32) -> FedTask:
+    """Tiny embedding+GRU-free char LM (mean-pooled bigram MLP) for the
+    Shakespeare-style experiment — cheap enough for 300 rounds x 60 runs."""
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "emb": 0.1 * jax.random.normal(k1, (vocab, dim)),
+            "w": (1.0 / jnp.sqrt(2 * dim)) * jax.random.normal(k2, (2 * dim, dim)),
+            "b": jnp.zeros((dim,)),
+            "out": (1.0 / jnp.sqrt(dim)) * jax.random.normal(k3, (dim, vocab)),
+        }
+
+    def logits_fn(p, x):
+        # x: (B, S) ints. Predict next char from (prev char, running mean).
+        e = p["emb"][x]                       # (B, S, D)
+        ctx = jnp.cumsum(e, axis=1) / (jnp.arange(x.shape[1]) + 1.0)[None, :, None]
+        h = jax.nn.relu(jnp.concatenate([e, ctx], -1) @ p["w"] + p["b"])
+        return h @ p["out"]                   # (B, S, V)
+
+    def loss(p, x, y):
+        logp = jax.nn.log_softmax(logits_fn(p, x))
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    def metrics(p, x, y):
+        logits = logits_fn(p, x)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+        acc = jnp.mean(jnp.argmax(logits, -1) == y)
+        return {"loss": nll, "accuracy": acc}
+
+    return FedTask(init=init, loss=loss, metrics=metrics)
+
+
+# --------------------------------------------------------------------------
+# policy traces
+# --------------------------------------------------------------------------
+def pattern_trace(
+    key: Array, counts: Array, num_clients: int
+) -> PolicyTrace:
+    """Random selection of counts[t] clients per round (§III experiments).
+
+    Bandwidth is split evenly among the selected (energy physics is not the
+    object of §III).
+    """
+    T = counts.shape[0]
+
+    def per_round(k, c):
+        scores = jax.random.uniform(k, (num_clients,))
+        thresh = -jnp.sort(-scores)[jnp.maximum(c - 1, 0)]
+        a = (scores >= thresh) & (c > 0)
+        b = jnp.where(a, 1.0 / jnp.maximum(jnp.sum(a), 1), 0.0)
+        return a, b
+
+    a, b = jax.vmap(per_round)(jax.random.split(key, T), counts)
+    e = jnp.zeros_like(b)
+    return PolicyTrace(a=a, b=b, e=e, num_selected=jnp.sum(a, -1))
+
+
+def ocean_trace(
+    cfg: OceanConfig, h2_seq: Array, eta: Array, v: float | Array
+) -> PolicyTrace:
+    final, decs = simulate(cfg, h2_seq, eta, v)
+    return PolicyTrace(a=decs.a, b=decs.b, e=decs.e, num_selected=decs.num_selected)
+
+
+POLICIES = {"select_all": select_all, "smo": smo, "amo": amo}
+
+
+def policy_trace(
+    name: str,
+    cfg: OceanConfig,
+    h2_seq: Array,
+    *,
+    eta: Optional[Array] = None,
+    v: float = 1e-5,
+    key: Optional[Array] = None,
+) -> PolicyTrace:
+    """Uniform entry point: 'ocean-a/d/u', 'smo', 'amo', 'select_all'."""
+    if name.startswith("ocean"):
+        sched = {"a": "ascend", "d": "descend", "u": "uniform"}[
+            name.split("-")[1] if "-" in name else "u"
+        ]
+        eta = eta_schedule(sched, cfg.num_rounds) if eta is None else eta
+        return ocean_trace(cfg, h2_seq, eta, v)
+    return POLICIES[name](cfg, h2_seq)
+
+
+# --------------------------------------------------------------------------
+# the learning trajectory
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WflnExperiment:
+    """FedAvg learning loop driven by a policy trace."""
+
+    task: FedTask
+    dataset: FederatedDataset
+    lr: float = 0.1
+    local_steps: int = 5
+    batch_size: int = 20
+    server_lr: float = 1.0
+
+    def run(self, key: Array, trace: PolicyTrace) -> Dict[str, Array]:
+        ds = self.dataset
+        T = trace.a.shape[0]
+        k_init, k_rounds = jax.random.split(key)
+        params0 = self.task.init(k_init)
+
+        def round_step(params, inputs):
+            a_t, k_t = inputs
+            kb, kl = jax.random.split(k_t)
+            bx, by = client_batch(ds, kb, self.batch_size)
+
+            def one_client(ck, cx, cy):
+                return local_update(
+                    params,
+                    cx,
+                    cy,
+                    self.task.loss,
+                    self.lr,
+                    local_steps=self.local_steps,
+                    key=ck,
+                )
+
+            deltas, losses = jax.vmap(one_client)(
+                jax.random.split(kl, ds.num_clients), bx, by
+            )
+            new_params = masked_fedavg(
+                params, deltas, a_t, server_lr=self.server_lr
+            )
+            m = self.task.metrics(new_params, ds.test_x, ds.test_y)
+            sel = jnp.sum(a_t)
+            train_loss = jnp.where(
+                sel > 0,
+                jnp.sum(losses * a_t) / jnp.maximum(sel, 1),
+                jnp.nan,
+            )
+            out = {
+                "train_loss": train_loss,
+                "test_loss": m["loss"],
+                "test_accuracy": m["accuracy"],
+                "num_selected": sel,
+            }
+            return new_params, out
+
+        keys = jax.random.split(k_rounds, T)
+        _, history = jax.lax.scan(round_step, params0, (trace.a, keys))
+        return history

@@ -1,0 +1,79 @@
+"""Server-side masked FedAvg aggregation.
+
+The aggregation
+
+    w_{t+1} = w_t + sum_k a_k n_k delta_k / sum_k a_k n_k
+
+is the uplink of the WFLN: OCEAN's selection vector ``a`` gates exactly
+which clients' deltas enter the sum.  On a device mesh the client axis is
+sharded over ("pod", "data"), so the two sums below lower to all-reduces
+over those axes — the collective *is* the shared wireless link.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def aggregate(
+    deltas: Params,
+    mask: jax.Array,
+    weights: Optional[jax.Array] = None,
+    axis_name: Optional[str] = None,
+) -> Params:
+    """Masked weighted mean of per-client deltas.
+
+    Args:
+      deltas: pytree with a leading client axis on every leaf (K, ...).
+      mask:   (K,) selection a_k in {0, 1}.
+      weights: (K,) aggregation weights n_k (e.g. local sample counts);
+        uniform if None.
+      axis_name: if set, the client axis is additionally distributed over a
+        mapped mesh axis (shard_map/pmap) and partial sums are psum-ed.
+
+    Returns:
+      pytree without the client axis: the aggregated update.  When no
+      client is selected, returns zeros (the round is skipped — the paper's
+      AMO scenario-1 "idle period" behaviour).
+    """
+    mask = jnp.asarray(mask)
+    w = mask.astype(jnp.float32)
+    if weights is not None:
+        w = w * jnp.asarray(weights, jnp.float32)
+
+    total = jnp.sum(w)
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+    denom = jnp.maximum(total, 1e-12)
+
+    def agg(leaf):
+        wshape = (-1,) + (1,) * (leaf.ndim - 1)
+        s = jnp.sum(leaf * w.reshape(wshape), axis=0)
+        if axis_name is not None:
+            s = jax.lax.psum(s, axis_name)
+        return s / denom
+
+    out = jax.tree.map(agg, deltas)
+    any_selected = total > 0
+    return jax.tree.map(
+        lambda u: jnp.where(any_selected, u, jnp.zeros_like(u)), out
+    )
+
+
+def masked_fedavg(
+    global_params: Params,
+    deltas: Params,
+    mask: jax.Array,
+    weights: Optional[jax.Array] = None,
+    server_lr: float = 1.0,
+    axis_name: Optional[str] = None,
+) -> Params:
+    """Apply the aggregated delta to the global model."""
+    update = aggregate(deltas, mask, weights, axis_name)
+    return jax.tree.map(
+        lambda p, u: (p + server_lr * u).astype(p.dtype), global_params, update
+    )

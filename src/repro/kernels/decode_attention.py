@@ -1,0 +1,127 @@
+"""Flash-decode for TPU: one query token against a long KV cache.
+
+Decode at 32k-512k contexts is memory-bound: the whole cache must stream
+HBM -> VMEM once.  The kernel splits the cache into ``block_k`` tiles,
+
+  grid = (batch, num_k_blocks)     (k innermost)
+
+keeps the online-softmax state for ALL heads of a batch element in VMEM
+scratch (heads are tiny at decode: (H, Dh) f32), and masks cache slots
+beyond the current length with the scalar-prefetched ``valid_len``.  GQA
+is handled by computing per-kv-head on a (G, Dh) query tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 1024
+
+
+def _decode_kernel(
+    valid_ref,                     # SMEM (1,) scalar prefetch: valid length
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, block_k: int, num_k_blocks: int, scale: float,
+    logit_cap: Optional[float],
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)               # (H, D)
+    k = k_ref[0].astype(jnp.float32)               # (bk, KV, D)
+    v = v_ref[0].astype(jnp.float32)               # (bk, KV, D)
+    h, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+
+    qr = q.reshape(kvh, g, d)
+    # logits (KV, G, bk)
+    logits = jax.lax.dot_general(
+        qr, k, (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    ) * scale
+    if logit_cap is not None:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+
+    kpos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (kvh, g, block_k), 2
+    )
+    logits = jnp.where(kpos < valid_ref[0], logits, NEG_INF)
+
+    m_prev = m_scr[...]                            # (KV, G)
+    m_new = jnp.maximum(m_prev, logits.max(axis=2))
+    p = jnp.exp(logits - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=2)
+    # acc (KV, G, D) += p (KV, G, bk) @ v (bk, KV, D)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    )
+    acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(h, d).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("logit_cap", "block_k", "interpret")
+)
+def decode_attention(
+    q: jax.Array,          # (B, H, Dh) — the single new token's queries
+    k_cache: jax.Array,    # (B, S, KV, Dh)
+    v_cache: jax.Array,    # (B, S, KV, Dh)
+    valid_len: jax.Array,  # scalar int32 — number of valid cache slots
+    *,
+    logit_cap: Optional[float] = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    block_k = min(block_k, s)
+    if s % block_k:
+        raise ValueError(f"cache len {s} must divide block_k {block_k}")
+    nk = s // block_k
+
+    kernel = functools.partial(
+        _decode_kernel,
+        block_k=block_k,
+        num_k_blocks=nk,
+        scale=d ** -0.5,
+        logit_cap=logit_cap,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nk),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b_, ik, *_: (b_, 0, 0)),
+            pl.BlockSpec((1, block_k, kvh, d), lambda b_, ik, *_: (b_, ik, 0, 0)),
+            pl.BlockSpec((1, block_k, kvh, d), lambda b_, ik, *_: (b_, ik, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, ik, *_: (b_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kvh, h // kvh), jnp.float32),
+            pltpu.VMEM((kvh, h // kvh), jnp.float32),
+            pltpu.VMEM((kvh, h // kvh, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(valid_len, jnp.int32).reshape(1), q, k_cache, v_cache)

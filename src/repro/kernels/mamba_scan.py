@@ -1,0 +1,86 @@
+"""Mamba selective-scan kernel for TPU.
+
+First-order recurrence h_t = dA_t * h_{t-1} + dBu_t over time, with the
+(d_inner_block, d_state) state tile resident in VMEM while time streams
+through in chunks:
+
+  grid = (batch, num_d_blocks, num_chunks)    (chunks innermost)
+
+Inputs are the *discretized* tensors (dA, dBu) of shape (B, T, Di, Ds)
+and the output projection C (B, T, Ds); the kernel emits
+y[b, t, di] = <h_t[di, :], C_t>.  d_inner is blocked so arbitrary model
+widths fit VMEM: state tile = (block_d, Ds) f32 (e.g. 512 x 16 = 32 KiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+DEFAULT_BLOCK_D = 512
+
+
+def _mamba_kernel(da_ref, dbu_ref, c_ref, o_ref, h_scr, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    da = da_ref[0].astype(jnp.float32)    # (C, bd, Ds)
+    dbu = dbu_ref[0].astype(jnp.float32)  # (C, bd, Ds)
+    c = c_ref[0].astype(jnp.float32)      # (C, Ds)
+
+    def step(t, carry):
+        h, y = carry
+        h = da[t] * h + dbu[t]                       # (bd, Ds)
+        y = y.at[t].set(h @ c[t])                    # (bd,)
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros((chunk, da.shape[1]), jnp.float32)
+    h_fin, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_scr[...] = h_fin
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_d", "interpret")
+)
+def mamba_scan(
+    da: jax.Array,    # (B, T, Di, Ds) discrete transition
+    dbu: jax.Array,   # (B, T, Di, Ds) discrete input
+    c: jax.Array,     # (B, T, Ds) output projection
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    b, t, di, ds = da.shape
+    chunk = min(chunk, t)
+    block_d = min(block_d, di)
+    if t % chunk or di % block_d:
+        raise ValueError(f"T={t} % chunk={chunk} or Di={di} % block_d={block_d}")
+    nc, nd = t // chunk, di // block_d
+
+    kernel = functools.partial(_mamba_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d, ds), lambda b_, id_, ic: (b_, ic, id_, 0)),
+            pl.BlockSpec((1, chunk, block_d, ds), lambda b_, id_, ic: (b_, ic, id_, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b_, id_, ic: (b_, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, chunk, block_d), lambda b_, id_, ic: (b_, ic, id_)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, t, di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, ds), jnp.float32)],
+        interpret=interpret,
+    )(da, dbu, c)
+    return out

@@ -1,0 +1,91 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Models route through here when ``repro.models.backend`` is set to
+"pallas" (real TPU) or "pallas_interpret" (CPU validation).  Signatures
+mirror the XLA fallbacks so the backends are drop-in interchangeable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.mamba_scan import mamba_scan as _mamba_scan
+from repro.kernels.rwkv6_scan import wkv_scan as _wkv_scan
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B, S, H, Dh) x (B, S, KV, Dh) -> (B, S, H, Dh)."""
+    s = q.shape[1]
+    blk = block
+    while s % blk:
+        blk //= 2
+    return _flash_attention(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        logit_cap=logit_cap,
+        block_q=blk,
+        block_k=blk,
+        interpret=interpret,
+    )
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    valid_len: jax.Array,
+    *,
+    logit_cap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    s = k_cache.shape[1]
+    blk = 1024
+    while s % blk:
+        blk //= 2
+    return _decode_attention(
+        q,
+        k_cache,
+        v_cache,
+        valid_len,
+        logit_cap=logit_cap,
+        block_k=blk,
+        interpret=interpret,
+    )
+
+
+def wkv_scan(r, k, v, w, u, *, interpret: bool = False):
+    t = r.shape[1]
+    chunk = 64
+    while t % chunk:
+        chunk //= 2
+    return _wkv_scan(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+def mamba_scan(da, dbu, c, *, interpret: bool = False):
+    t, di = da.shape[1], da.shape[2]
+    chunk = 64
+    while t % chunk:
+        chunk //= 2
+    block_d = 512
+    while di % block_d:
+        block_d //= 2
+    return _mamba_scan(
+        da, dbu, c, chunk=chunk, block_d=block_d, interpret=interpret
+    )

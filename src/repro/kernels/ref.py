@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+These are deliberately naive O(S^2)/sequential implementations — clarity
+over speed.  The model code's own XLA paths are *also* validated against
+these in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# The blockwise/naive attention ref lives with the models (it *is* the
+# XLA fallback); re-export it as the kernel oracle.
+from repro.models.attention import mha_reference  # noqa: F401
+
+
+def decode_attention_ref(
+    q: jax.Array,          # (B, H, Dh)
+    k_cache: jax.Array,    # (B, S, KV, Dh)
+    v_cache: jax.Array,    # (B, S, KV, Dh)
+    valid_len: jax.Array,
+    *,
+    logit_cap: Optional[float] = None,
+) -> jax.Array:
+    out = mha_reference(
+        q[:, None],
+        k_cache,
+        v_cache,
+        causal=False,
+        logit_cap=logit_cap,
+        kv_valid_len=valid_len,
+    )
+    return out[:, 0]
+
+
+def wkv_scan_ref(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array
+) -> jax.Array:
+    """(B, T, H, N) sequential WKV; returns f32 (B, T, H, N)."""
+    b, t, h, n = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        return wt[..., None] * s + kv, y
+
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    _, y = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(y, 0, 1)
+
+
+def mamba_scan_ref(da: jax.Array, dbu: jax.Array, c: jax.Array) -> jax.Array:
+    """(B, T, Di, Ds) sequential selective scan; returns f32 (B, T, Di)."""
+    b, t, di, ds = da.shape
+
+    def step(h, xs):
+        da_t, dbu_t, c_t = xs
+        h = da_t * h + dbu_t
+        return h, jnp.einsum("bds,bs->bd", h, c_t)
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    xs = tuple(
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0) for x in (da, dbu, c)
+    )
+    _, y = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(y, 0, 1)

@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, step builders, multi-pod dry-run."""

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, record memory/cost/collective analyses.
+
+MUST be invoked as its own process (``python -m repro.launch.dryrun``) so
+the XLA_FLAGS above take effect before jax initializes — do not import
+this module from a process that already used jax with 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCH_CONFIGS,
+    LONG_CTX,
+    SHAPES,
+    adapt_config,
+    input_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import build_model
+from repro.optim import adamw, sgd
+from repro.sharding.rules import (
+    batch_axes,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=...
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    return default
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum *operand* bytes of every collective in the optimized HLO.
+
+    Optimized HLO prints only the result shape, so operand bytes are
+    recovered from collective semantics: all-gather result = operand *
+    group_size; reduce-scatter result = operand / group_size; the rest are
+    size-preserving.
+    """
+    totals: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped or "replica_groups" not in stripped:
+            continue
+        lhs, rhs = stripped.split("=", 1)
+        m = re.search(r"\b([a-z0-9\-]+)\(", rhs)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op.removesuffix("-start")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        # result shape(s): leading type annotation on the rhs (tuples for
+        # variadic collectives list every element before the op name)
+        shapes = _SHAPE_RE.findall(rhs[: m.start()])
+        result_b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        g = _group_size(stripped)
+        if base == "all-gather":
+            b = result_b // max(g, 1)
+        elif base == "reduce-scatter":
+            b = result_b * g
+        else:
+            b = result_b
+        totals[base] += b
+        counts[base] += 1
+    return {
+        "bytes_per_op": totals,
+        "counts": counts,
+        "total_bytes": sum(totals.values()),
+    }
+
+
+def _batch_shardings(specs: Dict[str, Any], mesh) -> Dict[str, Any]:
+    ba = batch_axes(mesh)
+    bp = ba if len(ba) > 1 else ba[0]
+    out = {}
+    bsize = 1
+    for a in ba:
+        bsize *= mesh.shape[a]
+    for k, v in specs.items():
+        if v.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            b_ok = v.shape[0] % bsize == 0
+            rest = (None,) * (v.ndim - 1)
+            out[k] = NamedSharding(mesh, P(bp if b_ok else None, *rest))
+    return out
+
+
+def _mem_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover - backend dependent
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    return out
+
+
+def _cost_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        k: float(v)
+        for k, v in ca.items()
+        if isinstance(v, (int, float)) and (
+            "flops" in k or "bytes" in k or "utilization" not in k
+        )
+    }
+
+
+def lower_one(
+    arch: str, shape_name: str, multi_pod: bool, include_hlo: bool = False
+) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape, mesh) combination; return analyses."""
+    cfg = ARCH_CONFIGS[arch]
+    shape = SHAPES[shape_name]
+    long_ctx = LONG_CTX[arch]
+    if shape.name == "long_500k" and long_ctx == "skip":
+        return {"status": "skipped", "reason": f"{arch} skips long_500k (DESIGN.md §4)"}
+    if shape.kind == "decode" and cfg.arch_type == "audio" and shape.name == "long_500k":
+        return {"status": "skipped", "reason": "enc-dec caps decoder length"}
+    cfg = adapt_config(cfg, shape, long_ctx)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    t0 = time.time()
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(params_shape, mesh, cfg)
+
+    big = cfg.param_count() > 60e9
+    opt = sgd(1e-3, momentum=0.9) if big else adamw(1e-4)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            o_sh = opt_state_shardings(opt_shape, p_sh, mesh, cfg)
+            specs = input_specs(cfg, shape)
+            b_sh = _batch_shardings(specs, mesh)
+            step = make_train_step(model, cfg, opt)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, specs)
+        elif shape.kind == "prefill":
+            specs = input_specs(cfg, shape)
+            b_sh = _batch_shardings(specs, mesh)
+            step = make_prefill_step(model, cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_shape, specs)
+        else:  # decode
+            b = shape.global_batch
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(b, shape.seq_len)
+            )
+            c_sh = cache_shardings(cache_shape, mesh, cfg, b)
+            specs = input_specs(cfg, shape)
+            tok_sh = _batch_shardings(
+                {"token": specs["token"]}, mesh
+            )["token"]
+            step = make_serve_step(model, cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                params_shape, cache_shape, specs["token"], specs["pos"]
+            )
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    from repro.launch.hlo_cost import analyze_hlo
+
+    analytic = analyze_hlo(hlo)
+    result = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": _mem_analysis(compiled),
+        "cost": _cost_analysis(compiled),
+        "collectives": collective_bytes(hlo),
+        # loop-aware re-derivation (XLA cost_analysis counts while bodies
+        # once; these multiply by trip counts — see launch/hlo_cost.py)
+        "analytic": analytic,
+    }
+    if include_hlo:
+        result["hlo"] = hlo
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCH_CONFIGS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    combos = []
+    archs = sorted(ARCH_CONFIGS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    results = []
+    n_fail = 0
+    for a, s, mp in combos:
+        tag = f"{a} x {s} x {'2x16x16' if mp else '16x16'}"
+        try:
+            r = lower_one(a, s, mp)
+            if r["status"] == "ok":
+                mem = r["memory"].get("temp_size_in_bytes", 0)
+                fl = r["analytic"]["flops"]
+                cb = r["analytic"]["collective_bytes"]
+                print(
+                    f"OK   {tag}: compile={r['compile_s']}s "
+                    f"temp={mem/2**30:.2f}GiB flops={fl:.3e} coll={cb/2**30:.3f}GiB",
+                    flush=True,
+                )
+            else:
+                print(f"SKIP {tag}: {r['reason']}", flush=True)
+        except Exception as e:
+            n_fail += 1
+            r = {
+                "status": "error",
+                "arch": a,
+                "shape": s,
+                "mesh": "2x16x16" if mp else "16x16",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc(),
+            }
+            print(f"FAIL {tag}: {type(e).__name__}: {str(e)[:300]}", flush=True)
+        results.append(r)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

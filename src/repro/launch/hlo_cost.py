@@ -1,0 +1,267 @@
+"""Loop-aware cost analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model
+that ``lax.scan``s over layers (all of ours) is undercounted by the trip
+count.  This module re-derives the roofline inputs from the HLO text with
+loop multipliers:
+
+  * flops            — 2 * |result| * |contracting dims| for every dot,
+                       weighted by the product of enclosing while trip
+                       counts (fusion-internal dots included);
+  * hbm_bytes        — sum of result bytes of every *materializing*
+                       instruction (top-level + while bodies, fusion
+                       internals excluded since they stay in registers),
+                       times multipliers — a write-traffic proxy; total
+                       HBM traffic ~= 2-3x this;
+  * collective_bytes — operand bytes of all-reduce/all-gather/
+                       reduce-scatter/all-to-all/collective-permute with
+                       group-size semantics, times multipliers.
+
+Trip counts come from the canonical scan/fori lowering: the while
+condition compares the induction variable against a constant.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_CFG = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$"
+)
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST = re.compile(r"constant\((\d+)\)")
+_GROUPS_BRACE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        total += _shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+class Instruction:
+    __slots__ = ("name", "shape_txt", "op", "rest")
+
+    def __init__(self, name, shape_txt, op, rest):
+        self.name = name
+        self.shape_txt = shape_txt
+        self.op = op
+        self.rest = rest
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instruction]]:
+    comps: Dict[str, List[Instruction]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR.match(stripped)
+        if m:
+            comps[cur].append(Instruction(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _entry_name(hlo: str, comps: Dict[str, List[Instruction]]) -> str:
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            m = _COMP_HDR.match(s)
+            if m:
+                return m.group(2)
+    # fallback: a computation named like the module
+    return next(iter(comps))
+
+
+def _trip_count(cond_comp: List[Instruction]) -> int:
+    """Find `compare(..., constant(N)), direction=LT` in the condition."""
+    consts = {}
+    for ins in cond_comp:
+        m = _CONST.search(ins.op + "(" + ins.rest)
+        if ins.op == "constant":
+            m2 = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if m2:
+                consts[ins.name] = int(m2.group(1))
+    for ins in cond_comp:
+        if ins.op == "compare" and "direction=LT" in ins.rest:
+            for operand in re.findall(r"%([\w\.\-]+)", ins.rest):
+                if operand in consts:
+                    return consts[operand]
+    # GE/GT countdown loops or unknown: be conservative
+    vals = [v for v in consts.values() if v > 1]
+    return max(vals) if vals else 1
+
+
+def _dot_flops(ins: Instruction, symtab: Dict[str, Tuple[str, str]]) -> float:
+    shapes = _SHAPE.findall(ins.shape_txt)
+    if not shapes:
+        return 0.0
+    result_elems = sum(_shape_elems(dims) for _, dims in shapes)
+    m = _CONTRACT.search(ins.rest)
+    contract = 1
+    if m:
+        cdims = [int(x) for x in m.group(1).split(",") if x]
+        operands = re.findall(r"%([\w\.\-]+)", ins.rest)
+        if operands:
+            lhs = symtab.get(operands[0])
+            if lhs:
+                ldims = [int(x) for x in lhs[1].split(",") if x]
+                for cd in cdims:
+                    if cd < len(ldims):
+                        contract *= ldims[cd]
+    return 2.0 * result_elems * contract
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE.search(rest)
+    if m:
+        return m.group(1).count(",") + 1
+    return 1
+
+
+_NO_MATERIALIZE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "token",
+}
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps = parse_computations(hlo)
+    entry = _entry_name(hlo, comps)
+
+    # computations referenced by fusion ops => register-resident internals
+    fused: set = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.op == "fusion":
+                m = _CALLS.search(ins.rest)
+                if m:
+                    fused.add(m.group(1))
+
+    symtabs: Dict[str, Dict[str, Tuple[str, str]]] = {}
+    for cname, instrs in comps.items():
+        st = {}
+        for ins in instrs:
+            sh = _SHAPE.findall(ins.shape_txt)
+            if sh:
+                st[ins.name] = sh[0]
+        symtabs[cname] = st
+
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def visit(cname: str) -> Tuple[float, float, float, Dict[str, float]]:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = (0.0, 0.0, 0.0, {})  # cycle guard
+        flops = bytes_ = coll = 0.0
+        coll_by: Dict[str, float] = {}
+        instrs = comps.get(cname, [])
+        st = symtabs.get(cname, {})
+        in_fusion = cname in fused
+        for ins in instrs:
+            if ins.op in ("dot",):
+                flops += _dot_flops(ins, st)
+            if not in_fusion and ins.op not in _NO_MATERIALIZE:
+                bytes_ += _first_shape_bytes(ins.shape_txt)
+            base = ins.op.removesuffix("-start")
+            if base in _COLLECTIVES and not ins.op.endswith("-done"):
+                rb = _first_shape_bytes(ins.shape_txt)
+                g = _group_size(ins.rest)
+                if base == "all-gather":
+                    b = rb / max(g, 1)
+                elif base == "reduce-scatter":
+                    b = rb * g
+                else:
+                    b = rb
+                coll += b
+                coll_by[base] = coll_by.get(base, 0.0) + b
+            # recurse into called computations
+            if ins.op == "while":
+                mb = _CALLS.search(ins.rest)
+                mc = _COND.search(ins.rest)
+                mt = _TRIP_CFG.search(ins.rest)
+                if mt:
+                    trips = int(mt.group(1))  # XLA's known_trip_count
+                elif mc and mc.group(1) in comps:
+                    trips = _trip_count(comps[mc.group(1)])
+                else:
+                    trips = 1
+                if mb and mb.group(1) in comps:
+                    f, by, cl, cb = visit(mb.group(1))
+                    flops += trips * f
+                    bytes_ += trips * by
+                    coll += trips * cl
+                    for k, v in cb.items():
+                        coll_by[k] = coll_by.get(k, 0.0) + trips * v
+            elif ins.op in ("fusion", "call", "custom-call", "reduce", "map",
+                            "scatter", "select-and-scatter", "sort",
+                            "all-reduce", "reduce-scatter", "reduce-window"):
+                m = _CALLS.search(ins.rest)
+                if m and m.group(1) in comps:
+                    f, by, cl, cb = visit(m.group(1))
+                    flops += f
+                    bytes_ += by if ins.op in ("call",) else 0.0
+                    coll += cl
+                    for k, v in cb.items():
+                        coll_by[k] = coll_by.get(k, 0.0) + v
+            elif ins.op == "conditional":
+                m = _BRANCHES.search(ins.rest)
+                if m:
+                    branches = re.findall(r"%?([\w\.\-]+)", m.group(1))
+                    if branches:
+                        vals = [visit(b) for b in branches if b in comps]
+                        if vals:
+                            # worst case branch
+                            f, by, cl, _ = max(vals, key=lambda v: v[0] + v[1])
+                            flops += f
+                            bytes_ += by
+                            coll += cl
+        memo[cname] = (flops, bytes_, coll, coll_by)
+        return memo[cname]
+
+    f, by, cl, cb = visit(entry)
+    return {
+        "flops": f,
+        "hbm_bytes": by,
+        "collective_bytes": cl,
+        "collective_by_op": cb,
+        "num_computations": float(len(comps)),
+    }

@@ -1,0 +1,96 @@
+"""Step builders: federated train_step, prefill_step, serve_step.
+
+``train_step`` is one FedAvg round at datacenter scale: per-example (=
+per-client-group) losses are weighted by OCEAN's selection mask before the
+gradient all-reduce, so the collective over the data/pod axes *is* the
+masked uplink aggregation of the paper (FedSGD: one local step per round —
+see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.losses import chunked_softmax_xent
+from repro.optim.optimizers import Optimizer, apply_updates
+
+Params = Any
+AUX_LOSS_COEF = 0.01
+
+
+def _model_inputs(cfg: ModelConfig, batch: Dict[str, Any]):
+    if cfg.arch_type == "vlm":
+        return {"patches": batch["patches"]}
+    if cfg.arch_type == "audio":
+        return {"frames": batch["frames"]}
+    return {}
+
+
+def make_loss_fn(model, cfg: ModelConfig) -> Callable:
+    def loss_fn(params: Params, batch: Dict[str, Any]) -> Tuple[jax.Array, Dict]:
+        extra = _model_inputs(cfg, batch)
+        if cfg.arch_type == "audio":
+            hidden, aux = model.forward(params, batch["tokens"], extra["frames"])
+        elif cfg.arch_type == "vlm":
+            hidden, aux = model.forward(params, batch["tokens"], extra["patches"])
+            hidden = hidden[:, cfg.num_patches :]  # loss on text positions only
+        else:
+            hidden, aux = model.forward(params, batch["tokens"])
+        table = params.get("lm_head", params["embed"])
+        per_client = chunked_softmax_xent(
+            hidden,
+            table,
+            batch["labels"],
+            final_softcap=cfg.final_logit_softcap,
+        )
+        mask = batch["client_mask"]
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(per_client * mask) / denom + AUX_LOSS_COEF * aux
+        return loss, {"per_client_loss": per_client, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig, optimizer: Optimizer) -> Callable:
+    loss_fn = make_loss_fn(model, cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {
+            "loss": loss,
+            "aux_loss": extras["aux_loss"],
+            "selected_clients": jnp.sum(batch["client_mask"]),
+        }
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        extra = _model_inputs(cfg, batch)
+        if cfg.arch_type == "audio":
+            hidden, _ = model.forward(params, batch["tokens"], extra["frames"])
+        elif cfg.arch_type == "vlm":
+            hidden, _ = model.forward(params, batch["tokens"], extra["patches"])
+        else:
+            hidden, _ = model.forward(params, batch["tokens"])
+        # last-position logits: what a serving stack samples from
+        return model.logits(params, hidden[:, -1:])
+
+    return prefill_step
+
+
+def make_serve_step(model, cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return serve_step

@@ -1,0 +1,13 @@
+"""Architecture zoo: unified decoder + encoder-decoder, built from configs."""
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecModel
+from repro.models.transformer import DecoderModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.arch_type == "audio":
+        return EncDecModel(cfg)
+    return DecoderModel(cfg)
+
+
+__all__ = ["build_model", "DecoderModel", "EncDecModel", "ModelConfig"]

@@ -1,0 +1,389 @@
+"""Grouped-query attention: flash-style training forward + cached decode.
+
+The training forward is written as a *blockwise* (online-softmax) scan over
+KV blocks so XLA never materializes the (S, S) score matrix — the same
+algorithm the Pallas kernel implements on TPU, so the dry-run memory
+profile is faithful to the target.  Supports:
+
+  * GQA (n_kv_heads <= n_heads), MQA (n_kv_heads == 1),
+  * causal and sliding-window ("local") masking,
+  * gemma2-style attention logit softcapping,
+  * optional qk-norm (gemma3).
+
+Decode attends one query to a KV cache; local layers use a ring buffer of
+size ``sliding_window`` so a 500k-context decode does not allocate 500k
+cache rows for windowed layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import backend as _backend
+from repro.models.layers import apply_norm, apply_rope, init_norm, softcap
+from repro.sharding.constraints import constrain, constrain_either
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+DEFAULT_BLOCK = 512
+
+
+def init_attention(key: Array, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d)
+    so = 1.0 / jnp.sqrt(h * hd)
+    p = {
+        "wq": (s * jax.random.normal(ks[0], (d, h, hd))).astype(dtype),
+        "wk": (s * jax.random.normal(ks[1], (d, kv, hd))).astype(dtype),
+        "wv": (s * jax.random.normal(ks[2], (d, kv, hd))).astype(dtype),
+        "wo": (so * jax.random.normal(ks[3], (h, hd, d))).astype(dtype),
+    }
+    if cfg.use_qk_norm and not cross:
+        p["q_norm"] = init_norm(hd, "rmsnorm")
+        p["k_norm"] = init_norm(hd, "rmsnorm")
+    return p
+
+
+def _project_qkv(p: Params, xq: Array, xkv: Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"], preferred_element_type=jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"], preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"], preferred_element_type=jnp.float32)
+    q, k, v = (t.astype(xq.dtype) for t in (q, k, v))
+    # Prefer head (tensor) parallelism; when the head count cannot shard
+    # the model axis (e.g. gemma3's 4 heads on 16 ways), fall back to
+    # context parallelism: shard the *query* sequence, keep keys gathered.
+    q = constrain_either(
+        q,
+        [("batch", None, "model", None), ("batch", "model", None, None)],
+    )
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    if "q_norm" in p:
+        q = apply_norm(p["q_norm"], q)
+        k = apply_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def mha_reference(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    q_offset: Array | int = 0,
+    kv_offset: Array | int = 0,
+    kv_valid_len: Optional[Array] = None,
+) -> Array:
+    """Naive O(S^2) GQA attention — the oracle for kernels and tests.
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, KV, Dh).  Positions of query i are
+    ``q_offset + i`` and of key j ``kv_offset + j`` for masking purposes.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, sq, kvh, g, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qr, k, preferred_element_type=jnp.float32
+    ) * scale
+    logits = softcap(logits, logit_cap)
+    qpos = jnp.asarray(q_offset) + jnp.arange(sq)
+    kpos = jnp.asarray(kv_offset) + jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    if kv_valid_len is not None:
+        mask &= (kpos < kv_valid_len)[None, :]
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _block_mask(qpos: Array, kpos: Array, causal: bool, window: Optional[int]):
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    return mask
+
+
+def _blockwise_fwd(q, k, v, causal, window, logit_cap, block):
+    """Online-softmax scan over KV blocks; returns (out, lse)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    nblk = s // block
+    qr = q.reshape(b, s, kvh, g, hd)
+    scale = hd ** -0.5
+    qpos = jnp.arange(s)
+
+    kb = k.reshape(b, nblk, block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint  # recompute block probs in backward-of-forward
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, i = blk
+        kpos = i * block + jnp.arange(block)
+        logits = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qr, kblk, preferred_element_type=jnp.float32
+        ) * scale
+        logits = softcap(logits, logit_cap)
+        logits = jnp.where(
+            _block_mask(qpos, kpos, causal, window)[None, None, None],
+            logits,
+            -1e30,
+        )
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nblk))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, hd).astype(q.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))      # (b, kvh, g, s)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _mha_blockwise_cvjp(q, k, v, causal, window, logit_cap, block):
+    out, _ = _blockwise_fwd(q, k, v, causal, window, logit_cap, block)
+    return out
+
+
+def _cvjp_fwd(q, k, v, causal, window, logit_cap, block):
+    out, lse = _blockwise_fwd(q, k, v, causal, window, logit_cap, block)
+    return out, (q, k, v, out, lse)
+
+
+def _cvjp_bwd(causal, window, logit_cap, block, res, dout):
+    """Flash-attention backward: recompute P per block from the saved
+    log-sum-exp; residuals are only (q, k, v, out, lse) — the scan-VJP
+    alternative stacks the f32 (S, Dh) accumulator carry per KV block
+    (8.6 GB/layer measured on jamba; EXPERIMENTS.md §Perf iteration 3)."""
+    q, k, v, out, lse = res
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    nblk = s // block
+    scale = hd ** -0.5
+    qpos = jnp.arange(s)
+
+    qr = q.reshape(b, s, kvh, g, hd)
+    dor = dout.reshape(b, s, kvh, g, hd)
+    # D_i = rowsum(dO * O)
+    delta = jnp.einsum(
+        "bqkgd,bqkgd->bkgq", dor.astype(jnp.float32), out.reshape(b, s, kvh, g, hd).astype(jnp.float32)
+    )
+
+    kb = k.reshape(b, nblk, block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(dq_acc, blk):
+        kblk, vblk, i = blk
+        kpos = i * block + jnp.arange(block)
+        s_pre = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qr, kblk, preferred_element_type=jnp.float32
+        ) * scale
+        s_post = softcap(s_pre, logit_cap)
+        mask = _block_mask(qpos, kpos, causal, window)[None, None, None]
+        s_post = jnp.where(mask, s_post, -1e30)
+        p = jnp.exp(s_post - lse[..., None])          # (b,kvh,g,s,block)
+        dv = jnp.einsum("bkgqs,bqkgd->bskd", p, dor.astype(jnp.float32))
+        dp = jnp.einsum("bqkgd,bskd->bkgqs", dor, vblk,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])
+        if logit_cap is not None:
+            t = jnp.tanh(s_pre / logit_cap)
+            ds = ds * (1.0 - jnp.square(t))
+        ds = jnp.where(mask, ds, 0.0)
+        dq_blk = jnp.einsum("bkgqs,bskd->bqkgd", ds, kblk,
+                            preferred_element_type=jnp.float32) * scale
+        dk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qr.astype(jnp.float32)) * scale
+        return dq_acc + dq_blk, (dk, dv)
+
+    dq0 = jnp.zeros((b, s, kvh, g, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nblk)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, s, kvh, hd)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, s, kvh, hd)
+    return (
+        dq.reshape(b, s, h, hd).astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+    )
+
+
+_mha_blockwise_cvjp.defvjp(_cvjp_fwd, _cvjp_bwd)
+
+
+def mha_blockwise(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    block: int = DEFAULT_BLOCK,
+) -> Array:
+    """Flash-style attention with a custom flash backward; never
+    materializes (Sq, Sk).  Same-length q/kv (training path)."""
+    s = q.shape[1]
+    if s % block != 0:
+        return mha_reference(
+            q, k, v, causal=causal, window=window, logit_cap=logit_cap
+        )
+    return _mha_blockwise_cvjp(q, k, v, causal, window, logit_cap, block)
+
+
+def _mha(q, k, v, **kw):
+    be = _backend.get_backend()
+    if be in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(
+            q, k, v, interpret=(be == "pallas_interpret"), **kw
+        )
+    return mha_blockwise(q, k, v, **kw)
+
+
+# ---------------------------------------------------------------------------
+# training forward
+# ---------------------------------------------------------------------------
+def attention_forward(
+    p: Params,
+    x: Array,
+    cfg: ModelConfig,
+    kind: str = "global",
+    positions: Optional[Array] = None,
+) -> Array:
+    """Causal self-attention over the full sequence (training/prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, x, cfg)
+    if cfg.use_rope:
+        pos = jnp.arange(s) if positions is None else positions
+        q = apply_rope(q, jnp.broadcast_to(pos, (b, s)), cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(pos, (b, s)), cfg.rope_theta)
+    window = cfg.sliding_window if kind == "local" else None
+    out = _mha(
+        q, k, v, causal=True, window=window, logit_cap=cfg.attn_logit_softcap
+    )
+    out = constrain_either(
+        out,
+        [("batch", None, "model", None), ("batch", "model", None, None)],
+    )
+    y = jnp.einsum(
+        "bshk,hkd->bsd", out, p["wo"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    return constrain(y, "batch", None, None)
+
+
+def encoder_attention(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    """Bidirectional self-attention (whisper encoder) — no rope, no mask."""
+    q, k, v = _project_qkv(p, x, x, cfg)
+    out = mha_reference(q, k, v, causal=False)
+    return jnp.einsum(
+        "bshk,hkd->bsd", out, p["wo"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def cross_attention(p: Params, x: Array, memory: Array, cfg: ModelConfig) -> Array:
+    """Decoder->encoder cross attention (whisper)."""
+    q, k, v = _project_qkv(p, x, memory, cfg)
+    out = mha_reference(q, k, v, causal=False)
+    return jnp.einsum(
+        "bshk,hkd->bsd", out, p["wo"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: Array  # (B, C, KV, Dh) — C = min(max_len, window) for local layers
+    v: Array  # (B, C, KV, Dh)
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, kind: str, dtype
+) -> KVCache:
+    c = max_len if kind != "local" else min(cfg.sliding_window, max_len)
+    shape = (batch, c, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attention_decode(
+    p: Params,
+    x: Array,            # (B, 1, D) — the new token's hidden state
+    cache: KVCache,
+    pos: Array,          # scalar int — index of the new token
+    cfg: ModelConfig,
+    kind: str = "global",
+) -> Tuple[Array, KVCache]:
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    if cfg.use_rope:
+        posb = jnp.broadcast_to(pos, (b, 1))
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    c = cache.k.shape[1]
+    slot = pos % c  # ring write; global caches have C = max_len so slot == pos
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+
+    # Valid slots: ring semantics.  Slot s holds absolute position
+    # p_s = pos - ((pos - s) mod C); it is valid iff p_s >= 0, and the
+    # sliding-window constraint pos - p_s < window holds automatically for
+    # local caches (C <= window).
+    s_idx = jnp.arange(c)
+    slot_pos = pos - jnp.mod(pos - s_idx, c)
+    valid = slot_pos >= 0
+
+    kvh = k.shape[2]
+    g = cfg.n_heads // kvh
+    qr = q.reshape(b, 1, kvh, g, cfg.head_dim)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qr, k, preferred_element_type=jnp.float32
+    ) * (cfg.head_dim ** -0.5)
+    logits = softcap(logits, cfg.attn_logit_softcap)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    y = jnp.einsum(
+        "bshk,hkd->bsd", out.astype(x.dtype), p["wo"],
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    return y, KVCache(k=k, v=v)

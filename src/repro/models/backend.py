@@ -1,0 +1,30 @@
+"""Compute-backend switch: XLA (pure jnp, the oracle path — default on CPU)
+vs Pallas TPU kernels.  Models consult this at trace time."""
+from __future__ import annotations
+
+import contextlib
+
+_BACKEND = "xla"
+_VALID = ("xla", "pallas", "pallas_interpret")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {name!r}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    global _BACKEND
+    prev = _BACKEND
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _BACKEND = prev

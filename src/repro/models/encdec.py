@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder backbone (audio arch).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor
+is a STUB: ``input_specs`` supplies precomputed frame embeddings
+(B, source_len, d_model) directly.  We implement the transformer backbone:
+
+  encoder: sinusoidal positions + N bidirectional pre-LN layers
+  decoder: token embeddings + learned positions + N layers of
+           (causal self-attn, cross-attn to encoder memory, MLP)
+
+Decode carries a self-attention KV cache plus the *precomputed* cross
+K/V of the encoder memory (computed once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed,
+    init_embed,
+    init_mlp,
+    init_norm,
+    sinusoidal_positions,
+    unembed,
+)
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ---- init ---------------------------------------------------------------
+    def _init_enc_layer(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": init_norm(cfg.d_model, cfg.norm),
+            "attn": attn.init_attention(k1, cfg, self.dtype),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_gated, self.dtype),
+        }
+
+    def _init_dec_layer(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": init_norm(cfg.d_model, cfg.norm),
+            "self_attn": attn.init_attention(k1, cfg, self.dtype),
+            "ln_x": init_norm(cfg.d_model, cfg.norm),
+            "cross_attn": attn.init_attention(k2, cfg, self.dtype, cross=True),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_gated, self.dtype),
+        }
+
+    def init(self, key: Array) -> Params:
+        cfg = self.cfg
+        ke, kd, kt, kp = jax.random.split(key, 4)
+        enc = jax.vmap(self._init_enc_layer)(
+            jax.random.split(ke, cfg.encoder_layers)
+        )
+        dec = jax.vmap(self._init_dec_layer)(
+            jax.random.split(kd, cfg.num_layers)
+        )
+        return {
+            "embed": init_embed(kt, cfg.vocab, cfg.d_model, self.dtype),
+            "pos_dec": (
+                0.01 * jax.random.normal(kp, (cfg.max_seq_len, cfg.d_model))
+            ).astype(self.dtype),
+            "enc_layers": enc,
+            "dec_layers": dec,
+            "enc_norm": init_norm(cfg.d_model, cfg.norm),
+            "final_norm": init_norm(cfg.d_model, cfg.norm),
+        }
+
+    # ---- encoder -------------------------------------------------------------
+    def encode(self, params: Params, frames: Array) -> Array:
+        """frames: (B, source_len, d_model) stub embeddings -> memory."""
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+
+        def layer(x, lp):
+            h = attn.encoder_attention(
+                lp["attn"], apply_norm(lp["ln1"], x, cfg.norm), cfg
+            )
+            x = x + h
+            h = apply_mlp(lp["mlp"], apply_norm(lp["ln2"], x, cfg.norm), cfg.act)
+            return x + h, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(layer), x, params["enc_layers"])
+        return apply_norm(params["enc_norm"], x, cfg.norm)
+
+    # ---- decoder (training: full teacher-forced sequence) --------------------
+    def forward(
+        self, params: Params, tokens: Array, frames: Array
+    ) -> Tuple[Array, Array]:
+        cfg = self.cfg
+        memory = self.encode(params, frames)
+        b, s = tokens.shape
+        x = embed(tokens, params["embed"]) + params["pos_dec"][None, :s]
+
+        def layer(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg.norm)
+            q, k, v = attn._project_qkv(lp["self_attn"], h, h, cfg)
+            h = attn.mha_blockwise(q, k, v, causal=True)
+            h = jnp.einsum(
+                "bshk,hkd->bsd", h, lp["self_attn"]["wo"],
+                preferred_element_type=jnp.float32,
+            ).astype(x.dtype)
+            x = x + h
+            h = attn.cross_attention(
+                lp["cross_attn"], apply_norm(lp["ln_x"], x, cfg.norm), memory, cfg
+            )
+            x = x + h
+            h = apply_mlp(lp["mlp"], apply_norm(lp["ln2"], x, cfg.norm), cfg.act)
+            return x + h, None
+
+        layer = jax.checkpoint(layer)
+        x, _ = jax.lax.scan(layer, x, params["dec_layers"])
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return x, jnp.zeros((), jnp.float32)
+
+    def logits(self, params: Params, hidden: Array) -> Array:
+        return unembed(hidden, params["embed"])
+
+    # ---- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, frames: Optional[Array] = None):
+        cfg = self.cfg
+        n = cfg.num_layers
+
+        def stack(maker):
+            return jax.vmap(lambda _: maker())(jnp.arange(n))
+
+        self_cache = stack(
+            lambda: attn.init_kv_cache(cfg, batch, max_len, "global", self.dtype)
+        )
+        # cross K/V: precomputed from memory at prefill (zeros placeholder).
+        s_len = cfg.source_len
+        cross_kv = stack(
+            lambda: attn.KVCache(
+                k=jnp.zeros((batch, s_len, cfg.n_kv_heads, cfg.head_dim), self.dtype),
+                v=jnp.zeros((batch, s_len, cfg.n_kv_heads, cfg.head_dim), self.dtype),
+            )
+        )
+        return {"self": self_cache, "cross": cross_kv}
+
+    def prefill_cross(self, params: Params, frames: Array, cache):
+        """Populate the cross-attention K/V from the encoder memory."""
+        cfg = self.cfg
+        memory = self.encode(params, frames)
+
+        def one(lp):
+            k = jnp.einsum("bsd,dhk->bshk", memory, lp["cross_attn"]["wk"]).astype(self.dtype)
+            v = jnp.einsum("bsd,dhk->bshk", memory, lp["cross_attn"]["wv"]).astype(self.dtype)
+            return attn.KVCache(k=k, v=v)
+
+        cross = jax.vmap(one)(params["dec_layers"])
+        return {"self": cache["self"], "cross": cross}
+
+    def decode_step(self, params: Params, cache, token: Array, pos: Array):
+        cfg = self.cfg
+        x = embed(token, params["embed"]) + jax.lax.dynamic_slice_in_dim(
+            params["pos_dec"], pos, 1, axis=0
+        )[None]
+
+        def layer(x, inp):
+            lp, self_c, cross_c = inp
+            h = apply_norm(lp["ln1"], x, cfg.norm)
+            h, new_self = attn.attention_decode(
+                lp["self_attn"], h, self_c, pos, cfg, "global"
+            )
+            x = x + h
+            # cross attention against the precomputed memory K/V
+            h = apply_norm(lp["ln_x"], x, cfg.norm)
+            q = jnp.einsum(
+                "bsd,dhk->bshk", h, lp["cross_attn"]["wq"],
+                preferred_element_type=jnp.float32,
+            ).astype(h.dtype)
+            o = attn.mha_reference(q, cross_c.k, cross_c.v, causal=False)
+            h = jnp.einsum(
+                "bshk,hkd->bsd", o, lp["cross_attn"]["wo"],
+                preferred_element_type=jnp.float32,
+            ).astype(x.dtype)
+            x = x + h
+            h = apply_mlp(lp["mlp"], apply_norm(lp["ln2"], x, cfg.norm), cfg.act)
+            return x + h, new_self
+
+        x, new_self = jax.lax.scan(
+            layer, x, (params["dec_layers"], cache["self"], cache["cross"])
+        )
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return self.logits(params, x), {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,159 @@
+"""Shared neural building blocks: norms, MLPs, embeddings, RoPE.
+
+Conventions
+-----------
+* params are plain nested dicts of jnp arrays;
+* every ``init_*`` takes an explicit PRNG key and returns such a dict;
+* matmuls accumulate in f32 (``preferred_element_type``), activations stay
+  in the config dtype (bf16 by default);
+* norms always compute in f32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def dense(x: Array, w: Array, out_dtype=None) -> Array:
+    """x @ w with f32 accumulation, cast back to x.dtype (or out_dtype)."""
+    y = jnp.einsum("...d,df->...f", x, w, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype or x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(d: int, kind: str = "rmsnorm") -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}  # gemma-style (1+scale)
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(p: Params, x: Array, kind: str = "rmsnorm", eps: float = 1e-6) -> Array:
+    """Norm statistics accumulate in f32 *without* materializing an f32
+    copy of x (an x.astype(f32) first-op makes XLA save the converted
+    residual per layer — a 2x activation-stack blowup measured on grok
+    train_4k; EXPERIMENTS.md §Perf).  The scale application stays in
+    x.dtype."""
+    d = x.shape[-1]
+    if kind == "rmsnorm":
+        ms = jnp.einsum(
+            "...d,...d->...", x, x, preferred_element_type=jnp.float32
+        ) / d
+        inv = jax.lax.rsqrt(ms + eps)[..., None]
+        scale = (1.0 + p["scale"]).astype(jnp.float32)
+        y = x * (inv * scale).astype(x.dtype)
+    else:
+        ones = jnp.ones((d,), x.dtype)
+        mu = (
+            jnp.einsum("...d,d->...", x, ones, preferred_element_type=jnp.float32)
+            / d
+        )[..., None]
+        ms = (
+            jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+            / d
+        )[..., None]
+        var = jnp.maximum(ms - jnp.square(mu), 0.0)
+        inv = jax.lax.rsqrt(var + eps)
+        y = (x.astype(jnp.float32) - mu) * inv * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key: Array, d_model: int, d_ff: int, gated: bool, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_out = 1.0 / jnp.sqrt(d_ff)
+    p = {
+        "wi": (s_in * jax.random.normal(k1, (d_model, d_ff))).astype(dtype),
+        "wo": (s_out * jax.random.normal(k2, (d_ff, d_model))).astype(dtype),
+    }
+    if gated:
+        p["wg"] = (s_in * jax.random.normal(k3, (d_model, d_ff))).astype(dtype)
+    return p
+
+
+def apply_mlp(p: Params, x: Array, act: str = "silu") -> Array:
+    from repro.sharding.constraints import constrain
+
+    h = dense(x, p["wi"])
+    if "wg" in p:
+        h = ACTS[act](dense(x, p["wg"])) * h
+    else:
+        h = ACTS[act](h)
+    if h.ndim == 3:
+        h = constrain(h, "batch", None, "model")
+    y = dense(h, p["wo"])
+    return constrain(y, *(["batch"] + [None] * (y.ndim - 1))) if y.ndim == 3 else y
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(key: Array, vocab: int, d_model: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(tokens: Array, table: Array, scale: bool = False) -> Array:
+    x = jnp.take(table, tokens, axis=0)
+    if scale:  # gemma-style sqrt(d) scaling
+        x = x * jnp.sqrt(jnp.asarray(table.shape[-1], x.dtype))
+    return x
+
+
+def unembed(x: Array, table: Array, chunk: int = 0) -> Array:
+    """Logits x @ table.T; table is (V, D)."""
+    return jnp.einsum(
+        "...d,vd->...v", x, table, preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)            # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    angles = angles[..., None, :]                      # (..., S, 1, Dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> Array:
+    """Whisper-style fixed sinusoidal embeddings (length, dim)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        -jnp.log(10_000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim
+    )
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,67 @@
+"""Chunked cross-entropy: never materializes (B, S, V) logits.
+
+With 256k vocabularies a full logits tensor is hundreds of GB; we scan
+over sequence chunks, computing (B, chunk, V)-sized logits inside a
+``jax.checkpoint`` so the backward recomputes them too.  Per-example
+(client) losses are returned so the federated masked aggregation can weight
+clients individually.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap, unembed
+from repro.sharding.constraints import constrain
+
+Array = jax.Array
+
+
+def chunked_softmax_xent(
+    hidden: Array,            # (B, S, D)
+    table: Array,             # (V, D) unembedding
+    labels: Array,            # (B, S) int32
+    label_mask: Optional[Array] = None,   # (B, S) — 0 masks (e.g. patch slots)
+    chunk: int = 256,
+    final_softcap: Optional[float] = None,
+) -> Array:
+    """Returns per-example mean NLL: (B,)."""
+    b, s, d = hidden.shape
+    if label_mask is None:
+        label_mask = jnp.ones((b, s), jnp.float32)
+    label_mask = label_mask.astype(jnp.float32)
+
+    if s % chunk != 0 or s <= chunk:
+        lg = softcap(unembed(hidden, table), final_softcap)
+        lg = constrain(lg, "batch", None, "model")
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * label_mask, 1) / jnp.maximum(label_mask.sum(1), 1.0)
+
+    nchunk = s // chunk
+
+    def body(carry, inp):
+        h_c, y_c, m_c = inp
+
+        def chunk_loss(h_c, y_c, m_c):
+            h_c = constrain(h_c, "batch", None, None)
+            lg = softcap(unembed(h_c, table), final_softcap)
+            lg = constrain(lg, "batch", None, "model")
+            logp = jax.nn.log_softmax(lg, axis=-1)
+            nll = -jnp.take_along_axis(logp, y_c[..., None], axis=-1)[..., 0]
+            return jnp.sum(nll * m_c, axis=1)
+
+        loss = jax.checkpoint(chunk_loss)(h_c, y_c, m_c)
+        return carry + loss, None
+
+    split = lambda a: jnp.moveaxis(
+        a.reshape((b, nchunk, chunk) + a.shape[2:]), 1, 0
+    )
+    total, _ = jax.lax.scan(
+        body,
+        jnp.zeros((b,), jnp.float32),
+        (split(hidden), split(labels), split(label_mask)),
+    )
+    return total / jnp.maximum(label_mask.sum(1), 1.0)

@@ -1,0 +1,167 @@
+"""Mamba selective-SSM block (the "m" in Jamba's 7:1 mamba:attention mix).
+
+    x -> in_proj -> (z, u);  u -> causal depthwise conv -> silu
+    (dt, B, C) = x_proj(u);  dt = softplus(dt_proj(dt) + bias)
+    dA = exp(dt * A)  (A = -exp(A_log));  dBu = dt * B * u
+    h_t = dA_t h_{t-1} + dBu_t ;  y = <h_t, C_t> + D*u ;  out = out_proj(y * silu(z))
+
+Training uses a *chunked* first-order associative scan (parallel within a
+chunk, sequential across chunks, checkpointed per chunk), which maps onto
+the TPU's VPU far better than the warp-level CUDA scan of the reference
+implementation (see DESIGN.md hardware-adaptation).  Decode carries
+(conv window, ssm state) — O(1) per token, enabling long_500k.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense
+from repro.sharding.constraints import constrain
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+_CHUNK = 256
+
+
+class MambaState(NamedTuple):
+    conv: Array  # (B, d_conv - 1, d_inner) — trailing inputs for the conv
+    ssm: Array   # (B, d_inner, d_state)
+
+
+def init_mamba(key: Array, cfg: ModelConfig, dtype) -> Params:
+    d, di, ds, dr = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+
+    def lin(k, a, b):
+        return ((1.0 / jnp.sqrt(a)) * jax.random.normal(k, (a, b))).astype(dtype)
+
+    # S4D-real initialization for A.
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    dt_bias = jnp.log(
+        jnp.expm1(
+            jnp.exp(
+                jax.random.uniform(ks[4], (di,))
+                * (jnp.log(0.1) - jnp.log(0.001))
+                + jnp.log(0.001)
+            )
+        )
+        + 1e-9
+    )
+    return {
+        "in_proj": lin(ks[0], d, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di)) / jnp.sqrt(cfg.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": lin(ks[2], di, dr + 2 * ds),
+        "dt_proj": lin(ks[3], dr, di),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": lin(ks[5], di, d),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    )
+
+
+def _causal_conv(u: Array, w: Array, b: Array, prefix: Array) -> Tuple[Array, Array]:
+    """Depthwise causal conv over time.  u: (B, T, Di), w: (Kc, Di)."""
+    kc = w.shape[0]
+    full = jnp.concatenate([prefix.astype(u.dtype), u], axis=1)  # (B, T+kc-1, Di)
+    out = sum(
+        full[:, i : i + u.shape[1]] * w[i][None, None] for i in range(kc)
+    )
+    new_prefix = full[:, -(kc - 1) :] if kc > 1 else full[:, :0]
+    return out + b[None, None], new_prefix
+
+
+def _ssm_chunk(dA: Array, dBu: Array, c: Array, h0: Array) -> Tuple[Array, Array]:
+    """First-order linear recurrence via associative scan within a chunk.
+
+    dA, dBu: (B, T, Di, Ds); c: (B, T, Ds); h0: (B, Di, Ds).
+    Composition rule for (a, b) elements of h_t = a_t h_{t-1} + b_t.
+    """
+    # Fold the initial state into the first step.
+    dBu = dBu.at[:, 0].add(dA[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    y = jnp.einsum("btds,bts->btd", h, c)
+    return y, h[:, -1]
+
+
+def mamba_mixer(
+    p: Params, x: Array, state: MambaState, cfg: ModelConfig
+) -> Tuple[Array, MambaState]:
+    """x: (B, T, D) -> (y (B, T, D), new state).  T == 1 works (decode)."""
+    b, t, _ = x.shape
+    di, ds, dr = cfg.d_inner, cfg.d_state, cfg.dt_rank
+
+    # dense() keeps activations in model dtype — raw `@` emits f32 outputs
+    # whose backward materializes 8.6 GB transposed f32 copies per
+    # superblock (§Perf jamba iteration 2)
+    zu = constrain(dense(x, p["in_proj"]), "batch", None, "model")
+    z, u = jnp.split(zu, 2, axis=-1)
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], state.conv)
+    u = jax.nn.silu(u)
+
+    dbc = (u @ p["x_proj"]).astype(jnp.float32)
+    dt, bmat, cmat = jnp.split(dbc, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                                  # (Di, Ds)
+    dt = constrain(dt, "batch", None, "model")
+    uf = u.astype(jnp.float32)
+
+    def discretize(dt_c, b_c, u_c):
+        """(.., Di) x (.., Ds) x (.., Di) -> (.., Di, Ds) pair.
+
+        Kept INSIDE the checkpointed chunk body: materializing the full
+        (B, T, Di, Ds) tensors up front costs Ds * the activation budget
+        (EXPERIMENTS.md §Perf, jamba hillclimb iteration 1).
+        """
+        dA_c = jnp.exp(dt_c[..., None] * a[None, None])
+        dBu_c = dt_c[..., None] * b_c[:, :, None, :] * u_c[..., None]
+        dA_c = constrain(dA_c, "batch", None, "model", None)
+        dBu_c = constrain(dBu_c, "batch", None, "model", None)
+        return dA_c, dBu_c
+
+    nchunk = max(t // _CHUNK, 1)
+    if t % _CHUNK == 0 and nchunk > 1:
+        lc = t // nchunk
+
+        def chunk_body(h, inp):
+            dt_c, b_c, u_c, c_c = inp
+            dA_c, dBu_c = discretize(dt_c, b_c, u_c)
+            y, h_new = _ssm_chunk(dA_c, dBu_c, c_c, h)
+            return h_new, y
+
+        chunk_body = jax.checkpoint(chunk_body)
+        split = lambda arr: jnp.moveaxis(
+            arr.reshape((b, nchunk, lc) + arr.shape[2:]), 1, 0
+        )
+        h_fin, ys = jax.lax.scan(
+            chunk_body, state.ssm, (split(dt), split(bmat), split(uf), split(cmat))
+        )
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, t, di)
+    else:
+        dA, dBu = discretize(dt, bmat, uf)
+        y, h_fin = _ssm_chunk(dA, dBu, cmat, state.ssm)
+
+    y = y + uf * p["d_skip"][None, None]
+    gated = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(gated, p["out_proj"])
+    return constrain(out, "batch", None, None), MambaState(
+        conv=new_conv, ssm=h_fin
+    )

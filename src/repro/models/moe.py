@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+GShard/Switch-style with one crucial twist for SPMD: dispatch is
+**batch-local**.  Tokens are packed into per-batch-row expert buffers
+(B, E, C) with C = ceil(S * k / E * capacity_factor), so the scatter/
+gather are *batched* over the data-sharded batch axis and GSPMD keeps
+them local to each shard.  A global (E, C_total, D) buffer — the naive
+formulation — forces XLA to all-gather the full dispatch tensor and
+all-reduce expert partials every layer (measured 8.4 TB/device/step of
+all-reduce on grok-1 train_4k; see EXPERIMENTS.md §Perf, grok iteration
+1).  Per-row capacity also matches the federated setting: each client
+group gets its own expert capacity.
+
+HLO FLOPs ≈ active FLOPs (top_k/num_experts of dense), keeping the
+roofline honest.  Sharding: experts are expert-parallel over "model" when
+the count divides it (jamba 16/16); otherwise the expert FFN hidden dim
+is tensor-parallel (grok 8e, granite-moe 40e).  A Switch-style
+load-balance auxiliary loss is returned for training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ACTS
+from repro.sharding.constraints import constrain, constrain_either
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def init_moe(key: Array, cfg: ModelConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(d)
+    s_out = 1.0 / jnp.sqrt(f)
+    p = {
+        "router": (s_in * jax.random.normal(ks[0], (d, e))).astype(jnp.float32),
+        "wi": (s_in * jax.random.normal(ks[1], (e, d, f))).astype(dtype),
+        "wo": (s_out * jax.random.normal(ks[2], (e, f, d))).astype(dtype),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = (s_in * jax.random.normal(ks[3], (e, d, f))).astype(dtype)
+    return p
+
+
+def apply_moe(p: Params, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # Switch load-balance aux: E * sum_e f_e * P_e (computed globally).
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    onehot_sk = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (B,S,k,E)
+    ce = jnp.mean(jnp.sum(onehot_sk, axis=2), axis=(0, 1))    # (E,)
+    aux = e * jnp.sum(me * ce / k)
+
+    capacity = int(max(1, round(s * k / e * cfg.capacity_factor)))
+
+    # --- batch-local dispatch ------------------------------------------------
+    flat_idx = expert_idx.reshape(b, s * k)                   # (B, S*k)
+    oh = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)         # (B, S*k, E)
+    pos = jnp.sum((jnp.cumsum(oh, axis=1) - 1) * oh, axis=-1)  # (B, S*k)
+    keep = pos < capacity
+    buf_idx = flat_idx * capacity + jnp.minimum(pos, capacity - 1)
+
+    src = jnp.repeat(x, k, axis=1)                            # (B, S*k, D)
+    src = jnp.where(keep[..., None], src, 0).astype(x.dtype)
+
+    def row_scatter(idx_row, src_row):
+        return jnp.zeros((e * capacity, d), x.dtype).at[idx_row].add(src_row)
+
+    buffers = jax.vmap(row_scatter)(buf_idx, src)             # (B, E*C, D)
+    buffers = buffers.reshape(b, e, capacity, d)
+    buffers = constrain_either(
+        buffers,
+        [("batch", "model", None, None), ("batch", None, None, None)],
+    )
+
+    # --- expert FFN, batched over (B, E) ------------------------------------
+    # Un-shard the FSDP (contracting) dim of the expert weights *here*: an
+    # explicit all-gather of ~200 MB of weights per layer beats the
+    # partial-sum all-reduce of (B,E,C,F) f32 activations XLA otherwise
+    # emits (~6x the bytes; EXPERIMENTS.md §Perf grok iteration 2).
+    # ONLY worth it with many tokens — at decode (s == 1) gathering
+    # weights for one token dominates the step (3x decode regression
+    # caught in the post-hillclimb sweep), so keep FSDP sharding there.
+    many_tokens = s > 1
+
+    def gathered(w):  # (E, D, F)
+        if not many_tokens:
+            return w
+        return constrain_either(
+            w, [("model", None, None), (None, None, "model")]
+        )
+
+    # NOTE dtype: no preferred_element_type=f32 here — the MXU accumulates
+    # dots in f32 internally either way, and bf16 *outputs* halve the
+    # cross-shard partial-sum all-reduces (720+240 GiB/step f32 partials
+    # measured on grok; EXPERIMENTS.md §Perf grok iteration 3).
+    h = jnp.einsum("becd,edf->becf", buffers, gathered(p["wi"]))
+    if "wg" in p:
+        g = jnp.einsum("becd,edf->becf", buffers, gathered(p["wg"]))
+        h = ACTS[cfg.act](g) * h
+    else:
+        h = ACTS[cfg.act](h)
+    h = h.astype(x.dtype)
+    h = constrain_either(
+        h,
+        [("batch", "model", None, None), ("batch", None, None, "model")],
+    )
+    wo = p["wo"]
+    if many_tokens:
+        wo = constrain_either(wo, [("model", None, None), (None, "model", None)])
+    y = jnp.einsum("becf,efd->becd", h, wo).astype(x.dtype)
+    y = constrain_either(
+        y,
+        [("batch", "model", None, None), ("batch", None, None, None)],
+    )
+
+    # --- batch-local combine --------------------------------------------------
+    y_rows = y.reshape(b, e * capacity, d)
+
+    def row_gather(y_row, idx_row):
+        return y_row[idx_row]
+
+    y_tok = jax.vmap(row_gather)(y_rows, buf_idx)             # (B, S*k, D)
+    w = (gate_vals.reshape(b, s * k) * keep).astype(x.dtype)
+    out = jnp.sum(
+        (y_tok * w[..., None]).reshape(b, s, k, d), axis=2
+    )
+    return constrain(out, "batch", None, None), aux

@@ -1,0 +1,239 @@
+"""RWKV6 "Finch" block — attention-free token mixing with data-dependent
+decay (arXiv:2404.05892).
+
+Time-mix (per head, head size N):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t           (state: N x N per head)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with the *data-dependent* per-channel decay w_t = exp(-exp(w0 + lora(x_t)))
+that distinguishes RWKV6 from RWKV4/5.  Channel-mix is the squared-ReLU
+token-shifted FFN.  Training runs a chunked sequential scan (checkpointed
+per chunk so backward memory stays O(chunk)); decode carries the
+(B, H, N, N) state — O(1) per token, which is why rwkv6 runs the
+long_500k shape natively.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, init_norm
+from repro.sharding.constraints import constrain
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+_CHUNK = 128
+
+
+class RwkvState(NamedTuple):
+    wkv: Array      # (B, H, N, N) recurrent state
+    shift_tm: Array  # (B, D) last token (time-mix shift)
+    shift_cm: Array  # (B, D) last token (channel-mix shift)
+
+
+def init_rwkv(key: Array, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    h, n = cfg.rwkv_heads, cfg.rwkv_head_size
+    lora = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 10)
+    s = 1.0 / jnp.sqrt(d)
+
+    def lin(k, din, dout, scale=None):
+        return ((scale or (1.0 / jnp.sqrt(din))) * jax.random.normal(k, (din, dout))).astype(dtype)
+
+    return {
+        # token-shift interpolation weights for r/k/v/w/g
+        "mu": (0.5 * jnp.ones((5, d))).astype(jnp.float32),
+        "wr": lin(ks[0], d, d),
+        "wk": lin(ks[1], d, d),
+        "wv": lin(ks[2], d, d),
+        "wg": lin(ks[3], d, d),
+        "wo": (s * jax.random.normal(ks[4], (d, d))).astype(dtype),
+        # data-dependent decay lora: w = exp(-exp(w0 + tanh(x @ a) @ b))
+        "w0": (-6.0 + jax.random.uniform(ks[5], (d,))).astype(jnp.float32),
+        "wa": lin(ks[6], d, lora),
+        "wb": (jnp.zeros((lora, d))).astype(dtype),
+        "u": (0.5 * jax.random.normal(ks[7], (h, n))).astype(jnp.float32),
+        "ln_x": init_norm(d, "layernorm"),   # per-head group norm approximated
+        # channel-mix
+        "cm_mu": (0.5 * jnp.ones((2, d))).astype(jnp.float32),
+        "cm_k": lin(ks[8], d, cfg.d_ff),
+        "cm_v": lin(ks[9], cfg.d_ff, d),
+        "cm_r": lin(jax.random.fold_in(ks[8], 7), d, d),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RwkvState:
+    h, n, d = cfg.rwkv_heads, cfg.rwkv_head_size, cfg.d_model
+    return RwkvState(
+        wkv=jnp.zeros((batch, h, n, n), jnp.float32),
+        shift_tm=jnp.zeros((batch, d), dtype),
+        shift_cm=jnp.zeros((batch, d), dtype),
+    )
+
+
+def _wkv_chunk_matrix(r, k, v, logw, u, s0, chunk: int = 32):
+    """Chunked matrix-form WKV: O(T/C) state writes instead of O(T).
+
+    Within a chunk, unrolling S_t = diag(w_t) S_{t-1} + k_t^T v_t gives
+
+        y_t = (r_t ∘ e^{L_{t-1}}) S_0
+              + Σ_{s<t} [(r_t ∘ e^{L_{t-1}-L_s}) · k_s] v_s
+              + (r_t ∘ u ∘ k_t) · v_t v_t-row
+
+    with L_t = Σ_{s<=t} log w_s (per channel, <= 0).  Factoring the decay
+    as e^{L_{t-1}-L_ref} · e^{L_ref-L_s} (L_ref = mid-chunk) keeps every
+    f32 exponent below ~44 for chunks of 32 even at the strongest decays,
+    and turns the inner sums into (C,C)/(C,N) MXU matmuls.  This replaces
+    the per-step scan whose state writes made rwkv6 train_4k 288x more
+    memory- than compute-bound (EXPERIMENTS.md §Perf rwkv iteration 1).
+
+    r/k/v/logw: (B, Tc, H, N) f32 for ONE chunk (Tc == chunk);
+    s0: (B, H, N, N).  Returns (y (B, Tc, H, N), s_chunk_end).
+    """
+    b, c, h, n = r.shape
+    L = jnp.cumsum(logw, axis=1)                     # (B, C, H, N), <= 0
+    L_prev = L - logw                                # L_{t-1}, with L_0 = 0
+    l_ref = L[:, c // 2]                             # (B, H, N)
+
+    r_dec = r * jnp.exp(L_prev - l_ref[:, None])     # e^{L_{t-1}-L_ref}
+    k_dec = k * jnp.exp(l_ref[:, None] - L)          # e^{L_ref-L_s}
+
+    # strict-lower-triangular cross terms: A[t,s] = r_dec_t . k_dec_s
+    a = jnp.einsum("bthn,bshn->bhts", r_dec, k_dec)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    a = jnp.where(mask[None, None], a, 0.0)
+    y = jnp.einsum("bhts,bshn->bthn", a, v)
+
+    # initial-state term and same-step bonus
+    y += jnp.einsum("bthn,bhnm->bthm", r * jnp.exp(L_prev), s0)
+    diag = jnp.einsum("bthn,bthn->bth", r * u[None, None], k)
+    y += diag[..., None] * v
+
+    # chunk-end state: S_C = diag(e^{L_C}) S_0 + Σ_s (k_s ∘ e^{L_C-L_s})^T v_s
+    l_end = L[:, -1]                                 # (B, H, N)
+    k_end = k * jnp.exp(l_end[:, None] - L)
+    s_new = jnp.exp(l_end)[..., None] * s0 + jnp.einsum(
+        "bshn,bshm->bhnm", k_end, v
+    )
+    return y, s_new
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Sequential WKV recurrence over a chunk.
+
+    r/k/v/w: (B, T, H, N) (w already the decay multiplier in (0,1));
+    u: (H, N); s0: (B, H, N, N).  Returns (y (B,T,H,N), s_final).
+    """
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B, H, N) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)          # outer product
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, y
+
+    rT, kT, vT, wT = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_fin, yT = jax.lax.scan(step, s0, (rT, kT, vT, wT))
+    return jnp.moveaxis(yT, 0, 1), s_fin
+
+
+def time_mix(
+    p: Params, x: Array, state: RwkvState, cfg: ModelConfig
+) -> Tuple[Array, RwkvState]:
+    """x: (B, T, D) -> (y, new_state).  Works for T == 1 (decode) too."""
+    b, t, d = x.shape
+    h, n = cfg.rwkv_heads, cfg.rwkv_head_size
+
+    prev = jnp.concatenate([state.shift_tm[:, None].astype(x.dtype), x[:, :-1]], 1)
+    sx = prev - x
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + sx * mu[i] for i in range(5))
+
+    # un-shard the FSDP dim of the small square projections before use:
+    # an 8 MB weight gather beats the (B,T,D) f32 partial-sum all-reduce
+    # XLA otherwise emits (EXPERIMENTS.md §Perf rwkv iteration 2).
+    # Skip at decode (t == 1): gathering weights for one token loses.
+    def gw(w):
+        return constrain(w, None, "model") if t > 1 else w
+
+    r = constrain((xr @ gw(p["wr"])).reshape(b, t, h, n), "batch", None, "model", None).astype(jnp.float32)
+    k = constrain((xk @ gw(p["wk"])).reshape(b, t, h, n), "batch", None, "model", None).astype(jnp.float32)
+    v = constrain((xv @ gw(p["wv"])).reshape(b, t, h, n), "batch", None, "model", None).astype(jnp.float32)
+    # g must share y's head sharding (D = H*N, head-major) or the gated
+    # product reshards (B,T,D) f32 per layer (§Perf rwkv iteration 3)
+    g = jax.nn.silu(constrain(xg @ gw(p["wg"]), "batch", None, "model"))
+
+    # data-dependent decay (log-domain: log w = -exp(w0 + lora) <= 0)
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["wa"].astype(jnp.float32))
+    logw = (-jnp.exp(p["w0"] + dd @ p["wb"].astype(jnp.float32))).reshape(
+        b, t, h, n
+    )
+
+    mat_chunk = 32
+    if t % mat_chunk == 0 and t > mat_chunk:
+        # chunked matrix form (training/prefill): MXU matmuls, state
+        # written once per chunk (EXPERIMENTS.md §Perf rwkv iteration 1)
+        nchunk = t // mat_chunk
+
+        def chunk_body(s, inp):
+            rc, kc, vc, lwc = inp
+            y, s_new = _wkv_chunk_matrix(rc, kc, vc, lwc, p["u"], s, mat_chunk)
+            return s_new, y
+
+        chunk_body = jax.checkpoint(chunk_body)
+        split = lambda a: jnp.moveaxis(
+            a.reshape(b, nchunk, mat_chunk, h, n), 1, 0
+        )
+        s_fin, ys = jax.lax.scan(
+            chunk_body, state.wkv, tuple(map(split, (r, k, v, logw)))
+        )
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, n)
+    else:
+        y, s_fin = _wkv_scan(r, k, v, jnp.exp(logw), p["u"], state.wkv)
+
+    y = constrain(y.reshape(b, t, d), "batch", None, "model")
+    y = apply_norm(p["ln_x"], y.astype(x.dtype), "layernorm")
+    # gated output in model dtype: bf16 partials halve the row-parallel
+    # all-reduce on TPU (f32 was explicit here before)
+    out = ((y * g.astype(x.dtype)) @ p["wo"]).astype(x.dtype)
+    out = constrain(out, "batch", None, None)
+    new_state = RwkvState(
+        wkv=s_fin, shift_tm=x[:, -1], shift_cm=state.shift_cm
+    )
+    return out, new_state
+
+
+def channel_mix(
+    p: Params, x: Array, state: RwkvState, cfg: ModelConfig
+) -> Tuple[Array, RwkvState]:
+    prev = jnp.concatenate([state.shift_cm[:, None].astype(x.dtype), x[:, :-1]], 1)
+    sx = prev - x
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x + sx * mu[0]
+    xr = x + sx * mu[1]
+    gw = (lambda w, *s: constrain(w, *s)) if x.shape[1] > 1 else (lambda w, *s: w)
+    k = jnp.square(jax.nn.relu(xk @ gw(p["cm_k"], None, "model")))
+    r = jax.nn.sigmoid(xr @ gw(p["cm_r"], None, "model"))
+    out = r * (k @ gw(p["cm_v"], "model", None))
+    return out.astype(x.dtype), state._replace(shift_cm=x[:, -1])
+
+
+def rwkv_block(
+    p: Params,
+    ln1: Params,
+    ln2: Params,
+    x: Array,
+    state: RwkvState,
+    cfg: ModelConfig,
+) -> Tuple[Array, RwkvState]:
+    """Full RWKV layer: x + TimeMix(LN(x)); x + ChannelMix(LN(x))."""
+    h1, state = time_mix(p, apply_norm(ln1, x, cfg.norm), state, cfg)
+    x = x + h1
+    h2, state = channel_mix(p, apply_norm(ln2, x, cfg.norm), state, cfg)
+    return x + h2, state

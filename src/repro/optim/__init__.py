@@ -1,0 +1,24 @@
+"""Optimizers — minimal pytree-based substrate (no optax dependency)."""
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    sgd,
+    cosine_schedule,
+    warmup_cosine_schedule,
+)
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "sgd",
+    "cosine_schedule",
+    "warmup_cosine_schedule",
+]

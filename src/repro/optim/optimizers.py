@@ -1,0 +1,145 @@
+"""Pytree optimizers: SGD(+momentum) and AdamW, plus LR schedules.
+
+API mirrors the (init, update) pair convention:
+
+    opt = adamw(3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All states are pytrees of arrays => they shard/jit/scan transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+Schedule = Callable[[jax.Array], jax.Array]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, OptState, Optional[Params]], Tuple[Params, OptState]]
+
+
+def _lr_at(lr: ScalarOrSchedule, count: jax.Array) -> jax.Array:
+    if callable(lr):
+        return lr(count)
+    return jnp.asarray(lr, jnp.float32)
+
+
+class SgdState(NamedTuple):
+    count: jax.Array
+    momentum: Optional[Params]
+
+
+def sgd(lr: ScalarOrSchedule, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return SgdState(count=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params=None):
+        del params
+        step_lr = _lr_at(lr, state.count)
+        if momentum:
+            new_mom = jax.tree.map(
+                lambda m, g: momentum * m + g, state.momentum, grads
+            )
+            if nesterov:
+                upd = jax.tree.map(lambda m, g: momentum * m + g, new_mom, grads)
+            else:
+                upd = new_mom
+        else:
+            new_mom, upd = None, grads
+        updates = jax.tree.map(lambda u: -step_lr * u, upd)
+        return updates, SgdState(count=state.count + 1, momentum=new_mom)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: Params
+    nu: Params
+
+
+def adamw(
+    lr: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(jnp.zeros_like, params),
+            nu=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        step_lr = _lr_at(lr, state.count)
+
+        def upd(m, v, p):
+            adam = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay and p is not None:
+                adam = adam + weight_decay * p
+            return -step_lr * adam
+
+        if weight_decay and params is not None:
+            updates = jax.tree.map(upd, mu, nu, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        return updates, AdamWState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Params:
+    norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(tree)))
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def sched(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+
+    return sched
+
+
+def warmup_cosine_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+) -> Schedule:
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def sched(count):
+        count = count.astype(jnp.float32)
+        warm = base_lr * count / max(warmup_steps, 1)
+        return jnp.where(count < warmup_steps, warm, cos(count - warmup_steps))
+
+    return sched

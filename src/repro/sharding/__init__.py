@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    batch_axes,
+    batch_spec,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+    spec_for_param,
+)
+
+__all__ = [
+    "batch_axes",
+    "batch_spec",
+    "cache_shardings",
+    "opt_state_shardings",
+    "param_shardings",
+    "spec_for_param",
+]

@@ -1,0 +1,84 @@
+"""Activation sharding constraints that no-op outside a mesh context.
+
+Models call ``constrain(x, "batch", None, "model")`` at key points; when
+tracing inside ``with mesh:`` this pins GSPMD's propagation (preventing the
+classic batch-replication blowups in loss scans), and when running on a
+single host device it is a no-op — the same model code serves smoke tests
+and the 512-chip dry-run.
+
+Axis vocabulary:
+  "batch" -> ("pod", "data") when the mesh has a pod axis, else ("data",)
+  "model" -> "model"
+  None    -> replicated dim
+
+Every axis is divisibility-guarded against the actual dim size.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _current_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty and am.axis_names:
+            return am
+    except Exception:
+        pass
+    return None
+
+
+def _resolve(axis, mesh, dim: int):
+    if axis is None:
+        return None
+    if axis == "batch":
+        names = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if not names:
+            return None
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        if dim % size == 0 and dim >= size:
+            return names if len(names) > 1 else names[0]
+        return None
+    if axis in mesh.axis_names:
+        size = mesh.shape[axis]
+        if dim % size == 0 and dim >= size:
+            return axis
+    return None
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint(x, spec) if a mesh is active, else x."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    if len(spec) != x.ndim:
+        raise ValueError(f"spec rank {len(spec)} != array rank {x.ndim}")
+    resolved = tuple(_resolve(a, mesh, d) for a, d in zip(spec, x.shape))
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+def constrain_either(x: jax.Array, specs: Sequence[Sequence[Optional[str]]]) -> jax.Array:
+    """Apply the first spec whose non-None axes all resolve."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    for spec in specs:
+        resolved = tuple(_resolve(a, mesh, d) for a, d in zip(spec, x.shape))
+        wanted = sum(a is not None for a in spec)
+        got = sum(a is not None for a in resolved)
+        if got == wanted and wanted > 0:
+            return jax.lax.with_sharding_constraint(x, P(*resolved))
+    return x

@@ -1,0 +1,252 @@
+"""Named-sharding rules for params, optimizer state, caches and batches.
+
+Axis conventions (see DESIGN.md):
+  "data"  — FSDP + data parallel: batch/client axis of activations, and the
+            *non-output* dimension of weight matrices (ZeRO-3 style).
+  "model" — tensor/expert parallel: attention heads, FFN hidden, vocab,
+            MoE experts (when the expert count divides the axis).
+  "pod"   — second data tier in the multi-pod mesh.
+
+Every rule is guarded by divisibility: a dimension only gets an axis if it
+divides the axis size evenly (e.g. granite-moe's vocab 49155 falls back to
+d_model sharding of the embedding's other dim).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Params = Any
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axsize(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _maybe(mesh: Mesh, axis, dim: int):
+    """Use `axis` for a dim only when it divides evenly."""
+    if axis is None:
+        return None
+    size = (
+        _axsize(mesh, axis)
+        if isinstance(axis, str)
+        else int(jnp.prod(jnp.array([_axsize(mesh, a) for a in axis])))
+    )
+    return axis if dim % size == 0 and dim >= size else None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def spec_for_param(
+    path_str: str, shape: Tuple[int, ...], mesh: Mesh, cfg: ModelConfig
+) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    m = lambda axis, dim: _maybe(mesh, axis, dim)
+    name = path_str.split("/")[-1]
+    stacked = (
+        path_str.startswith("blocks/")
+        or "enc_layers" in path_str
+        or "dec_layers" in path_str
+    )
+    base_shape = shape[1:] if stacked else shape
+
+    def done(*axes):
+        spec = (None,) + tuple(axes) if stacked else tuple(axes)
+        return P(*spec)
+
+    s = base_shape
+    # ---- moe (checked first: "wi"/"wg"/"wo" names collide with attention/mlp)
+    if "moe" in path_str.split("/"):
+        if name == "router":
+            return done(m("data", s[0]), None)
+        if name in ("wi", "wg"):              # (E, D, F)
+            if m("model", s[0]) is not None:  # expert-parallel
+                return done("model", m("data", s[1]), None)
+            return done(None, m("data", s[1]), m("model", s[2]))
+        if name == "wo":                       # (E, F, D)
+            if m("model", s[0]) is not None:
+                return done("model", None, m("data", s[2]))
+            return done(None, m("model", s[1]), m("data", s[2]))
+    # ---- embeddings ------------------------------------------------------
+    if name in ("embed", "lm_head"):
+        v_ax = m("model", s[0])
+        d_ax = m("data", s[1]) if v_ax is not None else m("model", s[1])
+        return done(v_ax, d_ax)
+    if name == "patch_proj":
+        return done(None, m("model", s[1]))
+    if name == "pos_dec":
+        return done(None, m("data", s[1]))
+    # ---- attention -------------------------------------------------------
+    if name == "wq" and len(s) == 3:
+        return done(m("data", s[0]), m("model", s[1]), None)
+    if name in ("wk", "wv") and len(s) == 3:
+        return done(m("data", s[0]), m("model", s[1]), None)
+    if name == "wo" and len(s) == 3:
+        return done(m("model", s[0]), None, m("data", s[2]))
+    # ---- dense mlp ---------------------------------------------------------
+    if name in ("wi", "wg") and len(s) == 2:
+        return done(m("data", s[0]), m("model", s[1]))
+    if name == "wo" and len(s) == 2:
+        return done(m("model", s[0]), m("data", s[1]))
+    # ---- moe ---------------------------------------------------------------
+    if name == "router":
+        return done(m("data", s[0]), None)
+    if name in ("wi", "wg") and len(s) == 3:  # (E, D, F)
+        if m("model", s[0]) is not None:      # expert-parallel
+            return done("model", m("data", s[1]), None)
+        return done(None, m("data", s[1]), m("model", s[2]))
+    if name == "wo" and len(s) == 3:          # (E, F, D)
+        if m("model", s[0]) is not None:
+            return done("model", None, m("data", s[2]))
+        return done(None, m("model", s[1]), m("data", s[2]))
+    # ---- mamba --------------------------------------------------------------
+    if name == "in_proj":
+        return done(m("data", s[0]), m("model", s[1]))
+    if name == "conv_w":
+        return done(None, m("model", s[1]))
+    if name in ("conv_b", "dt_bias", "d_skip"):
+        return done(m("model", s[0]))
+    if name == "x_proj":
+        return done(m("model", s[0]), None)
+    if name == "dt_proj":
+        return done(None, m("model", s[1]))
+    if name == "a_log":
+        return done(m("model", s[0]), None)
+    if name == "out_proj":
+        return done(m("model", s[0]), m("data", s[1]))
+    # ---- rwkv ----------------------------------------------------------------
+    if name in ("wr", "wk", "wv", "wg", "cm_r") and len(s) == 2:
+        return done(m("data", s[0]), m("model", s[1]))
+    if name in ("cm_k",):
+        return done(m("data", s[0]), m("model", s[1]))
+    if name in ("cm_v",):
+        return done(m("model", s[0]), m("data", s[1]))
+    if name == "wa":
+        return done(m("data", s[0]), None)
+    if name == "wb":
+        return done(None, m("model", s[1]))
+    if name in ("mu", "cm_mu", "w0", "u"):
+        return done(*([None] * len(s)))
+    # ---- everything else (norms, scalars) ------------------------------------
+    return done(*([None] * len(s)))
+
+
+def param_shardings(params_shape: Params, mesh: Mesh, cfg: ModelConfig) -> Params:
+    """NamedShardings for a (possibly abstract) param tree."""
+
+    def one(path, leaf):
+        spec = spec_for_param(_path_str(path), leaf.shape, mesh, cfg)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_shardings(
+    opt_state_shape: Params, params_shardings: Params, mesh: Mesh, cfg: ModelConfig
+) -> Params:
+    """Mirror param shardings for moment-like leaves, replicate scalars.
+
+    Works by shape-matching: any leaf whose path contains a param-tree
+    suffix gets the param rule applied via its own path (optimizer states
+    share the param tree structure under mu/nu/momentum).
+    """
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = spec_for_param(_path_str(path), leaf.shape, mesh, cfg)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, opt_state_shape)
+
+
+def batch_spec(mesh: Mesh, kind: str = "train") -> Any:
+    """Shardings for the step-input batch dict."""
+    ba = batch_axes(mesh)
+    bp = ba if len(ba) > 1 else ba[0]
+
+    def shard(*rest):
+        return NamedSharding(mesh, P(bp, *rest))
+
+    if kind == "train":
+        return {
+            "tokens": shard(None),
+            "labels": shard(None),
+            "client_mask": shard(),
+            # optional modality inputs use 3D specs; filled by caller
+        }
+    if kind == "prefill":
+        return {"tokens": shard(None)}
+    raise ValueError(kind)
+
+
+def cache_shardings(
+    cache_shape: Params, mesh: Mesh, cfg: ModelConfig, batch: int
+) -> Params:
+    """KV caches / recurrent states: batch over data axes when divisible,
+    heads/channels over model.  batch==1 (long_500k) replicates the batch
+    dim — the baseline; the hillclimbed variant seq-shards the cache."""
+    ba = batch_axes(mesh)
+    bsize = 1
+    for a in ba:
+        bsize *= _axsize(mesh, a)
+    bax = (ba if len(ba) > 1 else ba[0]) if batch % bsize == 0 else None
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        # leaves under "blocks" are stacked (num_superblocks, ...); whisper's
+        # "self"/"cross" caches are stacked (num_layers, ...).
+        stacked = ps.startswith("blocks") or ps.startswith(("self", "cross"))
+        s = leaf.shape[1:] if stacked else leaf.shape
+        f32 = leaf.dtype == jnp.float32
+        if len(s) == 4 and f32 and s[2] == s[3]:
+            # rwkv wkv state (B, H, N, N): shard heads over model
+            spec = (bax, _maybe(mesh, "model", s[1]), None, None)
+        elif len(s) == 4:
+            # kv cache (B, C, KV, Dh): shard kv heads over model.  When the
+            # batch cannot shard the data axes (long_500k: B=1), shard the
+            # cache *sequence* over data instead — context-parallel decode:
+            # GSPMD turns the softmax over the sharded length into three
+            # small all-reduces and each device streams 1/16th of the
+            # cache (beyond-paper; EXPERIMENTS.md §Perf long_500k).
+            seq_ax = None
+            if bax is None:
+                ba2 = ba if len(ba) > 1 else ba[0]
+                seq_ax = ba2 if s[1] % bsize == 0 else None
+            spec = (bax, seq_ax, _maybe(mesh, "model", s[2]), None)
+        elif len(s) == 3:
+            # mamba ssm (B, Di, Ds) or conv (B, Kc-1, Di): shard the
+            # d_inner dim (whichever divides) over model
+            if _maybe(mesh, "model", s[1]) is not None:
+                spec = (bax, "model", None)
+            else:
+                spec = (bax, None, _maybe(mesh, "model", s[2]))
+        elif len(s) == 2:
+            # rwkv shift states (B, D)
+            spec = (bax, _maybe(mesh, "model", s[1]))
+        else:
+            spec = tuple(None for _ in s)
+        if stacked:
+            spec = (None,) + spec
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

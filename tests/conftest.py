@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single host CPU device (the dry-run is a separate
+# process with its own XLA_FLAGS — never set device-count flags here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -1,0 +1,100 @@
+"""P4 solver: optimality vs scipy, KKT structure, Proposition 1."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from scipy.optimize import minimize
+
+from repro.core.bandwidth import solve_p4
+from repro.core.energy import RadioParams, f_shannon
+
+RADIO = RadioParams()
+
+
+def scipy_p4(rho, delta, radio, x0=None):
+    """Reference convex solve of P4 via SLSQP."""
+    n = len(rho)
+    beta = radio.beta
+
+    def obj(b):
+        return float(
+            np.sum(rho * np.asarray(f_shannon(jnp.asarray(b), beta)))
+        )
+
+    cons = [{"type": "eq", "fun": lambda b: np.sum(b) - delta}]
+    bounds = [(radio.b_min, delta)] * n
+    if x0 is None:
+        x0 = np.full(n, delta / n)
+    res = minimize(obj, x0, bounds=bounds, constraints=cons, method="SLSQP",
+                   options={"maxiter": 300, "ftol": 1e-12})
+    return res.x, res.fun
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    seed=st.integers(0, 10_000),
+)
+def test_p4_matches_scipy(n, seed):
+    rng = np.random.default_rng(seed)
+    rho = rng.uniform(0.1, 100.0, size=n).astype(np.float32)
+    delta = float(rng.uniform(n * RADIO.b_min + 0.01, 1.0))
+    K = 8
+    rho_full = np.zeros(K, np.float32)
+    rho_full[:n] = rho
+    mask = np.zeros(K, bool)
+    mask[:n] = True
+
+    b, cost = solve_p4(jnp.asarray(rho_full), jnp.asarray(mask), jnp.asarray(delta), RADIO)
+    b = np.asarray(b)
+    assert np.sum(b[mask]) == pytest.approx(delta, abs=1e-5)
+    assert np.all(b[mask] >= RADIO.b_min - 1e-6)
+    assert np.all(b[~mask] == 0)
+
+    _, ref_cost = scipy_p4(rho, delta, RADIO, x0=b[mask])
+    ours = float(np.sum(rho * np.asarray(f_shannon(jnp.asarray(b[mask]), RADIO.beta))))
+    # ours must be no worse than scipy beyond tolerance
+    assert ours <= ref_cost * (1 + 2e-3) + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 8))
+def test_proposition1_bandwidth_monotone_in_rho(seed, n):
+    """Prop 1: among selected clients, b* and rho*f(b*) non-decreasing in rho."""
+    rng = np.random.default_rng(seed)
+    rho = np.sort(rng.uniform(0.5, 50.0, size=n)).astype(np.float32)
+    delta = float(min(1.0, n * RADIO.b_min + 0.4))
+    mask = np.ones(n, bool)
+    b, _ = solve_p4(jnp.asarray(rho), jnp.asarray(mask), jnp.asarray(delta), RADIO)
+    b = np.asarray(b)
+    assert np.all(np.diff(b) >= -1e-4), f"b not monotone: {b}"
+    wf = rho * np.asarray(f_shannon(jnp.asarray(np.maximum(b, RADIO.b_min)), RADIO.beta))
+    assert np.all(np.diff(wf) >= -1e-3 * np.abs(wf[:-1]) - 1e-6), f"rho*f(b) not monotone: {wf}"
+
+
+def test_p4_uniform_rho_gives_uniform_split():
+    rho = jnp.full((4,), 3.0)
+    mask = jnp.ones((4,), bool)
+    b, _ = solve_p4(rho, mask, jnp.asarray(0.8), RADIO)
+    np.testing.assert_allclose(np.asarray(b), 0.2, atol=1e-5)
+
+
+def test_p4_kkt_waterfilling():
+    """Interior clients share rho_k f'(b_k) = -lambda."""
+    from repro.core.energy import f_shannon_prime
+
+    rho = jnp.asarray([1.0, 5.0, 20.0])
+    mask = jnp.ones((3,), bool)
+    b, _ = solve_p4(rho, mask, jnp.asarray(0.9), RADIO)
+    lams = -np.asarray(rho) * np.asarray(f_shannon_prime(b, RADIO.beta))
+    interior = np.asarray(b) > RADIO.b_min * 1.01
+    if interior.sum() >= 2:
+        vals = lams[interior]
+        assert np.max(vals) - np.min(vals) <= 2e-2 * np.max(vals)
+
+
+def test_p4_empty_mask():
+    b, cost = solve_p4(jnp.zeros(4), jnp.zeros(4, bool), jnp.asarray(0.5), RADIO)
+    assert float(jnp.sum(b)) == 0.0
+    assert float(cost) == 0.0

@@ -1,0 +1,115 @@
+"""Radio physics: Lemma 1 properties + energy-model consistency."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.energy import (
+    RadioParams,
+    energy,
+    f_shannon,
+    f_shannon_prime,
+    f_shannon_second,
+    min_bandwidth_for_energy,
+    transmit_power_w_per_hz,
+)
+
+RADIO = RadioParams()  # paper §VI defaults
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    b1=st.floats(0.05, 0.99),
+    b2=st.floats(0.05, 0.99),
+    beta=st.floats(0.01, 2.0),
+)
+def test_lemma1_decreasing(b1, b2, beta):
+    lo, hi = sorted([b1, b2])
+    if hi - lo < 1e-6:
+        return
+    f_lo = float(f_shannon(jnp.asarray(lo), beta))
+    f_hi = float(f_shannon(jnp.asarray(hi), beta))
+    assert f_lo >= f_hi  # decreasing on b > 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    b1=st.floats(0.05, 0.9),
+    b2=st.floats(0.05, 0.9),
+    lam=st.floats(0.05, 0.95),
+    beta=st.floats(0.01, 2.0),
+)
+def test_lemma1_convex(b1, b2, lam, beta):
+    # domain restricted to beta/b < ~40 where the exp2 guard never clips
+    mid = lam * b1 + (1 - lam) * b2
+    f_mid = float(f_shannon(jnp.asarray(mid, jnp.float64), beta))
+    f_mix = lam * float(f_shannon(jnp.asarray(b1, jnp.float64), beta)) + (
+        1 - lam
+    ) * float(f_shannon(jnp.asarray(b2, jnp.float64), beta))
+    assert f_mid <= f_mix + 1e-4 * max(abs(f_mix), 1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.floats(0.05, 0.9), beta=st.floats(0.05, 2.0))
+def test_derivatives_match_numeric(b, beta):
+    # numeric reference in true float64 (jax default dtype is f32)
+    f64 = lambda x: x * (2.0 ** (beta / x) - 1.0)
+    eps = 1e-6 * b
+    num = (f64(b + eps) - f64(b - eps)) / (2 * eps)
+    ana = float(f_shannon_prime(jnp.asarray(b), beta))
+    assert num == pytest.approx(ana, rel=2e-2, abs=2e-3)
+    assert float(f_shannon_second(jnp.asarray(b), beta)) > 0  # convex
+
+
+def test_energy_formula_vs_shannon_inversion():
+    """E = p * bB * tau with p inverted from the rate equation (Eq. 1-2)."""
+    b, h2 = jnp.asarray(0.1), jnp.asarray(2.5e-4)
+    p = transmit_power_w_per_hz(b, h2, RADIO)
+    rate = (
+        b
+        * RADIO.bandwidth_hz
+        * jnp.log2(1 + p * h2 / RADIO.noise_w)
+    )
+    # the rate must deliver L bits within the deadline
+    assert float(rate * RADIO.deadline_s) == pytest.approx(
+        RADIO.model_bits, rel=1e-4
+    )
+    e = energy(b, h2, RADIO)
+    assert float(e) == pytest.approx(
+        float(p * b * RADIO.bandwidth_hz * RADIO.deadline_s), rel=1e-5
+    )
+
+
+def test_energy_zero_when_unselected():
+    e = energy(jnp.asarray(0.5), jnp.asarray(1e-4), RADIO, a=jnp.asarray(0))
+    assert float(e) == 0.0
+    assert float(energy(jnp.asarray(0.0), jnp.asarray(1e-4), RADIO)) == 0.0
+
+
+def test_energy_decreasing_in_bandwidth():
+    bs = jnp.linspace(0.02, 1.0, 50)
+    es = energy(bs, jnp.asarray(2.5e-4), RADIO)
+    assert bool(jnp.all(jnp.diff(es) <= 1e-9))
+
+
+def test_min_bandwidth_for_energy():
+    h2 = jnp.asarray([2.5e-4, 1e-4, 1e-6])
+    budget = jnp.asarray(5e-4)
+    b = min_bandwidth_for_energy(budget, h2, RADIO)
+    for bi, hi in zip(np.asarray(b), np.asarray(h2)):
+        if np.isfinite(bi):
+            assert float(energy(jnp.asarray(bi), jnp.asarray(hi), RADIO)) <= 5e-4 * 1.01
+            # minimality: 2% less bandwidth (if above b_min) must violate
+            if bi > RADIO.b_min * 1.05:
+                assert (
+                    float(energy(jnp.asarray(bi * 0.98), jnp.asarray(hi), RADIO))
+                    > 5e-4 * 0.999
+                )
+
+
+def test_model_bits_scaling():
+    big = RADIO.with_model_bits(RADIO.model_bits * 10)
+    assert float(energy(jnp.asarray(0.5), jnp.asarray(2.5e-4), big)) > float(
+        energy(jnp.asarray(0.5), jnp.asarray(2.5e-4), RADIO)
+    )

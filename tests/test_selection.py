@@ -1,0 +1,106 @@
+"""OCEAN-P: exact optimality vs brute force (Theorem 1) + structure."""
+import itertools
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.bandwidth import solve_p4
+from repro.core.energy import RadioParams, f_shannon
+from repro.core.selection import ocean_p, p3_value, priorities
+
+RADIO = RadioParams()
+
+
+def brute_force_p3(q, h2, v, eta, radio):
+    """Enumerate all 2^K subsets; bandwidth via our convex P4 (exact)."""
+    K = len(q)
+    rho = np.asarray(priorities(jnp.asarray(q), jnp.asarray(h2)))
+    best_val, best_set = 0.0, ()
+    for r in range(0, K + 1):
+        for subset in itertools.combinations(range(K), r):
+            mask = np.zeros(K, bool)
+            mask[list(subset)] = True
+            if r == 0:
+                val = 0.0
+            else:
+                # S0 members (rho=0) pinned at b_min; rest waterfilled
+                s0 = mask & (rho <= 1e-30)
+                rest = mask & ~s0
+                delta = 1.0 - s0.sum() * radio.b_min
+                if rest.sum() > 0:
+                    b, cost = solve_p4(
+                        jnp.asarray(rho), jnp.asarray(rest), jnp.asarray(delta), radio
+                    )
+                    val = v * eta * r - radio.energy_scale * float(cost)
+                else:
+                    val = v * eta * r
+            if val > best_val + 1e-12:
+                best_val, best_set = val, subset
+    return best_val, best_set
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 5))
+def test_oceanp_matches_bruteforce(seed, k):
+    rng = np.random.default_rng(seed)
+    q = rng.uniform(0, 0.2, size=k).astype(np.float32)
+    q[rng.random(k) < 0.3] = 0.0  # some zero queues
+    h2 = (2.5e-4 * rng.exponential(size=k)).astype(np.float32)
+    v, eta = 1e-5, 1.0
+
+    sol = ocean_p(jnp.asarray(q), jnp.asarray(h2), jnp.asarray(v), jnp.asarray(eta), RADIO)
+    ours = float(sol.objective)
+    ref, ref_set = brute_force_p3(q, h2, v, eta, RADIO)
+    assert ours >= ref - max(1e-6, 5e-3 * abs(ref))
+    # and the returned (a, b) must actually achieve the claimed value
+    achieved = float(
+        p3_value(sol.a, sol.b, jnp.asarray(q), jnp.asarray(h2), v, eta, RADIO)
+    )
+    assert achieved == pytest.approx(ours, rel=1e-3, abs=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_thresholding_structure(seed):
+    """Thm 1: selected clients form a prefix of the rho-sorted order."""
+    rng = np.random.default_rng(seed)
+    k = 8
+    q = rng.uniform(0, 0.3, size=k).astype(np.float32)
+    h2 = (2.5e-4 * rng.exponential(size=k)).astype(np.float32)
+    sol = ocean_p(jnp.asarray(q), jnp.asarray(h2), jnp.asarray(2e-5), jnp.asarray(1.0), RADIO)
+    rho = np.asarray(sol.rho)
+    a = np.asarray(sol.a)
+    if a.any() and (~a).any():
+        assert rho[a].max() <= rho[~a].min() + 1e-9
+
+
+def test_zero_queues_select_everyone():
+    k = 6
+    sol = ocean_p(
+        jnp.zeros(k), jnp.full((k,), 2.5e-4), jnp.asarray(1e-5), jnp.asarray(1.0), RADIO
+    )
+    assert int(sol.num_selected) == k
+    assert float(jnp.sum(sol.b)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_bandwidth_sums_to_one_when_any_selected():
+    rng = np.random.default_rng(0)
+    q = rng.uniform(0, 0.1, 10).astype(np.float32)
+    h2 = (2.5e-4 * rng.exponential(size=10)).astype(np.float32)
+    sol = ocean_p(jnp.asarray(q), jnp.asarray(h2), jnp.asarray(1e-4), jnp.asarray(1.0), RADIO)
+    if int(sol.num_selected) > 0:
+        assert float(jnp.sum(sol.b)) == pytest.approx(1.0, abs=1e-4)
+        assert float(jnp.min(jnp.where(sol.a, sol.b, 1.0))) >= RADIO.b_min - 1e-6
+
+
+def test_huge_v_selects_everyone_tiny_v_selects_s0_only():
+    rng = np.random.default_rng(3)
+    q = rng.uniform(0.01, 0.1, 8).astype(np.float32)  # all positive queues
+    h2 = (2.5e-4 * rng.exponential(size=8)).astype(np.float32)
+    big = ocean_p(jnp.asarray(q), jnp.asarray(h2), jnp.asarray(1e3), jnp.asarray(1.0), RADIO)
+    assert int(big.num_selected) == 8
+    tiny = ocean_p(jnp.asarray(q), jnp.asarray(h2), jnp.asarray(1e-12), jnp.asarray(1.0), RADIO)
+    assert int(tiny.num_selected) == 0

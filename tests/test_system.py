@@ -1,0 +1,85 @@
+"""End-to-end system behaviour: the full WFLN pipeline (paper §VI in miniature).
+
+channel -> OCEAN/baseline policy -> FedAvg learning -> paper-claim checks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    OceanConfig,
+    RadioParams,
+    eta_schedule,
+    scenario1_channel,
+    simulate,
+    stationary_channel,
+)
+from repro.fed import synthetic_image_classification
+from repro.fed.loop import (
+    WflnExperiment,
+    make_classification_task,
+    ocean_trace,
+    policy_trace,
+)
+
+T, K = 80, 8
+RADIO = RadioParams()
+CFG = OceanConfig(num_clients=K, num_rounds=T, radio=RADIO, energy_budget_j=0.15 * T / 300)
+KEY = jax.random.PRNGKey(0)
+H2 = stationary_channel(K).sample(KEY, T)
+
+
+@pytest.fixture(scope="module")
+def experiment():
+    ds = synthetic_image_classification(
+        KEY, num_clients=K, samples_per_client=60, dim=16, noise=1.0
+    )
+    task = make_classification_task(16, 10, 10)
+    return WflnExperiment(task=task, dataset=ds, lr=0.1, local_steps=3)
+
+
+def test_ocean_end_to_end_learns(experiment):
+    tr = ocean_trace(CFG, H2, eta_schedule("ascend", T), 1e-5)
+    hist = experiment.run(jax.random.PRNGKey(1), tr)
+    assert float(hist["test_accuracy"][-1]) > 0.5
+    assert float(hist["test_loss"][-1]) < float(hist["test_loss"][0])
+
+
+def test_ocean_energy_near_budget():
+    final, decs = simulate(CFG, H2, eta_schedule("uniform", T), 1e-5)
+    spent = np.asarray(final.energy_spent)
+    budget = float(CFG.budgets()[0])
+    # soft constraint: within 2x budget and above SMO-style starvation
+    assert spent.max() <= 2.0 * budget
+    assert np.asarray(decs.num_selected).mean() > 1.0
+
+
+def test_ocean_beats_smo_in_selection():
+    """Paper Fig 5: OCEAN selects far more clients than SMO."""
+    tr_ocean = policy_trace("ocean-u", CFG, H2, v=1e-5)
+    tr_smo = policy_trace("smo", CFG, H2)
+    assert float(tr_ocean.num_selected.mean()) > float(tr_smo.num_selected.mean())
+
+
+def test_scenario1_amo_starves_ocean_adapts():
+    """Paper Fig 10: under worsening channels AMO has an idle valley."""
+    h2_s1 = scenario1_channel(K, T).sample(jax.random.PRNGKey(9), T)
+    tr_amo = policy_trace("amo", CFG, h2_s1)
+    tr_ocean = policy_trace("ocean-u", CFG, h2_s1, v=1e-5)
+    mid = slice(T // 3, 2 * T // 3)
+    amo_mid = float(tr_amo.num_selected[mid].mean())
+    ocean_mid = float(tr_ocean.num_selected[mid].mean())
+    assert ocean_mid > amo_mid
+
+
+def test_policy_traces_have_consistent_shapes():
+    for name in ("ocean-a", "ocean-d", "ocean-u", "smo", "amo", "select_all"):
+        tr = policy_trace(name, CFG, H2, v=1e-5, key=KEY)
+        assert tr.a.shape == (T, K)
+        assert tr.b.shape == (T, K)
+        # bandwidth feasibility everywhere
+        assert float(tr.b.sum(-1).max()) <= 1.0 + 1e-4
+        ok = np.asarray(tr.b)[np.asarray(tr.a, bool)]
+        if ok.size:
+            assert ok.min() >= RADIO.b_min - 1e-6
