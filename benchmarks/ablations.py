@@ -6,32 +6,30 @@
 2. Frame structure R < T with a per-frame V_m schedule (paper Alg. 1
    supports it; experiments use R = T): queue resets trade energy
    smoothness for responsiveness.
+
+Both ablations are expressed as Scenario specs driven through the grid
+engine — heterogeneous budgets and frame structure are scenario fields.
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from benchmarks.common import T, K, claim, emit, ocean_cfg, sample_channel
-from repro.core import OceanConfig, RadioParams, eta_schedule, simulate
+from benchmarks.common import T, K, V_DEFAULT, claim, emit, paper_scenario
+from repro.core import PolicyParams
+from repro.sim import run_grid
 
 
 def run() -> bool:
     ok = True
-    h2 = sample_channel(9)
-    eta = eta_schedule("uniform", T)
 
     # --- heterogeneous budgets -------------------------------------------
     budgets = np.full(K, 0.15, np.float32)
     budgets[:3] = 0.05   # energy-poor clients
     budgets[-3:] = 0.45  # energy-rich clients
-    cfg = OceanConfig(
-        num_clients=K, num_rounds=T, radio=RadioParams(),
-        energy_budget_j=budgets,  # type: ignore[arg-type]
-    )
-    final, decs = simulate(cfg, h2, eta, 1e-5)
-    freq = np.asarray(decs.a).mean(axis=0)
-    spent = np.asarray(final.energy_spent)
+    sc_hetero = paper_scenario("hetero_budget", H=tuple(float(h) for h in budgets))
+    res = run_grid([sc_hetero], [("ocean", PolicyParams(v=V_DEFAULT))], seeds=[9])
+    freq = np.asarray(res.a[0, 0, 0]).mean(axis=0)
+    spent = np.asarray(res.energy_spent[0, 0, 0])
     emit("ablation_hetero_budget", "poor_clients_selected", freq[:3].mean())
     emit("ablation_hetero_budget", "mid_clients_selected", freq[3:7].mean())
     emit("ablation_hetero_budget", "rich_clients_selected", freq[-3:].mean())
@@ -58,13 +56,10 @@ def run() -> bool:
     )
 
     # --- frames R < T with ascending V_m ----------------------------------
-    cfg_frames = OceanConfig(
-        num_clients=K, num_rounds=T, radio=RadioParams(),
-        energy_budget_j=0.15, frame_len=T // 3,
-    )
+    sc_frames = paper_scenario("frames", R=T // 3)
     v_seq = np.asarray([0.5e-5, 1e-5, 2e-5], np.float32)
-    final_f, decs_f = simulate(cfg_frames, h2, eta, v_seq)
-    ns = np.asarray(decs_f.num_selected)
+    res_f = run_grid([sc_frames], [("ocean", PolicyParams(v=v_seq))], seeds=[9])
+    ns = np.asarray(res_f.num_selected[0, 0, 0])
     for m in range(3):
         emit(
             "ablation_frames",
@@ -72,7 +67,11 @@ def run() -> bool:
             ns[m * (T // 3) : (m + 1) * (T // 3)].mean(),
             f"V_m={v_seq[m]:g}",
         )
-    emit("ablation_frames", "energy_mean_j", np.asarray(final_f.energy_spent).mean())
+    emit(
+        "ablation_frames",
+        "energy_mean_j",
+        np.asarray(res_f.energy_spent[0, 0, 0]).mean(),
+    )
     ok &= claim(
         "ablation_frames",
         "per-frame V_m schedule shapes selection across frames",

@@ -1,4 +1,10 @@
-"""Shared setup for the paper-figure benchmarks (§VI configuration)."""
+"""Shared setup for the paper-figure benchmarks (§VI configuration).
+
+The canonical §VI settings live in ``Scenario`` specs (see
+``repro.core.scenario``); the legacy ``ocean_cfg``/``sample_channel``
+helpers derive from them so single-cell and grid paths share one source
+of truth.
+"""
 from __future__ import annotations
 
 import time
@@ -7,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OceanConfig, RadioParams, stationary_channel
+from repro.core import OceanConfig, RadioParams, Scenario
 from repro.fed import synthetic_image_classification
 from repro.fed.loop import WflnExperiment, make_classification_task
 
@@ -24,14 +30,40 @@ T, K = 300, 10
 V_DEFAULT = 1e-5
 
 
-def ocean_cfg(T_=T, K_=K, H=0.15, R=None) -> OceanConfig:
-    return OceanConfig(
-        num_clients=K_, num_rounds=T_, radio=RADIO, energy_budget_j=H, frame_len=R
+def paper_scenario(
+    name: str = "stationary",
+    *,
+    T_: int = T,
+    K_: int = K,
+    H=0.15,
+    eta: str = "uniform",
+    R=None,
+    pathloss=(36.0, 36.0),
+) -> Scenario:
+    """A §VI scenario with the benchmark radio constants baked in."""
+    return Scenario(
+        name=name,
+        num_clients=K_,
+        num_rounds=T_,
+        pathloss_db=pathloss,
+        radio=RADIO,
+        energy_budget_j=H,
+        eta=eta,
+        frame_len=R,
     )
 
 
+SCENARIO_STATIONARY = paper_scenario("stationary")
+SCENARIO_DRIFT_AWAY = paper_scenario("scenario1", pathloss=(32.0, 45.0))
+SCENARIO_DRIFT_TOWARD = paper_scenario("scenario2", pathloss=(45.0, 32.0))
+
+
+def ocean_cfg(T_=T, K_=K, H=0.15, R=None) -> OceanConfig:
+    return paper_scenario(T_=T_, K_=K_, H=H, R=R).ocean_config()
+
+
 def sample_channel(seed=0, T_=T, K_=K):
-    return stationary_channel(K_).sample(jax.random.PRNGKey(seed), T_)
+    return paper_scenario(T_=T_, K_=K_).sample_channel(int(seed))
 
 
 def image_experiment(seed=0, dim=32):
@@ -59,12 +91,18 @@ class Timer:
         self.elapsed = time.time() - self.t0
 
 
+# Every emit() row is also collected here so the driver can dump
+# machine-readable BENCH_*.json files alongside the CSV stream.
+ROWS: list = []
+
+
 def emit(bench: str, metric: str, value, note: str = ""):
     """CSV row: benchmark,metric,value,note."""
     if isinstance(value, (jnp.ndarray, np.ndarray)):
         value = float(value)
     if isinstance(value, float):
         value = f"{value:.6g}"
+    ROWS.append({"benchmark": bench, "metric": metric, "value": value, "note": note})
     print(f"{bench},{metric},{value},{note}", flush=True)
 
 

@@ -1,27 +1,32 @@
 """Paper Fig 7: per-client total energy after 300 rounds, per policy.
 
 Select-All blows far past the 0.15 J budget, SMO under-utilizes, AMO and
-OCEAN-a land close to the budget.
+OCEAN-a land close to the budget.  One grid run covers all four policies.
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from benchmarks.common import V_DEFAULT, claim, emit, ocean_cfg, sample_channel
-from repro.fed.loop import policy_trace
+from benchmarks.common import SCENARIO_STATIONARY, V_DEFAULT, claim, emit
+from repro.core import PolicyParams
+from repro.sim import run_grid
+
+POLICIES = ("select_all", "smo", "amo", "ocean-a")
 
 
 def run() -> bool:
-    cfg = ocean_cfg()
-    h2 = sample_channel(1)
     ok = True
     budget = 0.15
-    spent = {}
-    for name in ("select_all", "smo", "amo", "ocean-a"):
-        tr = policy_trace(name, cfg, h2, v=V_DEFAULT, key=jax.random.PRNGKey(1))
-        e = np.asarray(tr.e.sum(0))
-        spent[name] = e
+    res = run_grid(
+        [SCENARIO_STATIONARY],
+        [(name, PolicyParams(v=V_DEFAULT)) for name in POLICIES],
+        seeds=[1],
+    )
+    spent = {
+        name: np.asarray(res.energy_spent[p, 0, 0])
+        for p, name in enumerate(POLICIES)
+    }
+    for name, e in spent.items():
         emit("fig7_energy", f"{name}_mean_energy_j", e.mean(), f"budget={budget}")
         emit("fig7_energy", f"{name}_max_energy_j", e.max())
 

@@ -1,7 +1,8 @@
 """Paper Figs 8-9: FL loss/accuracy when policies drive FedAvg.
 
 Select-All (energy-oblivious ideal) best; OCEAN-a comparable to AMO and
-close to Select-All; SMO considerably worse.
+close to Select-All; SMO considerably worse.  The whole (policy x seed)
+grid — traces AND FedAvg trajectories — is one compiled engine run.
 """
 from __future__ import annotations
 
@@ -10,36 +11,46 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (
+    SCENARIO_STATIONARY,
     Timer,
     V_DEFAULT,
     claim,
     emit,
     image_experiment,
-    ocean_cfg,
-    sample_channel,
 )
-from repro.fed.loop import policy_trace
+from repro.core import PolicyParams
+from repro.sim import run_grid
 
 SEEDS = 6
+POLICIES = ("select_all", "smo", "amo", "ocean-a")
 
 
 def run() -> bool:
-    cfg = ocean_cfg()
     exp = image_experiment()
     ok = True
-    finals = {}
     with Timer() as t:
-        for name in ("select_all", "smo", "amo", "ocean-a"):
-            accs, losses = [], []
-            for seed in range(SEEDS):
-                h2 = sample_channel(seed + 3)
-                tr = policy_trace(name, cfg, h2, v=V_DEFAULT, key=jax.random.PRNGKey(seed))
-                hist = jax.jit(exp.run)(jax.random.PRNGKey(100 + seed), tr)
-                accs.append(float(hist["test_accuracy"][-1]))
-                losses.append(float(hist["test_loss"][-1]))
-            finals[name] = (np.mean(losses), np.mean(accs))
-            emit("fig8_9_learning", f"{name}_final_loss", finals[name][0])
-            emit("fig8_9_learning", f"{name}_final_accuracy", finals[name][1])
+        # Same realizations as the legacy per-run path: channel seeds 3..8,
+        # learning keys PRNGKey(100 + seed).
+        learn_keys = jnp.stack(
+            [jax.random.PRNGKey(100 + s) for s in range(SEEDS)]
+        )[None]
+        res = run_grid(
+            [SCENARIO_STATIONARY],
+            [(name, PolicyParams(v=V_DEFAULT)) for name in POLICIES],
+            seeds=range(3, 3 + SEEDS),
+            experiment=exp,
+            learn_keys=learn_keys,
+        )
+        finals = {
+            name: (
+                float(np.asarray(res.history["test_loss"][p, 0, :, -1]).mean()),
+                float(np.asarray(res.history["test_accuracy"][p, 0, :, -1]).mean()),
+            )
+            for p, name in enumerate(POLICIES)
+        }
+        for name, (loss, acc) in finals.items():
+            emit("fig8_9_learning", f"{name}_final_loss", loss)
+            emit("fig8_9_learning", f"{name}_final_accuracy", acc)
     emit("fig8_9_learning", "runtime_s", t.elapsed)
 
     ok &= claim(

@@ -3,17 +3,24 @@
 Each module's ``run()`` prints ``benchmark,metric,value,note`` CSV rows,
 validates the paper's claims (CLAIM rows), and returns overall success.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig16_tradeoff]
+    PYTHONPATH=src python -m benchmarks.run [--only fig16] [--json-dir results]
+
+``--json-dir`` additionally writes one machine-readable
+``BENCH_<module>.json`` per module (the same rows as the CSV stream).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
 from benchmarks import (
     ablations,
+    common,
     energy_consumption,
+    grid_scaling,
     learning_performance,
     roofline,
     scenarios,
@@ -32,6 +39,7 @@ BENCHMARKS = {
     "fig15_structure": structure.run,
     "fig16_tradeoff": tradeoff.run,
     "ablations_beyond_paper": ablations.run,
+    "grid_scaling": grid_scaling.run,
     "roofline": roofline.run,
 }
 
@@ -39,13 +47,28 @@ BENCHMARKS = {
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument(
+        "--json-dir",
+        default=None,
+        help="also write BENCH_<module>.json row dumps into this directory",
+    )
     args = ap.parse_args()
+
+    selected = [n for n in BENCHMARKS if not args.only or args.only in n]
+    if not selected:
+        print(
+            f"no benchmark matches --only {args.only!r}; "
+            f"available: {', '.join(BENCHMARKS)}",
+            file=sys.stderr,
+        )
+        return 2
 
     print("benchmark,metric,value,note")
     failures = []
     for name, fn in BENCHMARKS.items():
-        if args.only and args.only not in name:
+        if name not in selected:
             continue
+        rows_before = len(common.ROWS)
         t0 = time.time()
         try:
             ok = fn()
@@ -55,13 +78,25 @@ def main() -> int:
             traceback.print_exc()
             print(f"{name},ERROR,{type(e).__name__},{str(e)[:120]}")
             ok = False
-        print(f"{name},total_runtime_s,{time.time()-t0:.1f},")
+        elapsed = time.time() - t0
+        print(f"{name},total_runtime_s,{elapsed:.1f},")
+        if args.json_dir:
+            os.makedirs(args.json_dir, exist_ok=True)
+            payload = {
+                "benchmark": name,
+                "ok": bool(ok),
+                "runtime_s": elapsed,
+                "rows": common.ROWS[rows_before:],
+            }
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2)
         if not ok:
             failures.append(name)
     if failures:
         print(f"SUMMARY,failed,{len(failures)},{';'.join(failures)}")
         return 1
-    print(f"SUMMARY,all_passed,{len([n for n in BENCHMARKS if not args.only or args.only in n])},")
+    print(f"SUMMARY,all_passed,{len(selected)},")
     return 0
 
 

@@ -3,61 +3,69 @@
 Scenario 1 (path loss 32->45 dB): AMO starves in the middle rounds while
 OCEAN keeps selecting.  Scenario 2 (45->32 dB): AMO starts too late.
 Also reports OCEAN-a energy (Fig 14) staying near the budget in both.
+Both drift scenarios x three policies run as one compiled grid.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (
-    K,
+    SCENARIO_DRIFT_AWAY,
+    SCENARIO_DRIFT_TOWARD,
     T,
     V_DEFAULT,
     claim,
     emit,
     image_experiment,
-    ocean_cfg,
-    sample_channel,
 )
-from repro.core import scenario1_channel, scenario2_channel
-from repro.fed.loop import policy_trace
+from repro.core import PolicyParams
+from repro.sim import run_grid
+
+POLICIES = ("amo", "ocean-a", "ocean-u")
+SCENARIOS = (SCENARIO_DRIFT_AWAY, SCENARIO_DRIFT_TOWARD)
 
 
 def run() -> bool:
-    cfg = ocean_cfg()
     ok = True
     exp = image_experiment()
-    for sc_name, chan in (
-        ("scenario1", scenario1_channel(K, T)),
-        ("scenario2", scenario2_channel(K, T)),
-    ):
-        h2 = chan.sample(jax.random.PRNGKey(21), T)
-        tr_a = policy_trace("amo", cfg, h2)
-        tr_o = policy_trace("ocean-a", cfg, h2, v=V_DEFAULT)
-        tr_u = policy_trace("ocean-u", cfg, h2, v=V_DEFAULT)
-        thirds = [slice(0, T // 3), slice(T // 3, 2 * T // 3), slice(2 * T // 3, T)]
-        for nm, tr in (("amo", tr_a), ("ocean-a", tr_o)):
-            c = np.asarray(tr.num_selected)
+    # Legacy realizations: channel seed 21, learning key PRNGKey(7) per cell.
+    learn_keys = jnp.broadcast_to(jax.random.PRNGKey(7), (len(SCENARIOS), 1, 2))
+    res = run_grid(
+        list(SCENARIOS),
+        [(name, PolicyParams(v=V_DEFAULT)) for name in POLICIES],
+        seeds=[21],
+        experiment=exp,
+        learn_keys=learn_keys,
+    )
+    p_amo, p_oa, p_ou = (POLICIES.index(n) for n in ("amo", "ocean-a", "ocean-u"))
+    thirds = [slice(0, T // 3), slice(T // 3, 2 * T // 3), slice(2 * T // 3, T)]
+    for s, sc in enumerate(SCENARIOS):
+        sc_name = sc.name
+        for nm, p in (("amo", p_amo), ("ocean-a", p_oa)):
+            c = np.asarray(res.num_selected[p, s, 0])
             for i, sl in enumerate(thirds):
                 emit(f"fig10_13_{sc_name}", f"{nm}_selected_third{i}", c[sl].mean())
-            emit(f"fig10_13_{sc_name}", f"{nm}_energy_mean", np.asarray(tr.e.sum(0)).mean())
+            emit(
+                f"fig10_13_{sc_name}",
+                f"{nm}_energy_mean",
+                np.asarray(res.energy_spent[p, s, 0]).mean(),
+            )
 
         # learning outcome (Figs 11/13).  The eta variant is a knob: under
         # drifting channels the best weighting depends on the drift
         # direction, so the paper's claim is checked for the better of
         # OCEAN-a / OCEAN-u (both are "OCEAN" in the paper's sense of soft
         # long-term budgeting vs AMO's hard pre-allocation).
-        hist_a = jax.jit(exp.run)(jax.random.PRNGKey(7), tr_a)
-        hist_o = jax.jit(exp.run)(jax.random.PRNGKey(7), tr_o)
-        hist_u = jax.jit(exp.run)(jax.random.PRNGKey(7), tr_u)
-        acc_a = float(hist_a["test_accuracy"][-1])
-        acc_o = float(hist_o["test_accuracy"][-1])
-        acc_u = float(hist_u["test_accuracy"][-1])
+        acc = np.asarray(res.history["test_accuracy"][:, s, 0, -1])
+        acc_a, acc_o, acc_u = float(acc[p_amo]), float(acc[p_oa]), float(acc[p_ou])
         emit(f"fig10_13_{sc_name}", "amo_final_accuracy", acc_a)
         emit(f"fig10_13_{sc_name}", "ocean-a_final_accuracy", acc_o)
         emit(f"fig10_13_{sc_name}", "ocean-u_final_accuracy", acc_u)
 
-        ca, co = np.asarray(tr_a.num_selected), np.asarray(tr_o.num_selected)
+        ca = np.asarray(res.num_selected[p_amo, s, 0])
+        co = np.asarray(res.num_selected[p_oa, s, 0])
         ok &= claim(
             f"fig10_13_{sc_name}",
             "OCEAN selects more clients overall than AMO under drift",
@@ -68,7 +76,7 @@ def run() -> bool:
             "OCEAN (best eta variant) accuracy >= AMO under drift (Figs 11/13)",
             max(acc_o, acc_u) >= acc_a - 0.02,
         )
-        eo = np.asarray(tr_o.e.sum(0))
+        eo = np.asarray(res.energy_spent[p_oa, s, 0])
         ok &= claim(
             f"fig10_13_{sc_name}",
             "OCEAN-a energy tracks the budget under drift (Fig 14; the "
@@ -76,9 +84,7 @@ def run() -> bool:
             eo.mean() < 2.0 * 0.15,
         )
     # the signature Fig 10 starvation: AMO's middle third collapses in S1
-    h2 = scenario1_channel(K, T).sample(jax.random.PRNGKey(21), T)
-    tr_a = policy_trace("amo", cfg, h2)
-    ca = np.asarray(tr_a.num_selected)
+    ca = np.asarray(res.num_selected[p_amo, 0, 0])
     ok &= claim(
         "fig10_13_scenario1",
         "AMO starves in the middle rounds of scenario 1 (Fig 10)",

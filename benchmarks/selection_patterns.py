@@ -2,35 +2,34 @@
 
 Fig 5: Select-All(10) >> OCEAN-a > AMO > SMO in average selected clients.
 Fig 6: OCEAN-a ascending, OCEAN-d descending, OCEAN-u flat.
-Averaged over 10 channel realizations (as in the paper).
+Averaged over 10 channel realizations (as in the paper) — all policies and
+seeds run as one compiled grid.
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from benchmarks.common import K, T, V_DEFAULT, claim, emit, ocean_cfg, sample_channel
-from repro.fed.loop import policy_trace
+from benchmarks.common import K, SCENARIO_STATIONARY, V_DEFAULT, claim, emit
+from repro.core import PolicyParams
+from repro.sim import run_grid
 
 RUNS = 10
-
-
-def _avg_counts(name):
-    cfg = ocean_cfg()
-    counts = []
-    for seed in range(RUNS):
-        h2 = sample_channel(seed)
-        tr = policy_trace(name, cfg, h2, v=V_DEFAULT, key=jax.random.PRNGKey(seed))
-        counts.append(np.asarray(tr.num_selected))
-    return np.mean(np.stack(counts), axis=0)
+POLICIES = ("select_all", "smo", "amo", "ocean-a", "ocean-d", "ocean-u")
 
 
 def run() -> bool:
     ok = True
-    series = {}
-    for name in ("select_all", "smo", "amo", "ocean-a", "ocean-d", "ocean-u"):
-        c = _avg_counts(name)
-        series[name] = c
+    res = run_grid(
+        [SCENARIO_STATIONARY],
+        [(name, PolicyParams(v=V_DEFAULT)) for name in POLICIES],
+        seeds=range(RUNS),
+    )
+    # (P, 1, RUNS, T) -> per-policy mean over the channel realizations
+    series = {
+        name: np.asarray(res.num_selected[p, 0]).mean(axis=0)
+        for p, name in enumerate(POLICIES)
+    }
+    for name, c in series.items():
         emit("fig5_6_selection", f"{name}_avg", c.mean())
         emit("fig5_6_selection", f"{name}_first50", c[:50].mean())
         emit("fig5_6_selection", f"{name}_last50", c[-50:].mean())

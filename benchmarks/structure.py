@@ -10,8 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import RADIO, claim, emit
+from benchmarks.common import SCENARIO_STATIONARY, claim, emit
 from repro.core import ocean_p
+
+RADIO = SCENARIO_STATIONARY.radio  # §VI physics via the canonical Scenario spec
 
 
 def run() -> bool:

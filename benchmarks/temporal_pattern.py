@@ -13,12 +13,12 @@ import numpy as np
 
 from benchmarks.common import K, T, Timer, claim, emit
 from repro.core.patterns import COUNT_PATTERNS
+from repro.core.policy import pattern_trace
 from repro.fed import synthetic_char_text, synthetic_image_classification
 from repro.fed.loop import (
     WflnExperiment,
     make_char_lm_task,
     make_classification_task,
-    pattern_trace,
 )
 
 NUM_SEEDS = 12

@@ -1,20 +1,17 @@
 """Paper Fig 16: the [O(1/V), O(sqrt(V))] learning-energy trade-off.
 
 Sweep V: larger V => more selected clients (=> higher accuracy) and larger
-energy-budget violation; smaller V => tighter energy compliance.
+energy-budget violation; smaller V => tighter energy compliance.  The V
+axis is the *policy* axis of one compiled grid — each grid policy is
+OCEAN with a different control parameter.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (
-    V_DEFAULT,
-    claim,
-    emit,
-    ocean_cfg,
-    sample_channel,
-)
-from repro.core import eta_schedule, simulate
+from benchmarks.common import SCENARIO_STATIONARY, claim, emit
+from repro.core import PolicyParams
+from repro.sim import run_grid
 
 # V below ~1e-5 is degenerate: only zero-queue clients get selected and
 # their weighted energy term is 0 in P3, so selection ignores the channel
@@ -24,14 +21,15 @@ VS = (1e-5, 3e-5, 1e-4, 3e-4, 1e-3)
 
 
 def run() -> bool:
-    cfg = ocean_cfg()
-    h2 = sample_channel(2)
-    eta = eta_schedule("uniform", cfg.num_rounds)
+    res = run_grid(
+        [SCENARIO_STATIONARY],
+        [("ocean", PolicyParams(v=v)) for v in VS],
+        seeds=[2],
+    )
     sel, viol = [], []
-    for v in VS:
-        final, decs = simulate(cfg, h2, eta, v)
-        s = float(np.asarray(decs.num_selected).mean())
-        e = np.asarray(final.energy_spent)
+    for i, v in enumerate(VS):
+        s = float(np.asarray(res.num_selected[i, 0, 0]).mean())
+        e = np.asarray(res.energy_spent[i, 0, 0])
         vio = float(np.maximum(e - 0.15, 0).mean())
         sel.append(s)
         viol.append(vio)

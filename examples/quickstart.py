@@ -42,3 +42,20 @@ print(f"\nround {t}: priority rho = q/h^2 (low = selected first)")
 for k in np.argsort(rho):
     print(f"  client {k}: rho={rho[k]:9.3g}  selected={int(a[k])}  bandwidth={b[k]:.3f}")
 print("note: among the selected, HIGHER rho gets MORE bandwidth (Prop 1).")
+
+# Scenario-grid sweep: every (policy, scenario, seed) cell in ONE compiled
+# program — the paper's whole comparison table from a single engine run.
+from repro.core import PolicyParams, paper_scenarios  # noqa: E402
+from repro.sim import run_grid  # noqa: E402
+
+scenarios = list(paper_scenarios(num_rounds=300).values())
+res = run_grid(
+    scenarios,
+    [("ocean-a", PolicyParams(v=1e-5)), "smo", "amo"],
+    seeds=range(3),
+)
+print("\ngrid sweep: avg selected clients/round (3 policies x 3 scenarios x 3 seeds)")
+print(f"{'policy':10s} " + " ".join(f"{s:>11s}" for s in res.scenarios))
+for p, name in enumerate(res.policies):
+    row = np.asarray(res.num_selected[p]).mean(axis=(1, 2))
+    print(f"{name:10s} " + " ".join(f"{v:11.2f}" for v in row))

@@ -2,7 +2,8 @@
 
 Trains the paper's classifier over 300 federated rounds on a synthetic
 non-iid dataset, with client selection + bandwidth allocation from each
-policy, and reports final loss/accuracy + energy compliance.
+policy.  All five policies — traces AND FedAvg trajectories — run as one
+compiled grid through ``repro.sim.GridEngine``.
 
     PYTHONPATH=src python examples/wfln_federated_training.py [--rounds 300]
 """
@@ -11,9 +12,12 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core import OceanConfig, RadioParams, stationary_channel
+from repro.core import PolicyParams, Scenario
 from repro.fed import synthetic_image_classification
-from repro.fed.loop import WflnExperiment, make_classification_task, policy_trace
+from repro.fed.loop import WflnExperiment, make_classification_task
+from repro.sim import run_grid
+
+POLICIES = ("select_all", "smo", "amo", "ocean-a", "ocean-u")
 
 
 def main():
@@ -24,15 +28,13 @@ def main():
     args = ap.parse_args()
 
     T, K = args.rounds, args.clients
-    cfg = OceanConfig(
+    scenario = Scenario(
+        name="stationary",
         num_clients=K,
         num_rounds=T,
-        radio=RadioParams(),
         energy_budget_j=0.15 * T / 300,
     )
     key = jax.random.PRNGKey(0)
-    h2 = stationary_channel(K).sample(key, T)
-
     ds = synthetic_image_classification(
         key, num_clients=K, samples_per_client=100, dim=32,
         noise=3.5, style_strength=1.0, dirichlet_alpha=0.3,
@@ -41,17 +43,23 @@ def main():
         task=make_classification_task(32, 10, 10), dataset=ds, lr=0.05, local_steps=5
     )
 
+    res = run_grid(
+        [scenario],
+        [(name, PolicyParams(v=args.v)) for name in POLICIES],
+        seeds=[0],
+        experiment=exp,
+        learn_keys=jax.random.PRNGKey(1)[None, None],  # legacy trajectory key
+    )
+
     print(f"{'policy':12s} {'avg sel':>8s} {'loss':>8s} {'acc':>6s} {'maxE (J)':>9s}")
-    for name in ("select_all", "smo", "amo", "ocean-a", "ocean-u"):
-        tr = policy_trace(name, cfg, h2, v=args.v, key=key)
-        hist = jax.jit(exp.run)(jax.random.PRNGKey(1), tr)
-        e = np.asarray(tr.e.sum(0))
+    for p, name in enumerate(POLICIES):
+        e = np.asarray(res.energy_spent[p, 0, 0])
         print(
-            f"{name:12s} {float(np.asarray(tr.num_selected).mean()):8.2f} "
-            f"{float(hist['test_loss'][-1]):8.4f} "
-            f"{float(hist['test_accuracy'][-1]):6.3f} {e.max():9.4f}"
+            f"{name:12s} {float(np.asarray(res.num_selected[p, 0, 0]).mean()):8.2f} "
+            f"{float(res.history['test_loss'][p, 0, 0, -1]):8.4f} "
+            f"{float(res.history['test_accuracy'][p, 0, 0, -1]):6.3f} {e.max():9.4f}"
         )
-    print(f"\nper-client budget: {cfg.energy_budget_j:.4f} J "
+    print(f"\nper-client budget: {scenario.energy_budget_j:.4f} J "
           f"(select_all ignores it; smo wastes it; ocean tracks it)")
 
 

@@ -26,6 +26,16 @@ from repro.core.baselines import (
     smo,
     utility,
 )
+from repro.core.policy import (
+    Policy,
+    PolicyParams,
+    available_policies,
+    get_policy,
+    pattern_trace,
+    register_policy,
+    run_policy,
+)
+from repro.core.scenario import Scenario, paper_scenarios
 
 __all__ = [
     "RadioParams",
@@ -56,4 +66,13 @@ __all__ = [
     "select_all",
     "smo",
     "utility",
+    "Policy",
+    "PolicyParams",
+    "available_policies",
+    "get_policy",
+    "pattern_trace",
+    "register_policy",
+    "run_policy",
+    "Scenario",
+    "paper_scenarios",
 ]

@@ -16,7 +16,7 @@
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,8 +74,10 @@ def _myopic_round(h2: Array, budget: Array, radio: RadioParams):
     return a, b
 
 
-def smo(cfg: OceanConfig, h2_seq: Array) -> PolicyTrace:
-    budgets = cfg.budgets() / cfg.num_rounds
+def smo(
+    cfg: OceanConfig, h2_seq: Array, budgets: Optional[Array] = None
+) -> PolicyTrace:
+    budgets = (cfg.budgets() if budgets is None else budgets) / cfg.num_rounds
 
     def per_round(h2):
         a, b = _myopic_round(h2, budgets, cfg.radio)
@@ -85,8 +87,10 @@ def smo(cfg: OceanConfig, h2_seq: Array) -> PolicyTrace:
     return _trace(a, b, e)
 
 
-def amo(cfg: OceanConfig, h2_seq: Array) -> PolicyTrace:
-    budgets = cfg.budgets()
+def amo(
+    cfg: OceanConfig, h2_seq: Array, budgets: Optional[Array] = None
+) -> PolicyTrace:
+    budgets = cfg.budgets() if budgets is None else budgets
     T = cfg.num_rounds
 
     def step(spent, inputs):
@@ -112,6 +116,7 @@ def lookahead_dual(
     eta_seq: Array,
     num_iters: int = 400,
     lr: float = 50.0,
+    budgets: Optional[Array] = None,
 ) -> Tuple[PolicyTrace, Array]:
     """Approximate the R=T lookahead oracle with full channel knowledge.
 
@@ -120,7 +125,7 @@ def lookahead_dual(
     """
     T, K = h2_seq.shape
     eta_seq = jnp.asarray(eta_seq, jnp.float32)
-    budgets = cfg.budgets()
+    budgets = cfg.budgets() if budgets is None else budgets
 
     def rounds_for(mu):
         def per_round(h2, eta_t):

@@ -46,6 +46,12 @@ class OceanConfig:
 
     def __post_init__(self):
         self.radio.validate(self.num_clients)
+        if self.frame_len is not None and self.frame_len <= 0:
+            raise ValueError(
+                f"frame_len={self.frame_len} must be a positive number of "
+                f"rounds (or None for the single-frame R = T setting); "
+                f"frame_len <= 0 would silently degrade to R = T"
+            )
 
     @property
     def R(self) -> int:
@@ -91,8 +97,13 @@ def ocean_round(
     v: Array,
     eta: Array,
     cfg: OceanConfig,
+    budgets: Optional[Array] = None,
 ) -> Tuple[OceanState, RoundDecision]:
-    """One OCEAN round: frame-reset -> P3 solve -> act -> queue update."""
+    """One OCEAN round: frame-reset -> P3 solve -> act -> queue update.
+
+    ``budgets`` overrides ``cfg.budgets()`` (e.g. a traced (K,) array when
+    the scenario axis of a grid sweep varies the budgets).
+    """
     R = cfg.R
     # Frame boundary reset (Alg. 1 line 3-5): at t = m*R, m >= 1.
     at_boundary = (state.t > 0) & (jnp.mod(state.t, R) == 0)
@@ -101,7 +112,8 @@ def ocean_round(
     sol: OceanPSolution = ocean_p(q, h2, v, eta, cfg.radio)
     e = energy(sol.b, h2, cfg.radio, sol.a)
 
-    budgets = cfg.budgets()
+    if budgets is None:
+        budgets = cfg.budgets()
     q_next = jnp.maximum(q + e - budgets / cfg.num_rounds, 0.0)
 
     new_state = OceanState(
@@ -135,6 +147,7 @@ def simulate(
     h2_seq: Array,       # (T, K) channel power gains
     eta_seq: Array,      # (T,)   temporal weights
     v: float | Array,    # scalar or per-frame (M,)
+    budgets: Optional[Array] = None,  # (K,) override of cfg.budgets()
 ) -> Tuple[OceanState, RoundDecision]:
     """Run T rounds as one lax.scan; returns final state + stacked decisions."""
     v_seq = v_schedule(cfg, v)
@@ -142,6 +155,6 @@ def simulate(
 
     def step(state, inputs):
         h2, v_t, eta_t = inputs
-        return ocean_round(state, h2, v_t, eta_t, cfg)
+        return ocean_round(state, h2, v_t, eta_t, cfg, budgets)
 
     return jax.lax.scan(step, init_state(cfg), (h2_seq, v_seq, eta_seq))

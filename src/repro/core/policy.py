@@ -1,0 +1,201 @@
+"""Unified Policy API — every selection/bandwidth policy behind one signature.
+
+The paper's evaluation is a grid sweep over temporal policies (OCEAN-a/d/u,
+SMO, AMO, Select-All, explicit count patterns), channel scenarios, and
+seeds.  To make that grid vmap-able, every policy is exposed as a pure,
+scan/vmap-compatible function
+
+    trace_fn(cfg: OceanConfig, h2_seq: (T, K), params: PolicyParams)
+        -> PolicyTrace                                  # (T, K) matrices
+
+with a *common* hyperparameter struct ``PolicyParams`` (a pytree: any field
+may be a traced array, so a grid axis can live in any of them).  Policies
+are looked up by name in a registry; ``run_policy`` is the single entry
+point that resolves parameter defaults and dispatches.
+
+This replaces the ad-hoc string dispatch that used to live in
+``repro.fed.loop.policy_trace`` (kept there as a thin wrapper).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import PolicyTrace, amo, select_all, smo
+from repro.core.ocean import OceanConfig, simulate
+from repro.core.patterns import eta_schedule
+
+Array = jax.Array
+
+
+class PolicyParams(NamedTuple):
+    """Common hyperparameter struct shared by all policies (a pytree).
+
+    Fields irrelevant to a given policy are simply ignored; ``None`` fields
+    are resolved to policy/scenario defaults by ``resolve_params``.
+
+    Attributes:
+      v:       OCEAN control parameter (scalar, or per-frame (M,) sequence).
+      eta:     (T,) temporal weights; None => policy default schedule, else
+               the scenario's schedule, else uniform.
+      budgets: (K,) per-client energy budgets H_k; None => ``cfg.budgets()``.
+      key:     PRNG key for stochastic policies (pattern traces).
+      counts:  (T,) client counts for the explicit pattern policy.
+    """
+
+    v: Union[float, Array] = 1e-5
+    eta: Optional[Array] = None
+    budgets: Optional[Array] = None
+    key: Optional[Array] = None
+    counts: Optional[Array] = None
+
+
+TraceFn = Callable[[OceanConfig, Array, PolicyParams], PolicyTrace]
+
+
+class Policy(NamedTuple):
+    """A registered policy: name + pure trace function + resolution hints."""
+
+    name: str
+    trace_fn: TraceFn
+    default_eta: Optional[str] = None  # eta-schedule name baked into the variant
+    needs_key: bool = False            # stochastic policy: params.key required
+
+
+_REGISTRY: Dict[str, Policy] = {}
+
+_OCEAN_VARIANTS = {"a": "ascend", "d": "descend", "u": "uniform"}
+
+
+def register_policy(
+    name: str,
+    trace_fn: TraceFn,
+    *,
+    default_eta: Optional[str] = None,
+    needs_key: bool = False,
+) -> Policy:
+    """Add a policy to the registry (overwrites an existing name)."""
+    pol = Policy(name, trace_fn, default_eta, needs_key)
+    _REGISTRY[name] = pol
+    return pol
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_policy(name: Union[str, Policy]) -> Policy:
+    """Look up a policy by name, with actionable errors for near-misses."""
+    if isinstance(name, Policy):
+        return name
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    if name.startswith("ocean"):
+        variant = name.split("-", 1)[1] if "-" in name else name[len("ocean"):]
+        known = ", ".join(
+            f"'ocean-{v}' ({sched})" for v, sched in _OCEAN_VARIANTS.items()
+        )
+        raise ValueError(
+            f"unknown OCEAN variant {variant!r} in policy name {name!r}; "
+            f"known variants: {known}, or plain 'ocean' with an explicit "
+            f"PolicyParams.eta"
+        )
+    raise ValueError(
+        f"unknown policy {name!r}; available: {', '.join(available_policies())}"
+    )
+
+
+def resolve_params(
+    policy: Policy,
+    cfg: OceanConfig,
+    params: Optional[PolicyParams] = None,
+    *,
+    scenario_eta: Optional[Array] = None,
+    scenario_budgets: Optional[Array] = None,
+) -> PolicyParams:
+    """Fill None fields: explicit > policy default > scenario > uniform/cfg."""
+    params = PolicyParams() if params is None else params
+    eta = params.eta
+    if eta is None:
+        if policy.default_eta is not None:
+            eta = eta_schedule(policy.default_eta, cfg.num_rounds)
+        elif scenario_eta is not None:
+            eta = scenario_eta
+        else:
+            eta = eta_schedule("uniform", cfg.num_rounds)
+    budgets = params.budgets
+    if budgets is None:
+        budgets = scenario_budgets if scenario_budgets is not None else cfg.budgets()
+    if policy.needs_key and params.key is None:
+        raise ValueError(
+            f"policy {policy.name!r} is stochastic and requires PolicyParams.key"
+        )
+    return params._replace(eta=jnp.asarray(eta, jnp.float32), budgets=budgets)
+
+
+def run_policy(
+    name_or_policy: Union[str, Policy],
+    cfg: OceanConfig,
+    h2_seq: Array,
+    params: Optional[PolicyParams] = None,
+) -> PolicyTrace:
+    """Resolve defaults and run one policy over one channel realization."""
+    pol = get_policy(name_or_policy)
+    return pol.trace_fn(cfg, h2_seq, resolve_params(pol, cfg, params))
+
+
+# --------------------------------------------------------------------------
+# registry entries
+# --------------------------------------------------------------------------
+def _select_all_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
+    return select_all(cfg, h2_seq)
+
+
+def _smo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
+    return smo(cfg, h2_seq, budgets=params.budgets)
+
+
+def _amo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
+    return amo(cfg, h2_seq, budgets=params.budgets)
+
+
+def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
+    _, decs = simulate(cfg, h2_seq, params.eta, params.v, budgets=params.budgets)
+    return PolicyTrace(a=decs.a, b=decs.b, e=decs.e, num_selected=decs.num_selected)
+
+
+def pattern_trace(key: Array, counts: Array, num_clients: int) -> PolicyTrace:
+    """Random selection of counts[t] clients per round (§III experiments).
+
+    Bandwidth is split evenly among the selected (energy physics is not the
+    object of §III).
+    """
+    T = counts.shape[0]
+
+    def per_round(k, c):
+        scores = jax.random.uniform(k, (num_clients,))
+        thresh = -jnp.sort(-scores)[jnp.maximum(c - 1, 0)]
+        a = (scores >= thresh) & (c > 0)
+        b = jnp.where(a, 1.0 / jnp.maximum(jnp.sum(a), 1), 0.0)
+        return a, b
+
+    a, b = jax.vmap(per_round)(jax.random.split(key, T), counts)
+    e = jnp.zeros_like(b)
+    return PolicyTrace(a=a, b=b, e=e, num_selected=jnp.sum(a, -1))
+
+
+def _pattern_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
+    if params.counts is None:
+        raise ValueError("policy 'pattern' requires PolicyParams.counts (T,)")
+    return pattern_trace(params.key, params.counts, cfg.num_clients)
+
+
+register_policy("select_all", _select_all_fn)
+register_policy("smo", _smo_fn)
+register_policy("amo", _amo_fn)
+register_policy("ocean", _ocean_fn)  # eta from params or scenario
+for _v, _sched in _OCEAN_VARIANTS.items():
+    register_policy(f"ocean-{_v}", _ocean_fn, default_eta=_sched)
+register_policy("pattern", _pattern_fn, needs_key=True)

@@ -1,0 +1,159 @@
+"""Serializable Scenario spec — the second axis of the evaluation grid.
+
+A ``Scenario`` bundles everything that used to be scattered across
+``benchmarks/common.py`` (radio constants), ``core/channel.py`` (path-loss
+schedules) and the per-figure modules (budgets, eta schedules, horizons):
+channel model + radio physics + energy budgets + eta schedule + (T, K).
+It is a plain frozen dataclass of JSON-serializable leaves, so scenario
+grids can be stored, diffed, and shipped to workers.
+
+The channel is the paper's block-fading model: a per-round mean path loss
+(constant, or linearly drifting as in §VI scenarios 1/2) with optional
+i.i.d. Exp(1) Rayleigh power fading.  ``mean_gain_seq`` exposes the (T,)
+deterministic part so a grid engine can batch the stochastic part across
+scenarios with one draw per seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import (
+    ChannelModel,
+    constant_pathloss,
+    linear_pathloss,
+    pathloss_to_gain,
+)
+from repro.core.energy import RadioParams
+from repro.core.ocean import OceanConfig
+from repro.core.patterns import eta_schedule
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One point on the scenario axis of a (policy, scenario, seed) grid.
+
+    Attributes:
+      name:            label used in results and error messages.
+      num_clients:     K.
+      num_rounds:      T.
+      pathloss_db:     (start, end) mean path loss in dB; equal entries give
+                       the stationary channel, unequal a linear drift
+                       (paper scenarios 1: 32->45, 2: 45->32).
+      fading:          i.i.d. Exp(1) power fading around the mean (Rayleigh).
+      radio:           uplink physics (bandwidth, noise, deadline, bits, b_min).
+      energy_budget_j: per-client long-term budget H_k — scalar, or a
+                       length-K tuple for heterogeneous budgets.
+      eta:             name of the temporal-weight schedule (see
+                       ``repro.core.patterns.ETA_SCHEDULES``) used by
+                       policies that don't pin their own.
+      frame_len:       OCEAN frame length R (None => R = T).
+    """
+
+    name: str = "stationary"
+    num_clients: int = 10
+    num_rounds: int = 300
+    pathloss_db: Tuple[float, float] = (36.0, 36.0)
+    fading: bool = True
+    radio: RadioParams = RadioParams()
+    energy_budget_j: Union[float, Tuple[float, ...]] = 0.15
+    eta: str = "uniform"
+    frame_len: Optional[int] = None
+
+    def __post_init__(self):
+        if len(self.pathloss_db) != 2:
+            raise ValueError(
+                f"pathloss_db must be a (start_db, end_db) pair, got "
+                f"{self.pathloss_db!r}"
+            )
+        if not isinstance(self.energy_budget_j, (int, float)):
+            if len(self.energy_budget_j) != self.num_clients:
+                raise ValueError(
+                    f"heterogeneous energy_budget_j needs {self.num_clients} "
+                    f"entries, got {len(self.energy_budget_j)}"
+                )
+        eta_schedule(self.eta, 1)  # fail fast on unknown schedule names
+
+    # -- derived objects ----------------------------------------------------
+    def ocean_config(self) -> OceanConfig:
+        return OceanConfig(
+            num_clients=self.num_clients,
+            num_rounds=self.num_rounds,
+            radio=self.radio,
+            energy_budget_j=self.energy_budget_j,  # type: ignore[arg-type]
+            frame_len=self.frame_len,
+        )
+
+    def channel_model(self) -> ChannelModel:
+        start, end = self.pathloss_db
+        if start == end:
+            sched = constant_pathloss(start)
+        else:
+            sched = linear_pathloss(start, end, self.num_rounds)
+        return ChannelModel(self.num_clients, sched, fading=self.fading)
+
+    def mean_gain_seq(self) -> Array:
+        """(T,) deterministic mean power gain g_t = 10^{-PL_t/10}."""
+        t = jnp.arange(self.num_rounds)
+        return pathloss_to_gain(self.channel_model().pathloss_db(t))
+
+    def sample_channel(self, seed_or_key: Union[int, Array]) -> Array:
+        """(T, K) channel power gains h^2 for one realization."""
+        key = (
+            jax.random.PRNGKey(seed_or_key)
+            if isinstance(seed_or_key, int)
+            else seed_or_key
+        )
+        return self.channel_model().sample(key, self.num_rounds)
+
+    def eta_seq(self) -> Array:
+        return eta_schedule(self.eta, self.num_rounds)
+
+    def budgets(self) -> Array:
+        h = jnp.asarray(self.energy_budget_j, jnp.float32)
+        return jnp.broadcast_to(h, (self.num_clients,))
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["pathloss_db"] = list(self.pathloss_db)
+        if not isinstance(self.energy_budget_j, (int, float)):
+            d["energy_budget_j"] = list(self.energy_budget_j)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Scenario":
+        d = dict(d)
+        d["pathloss_db"] = tuple(d.get("pathloss_db", (36.0, 36.0)))
+        if "radio" in d and isinstance(d["radio"], dict):
+            d["radio"] = RadioParams(**d["radio"])
+        if isinstance(d.get("energy_budget_j"), list):
+            d["energy_budget_j"] = tuple(d["energy_budget_j"])
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Scenario":
+        return cls.from_dict(json.loads(s))
+
+
+def paper_scenarios(num_rounds: int = 300, num_clients: int = 10):
+    """The paper's §VI channel settings as a named scenario dict."""
+    base = dict(num_rounds=num_rounds, num_clients=num_clients)
+    return {
+        "stationary": Scenario(name="stationary", **base),
+        "scenario1": Scenario(
+            name="scenario1", pathloss_db=(32.0, 45.0), **base
+        ),
+        "scenario2": Scenario(
+            name="scenario2", pathloss_db=(45.0, 32.0), **base
+        ),
+    }

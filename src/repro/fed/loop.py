@@ -22,12 +22,11 @@ import jax.numpy as jnp
 
 from repro.core import (
     OceanConfig,
+    PolicyParams,
     PolicyTrace,
-    amo,
-    eta_schedule,
-    select_all,
+    pattern_trace,
+    run_policy,
     simulate,
-    smo,
 )
 from repro.fed.client import local_update
 from repro.fed.data import FederatedDataset, client_batch
@@ -113,38 +112,13 @@ def make_char_lm_task(vocab: int, dim: int = 32) -> FedTask:
 
 
 # --------------------------------------------------------------------------
-# policy traces
+# policy traces — thin wrappers over the repro.core.policy registry
 # --------------------------------------------------------------------------
-def pattern_trace(
-    key: Array, counts: Array, num_clients: int
-) -> PolicyTrace:
-    """Random selection of counts[t] clients per round (§III experiments).
-
-    Bandwidth is split evenly among the selected (energy physics is not the
-    object of §III).
-    """
-    T = counts.shape[0]
-
-    def per_round(k, c):
-        scores = jax.random.uniform(k, (num_clients,))
-        thresh = -jnp.sort(-scores)[jnp.maximum(c - 1, 0)]
-        a = (scores >= thresh) & (c > 0)
-        b = jnp.where(a, 1.0 / jnp.maximum(jnp.sum(a), 1), 0.0)
-        return a, b
-
-    a, b = jax.vmap(per_round)(jax.random.split(key, T), counts)
-    e = jnp.zeros_like(b)
-    return PolicyTrace(a=a, b=b, e=e, num_selected=jnp.sum(a, -1))
-
-
 def ocean_trace(
     cfg: OceanConfig, h2_seq: Array, eta: Array, v: float | Array
 ) -> PolicyTrace:
     final, decs = simulate(cfg, h2_seq, eta, v)
     return PolicyTrace(a=decs.a, b=decs.b, e=decs.e, num_selected=decs.num_selected)
-
-
-POLICIES = {"select_all": select_all, "smo": smo, "amo": amo}
 
 
 def policy_trace(
@@ -155,15 +129,17 @@ def policy_trace(
     eta: Optional[Array] = None,
     v: float = 1e-5,
     key: Optional[Array] = None,
+    counts: Optional[Array] = None,
 ) -> PolicyTrace:
-    """Uniform entry point: 'ocean-a/d/u', 'smo', 'amo', 'select_all'."""
-    if name.startswith("ocean"):
-        sched = {"a": "ascend", "d": "descend", "u": "uniform"}[
-            name.split("-")[1] if "-" in name else "u"
-        ]
-        eta = eta_schedule(sched, cfg.num_rounds) if eta is None else eta
-        return ocean_trace(cfg, h2_seq, eta, v)
-    return POLICIES[name](cfg, h2_seq)
+    """Uniform entry point: 'ocean[-a/d/u]', 'smo', 'amo', 'select_all',
+    'pattern' — dispatched through the ``repro.core.policy`` registry.
+
+    Bare ``'ocean'`` keeps its legacy meaning of OCEAN-u here.
+    """
+    if name == "ocean":
+        name = "ocean-u"
+    params = PolicyParams(v=v, eta=eta, key=key, counts=counts)
+    return run_policy(name, cfg, h2_seq, params)
 
 
 # --------------------------------------------------------------------------

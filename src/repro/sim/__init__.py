@@ -1,0 +1,4 @@
+"""Vectorized scenario-grid simulation engine."""
+from repro.sim.engine import GridEngine, GridResult, run_grid
+
+__all__ = ["GridEngine", "GridResult", "run_grid"]

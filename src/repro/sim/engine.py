@@ -1,0 +1,282 @@
+"""Scenario-grid simulation engine: one compiled program for the whole sweep.
+
+The paper's evaluation is a grid over (policy, scenario, seed).  The legacy
+path simulated one cell at a time — a Python loop that re-traced the
+``lax.scan`` trajectory for every combination.  ``GridEngine`` instead
+builds a single jitted program that
+
+  1. samples the block-fading channels for all seeds with one vmapped draw
+     (bit-identical to ``ChannelModel.sample`` per seed, because the Exp(1)
+     fading does not depend on the scenario's path-loss schedule),
+  2. runs every registered policy over every (scenario, seed) cell via
+     nested ``vmap`` (policies are unrolled — they are structurally
+     different programs — while scenarios and seeds are batched axes),
+  3. optionally runs the FedAvg learning trajectory (``WflnExperiment``)
+     for every cell, again under nested ``vmap``,
+
+and returns stacked ``(P, S, N, T, K)`` outputs.  The program is traced
+and compiled exactly once per ``GridEngine``; subsequent ``run`` calls with
+the same grid shape reuse the executable.
+
+Scenario-dependent *arrays* (mean channel gains, eta schedules, budgets)
+are batched; scenario-dependent *statics* (T, K, radio physics, frame
+length) must agree across the grid — they shape the compiled program.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import PolicyTrace
+from repro.core.ocean import OceanConfig
+from repro.core.policy import (
+    Policy,
+    PolicyParams,
+    get_policy,
+    resolve_params,
+)
+from repro.core.scenario import Scenario
+
+Array = jax.Array
+
+PolicySpec = Union[str, Policy, Tuple[Union[str, Policy], PolicyParams]]
+
+
+class GridResult(NamedTuple):
+    """Stacked outputs of one grid sweep.
+
+    Leading axes are (P policies, S scenarios, N seeds); labels for each
+    axis ride along so downstream code can index by name.
+    """
+
+    a: Array                 # (P, S, N, T, K) bool selections
+    b: Array                 # (P, S, N, T, K) bandwidth ratios
+    e: Array                 # (P, S, N, T, K) per-round energy
+    num_selected: Array      # (P, S, N, T)
+    energy_spent: Array      # (P, S, N, K) — per-client totals over T
+    h2: Array                # (S, N, T, K) sampled channel power gains
+    history: Optional[Dict[str, Array]]  # each (P, S, N, T); None w/o experiment
+    policies: Tuple[str, ...]
+    scenarios: Tuple[str, ...]
+    seeds: Tuple[int, ...]
+
+    def cell(self, policy: str, scenario: str, seed: int) -> PolicyTrace:
+        """Extract one (policy, scenario, seed) cell as a PolicyTrace."""
+        if self.policies.count(policy) > 1:
+            raise ValueError(
+                f"policy name {policy!r} appears {self.policies.count(policy)} "
+                f"times on the policy axis (e.g. a parameter sweep); index the "
+                f"result arrays positionally instead of via cell()"
+            )
+        p = self.policies.index(policy)
+        s = self.scenarios.index(scenario)
+        n = self.seeds.index(seed)
+        return PolicyTrace(
+            a=self.a[p, s, n],
+            b=self.b[p, s, n],
+            e=self.e[p, s, n],
+            num_selected=self.num_selected[p, s, n],
+        )
+
+
+def _resolve_policy_specs(policies: Sequence[PolicySpec]):
+    resolved = []
+    for spec in policies:
+        if isinstance(spec, tuple):
+            name_or_pol, params = spec
+        else:
+            name_or_pol, params = spec, PolicyParams()
+        pol = get_policy(name_or_pol)
+        resolved.append((pol, params))
+    return resolved
+
+
+def _check_compatible(scenarios: Sequence[Scenario]) -> Scenario:
+    base = scenarios[0]
+    for sc in scenarios[1:]:
+        mismatches = [
+            f"{field}: {getattr(base, field)!r} != {getattr(sc, field)!r}"
+            for field in ("num_rounds", "num_clients", "radio", "frame_len")
+            if getattr(base, field) != getattr(sc, field)
+        ]
+        if mismatches:
+            raise ValueError(
+                f"scenario {sc.name!r} is grid-incompatible with "
+                f"{base.name!r}: these fields shape the compiled program and "
+                f"must agree ({'; '.join(mismatches)}); run separate grids"
+            )
+    return base
+
+
+class GridEngine:
+    """Compile once, sweep many: vectorized (policy, scenario, seed) grids.
+
+    Args:
+      scenarios: Scenario specs sharing (T, K, radio, frame_len).
+      policies:  policy names, Policy objects, or (name, PolicyParams)
+                 pairs — e.g. ``[("ocean", PolicyParams(v=v)) for v in VS]``
+                 turns the policy axis into a V sweep.
+      experiment: optional ``WflnExperiment``; when given, every cell's
+                 FedAvg history is computed inside the same program.
+    """
+
+    def __init__(
+        self,
+        scenarios: Sequence[Scenario],
+        policies: Sequence[PolicySpec],
+        *,
+        experiment=None,
+    ):
+        if not scenarios or not policies:
+            raise ValueError("need at least one scenario and one policy")
+        self.scenarios = tuple(scenarios)
+        base = _check_compatible(self.scenarios)
+        self.cfg: OceanConfig = base.ocean_config()
+        self._resolved = _resolve_policy_specs(policies)
+        self.policies = tuple(pol.name for pol, _ in self._resolved)
+        self.experiment = experiment
+
+        # Scenario-batched arrays (the vmapped axes).
+        self._gains = jnp.stack([sc.mean_gain_seq() for sc in self.scenarios])
+        self._etas = jnp.stack([sc.eta_seq() for sc in self.scenarios])
+        self._budgets = jnp.stack([sc.budgets() for sc in self.scenarios])
+        self._fading = jnp.asarray([sc.fading for sc in self.scenarios])
+
+        self._fn = jax.jit(self._build)
+
+    # -- the single compiled program ----------------------------------------
+    def _build(self, seed_arr, gains, etas, budgets, fading, base_key, learn_keys):
+        cfg = self.cfg
+        T, K = cfg.num_rounds, cfg.num_clients
+
+        def sample_fading(seed):
+            # Mirrors ChannelModel.sample exactly: the uniform draw depends
+            # only on the seed and (T, K), never on the path-loss schedule.
+            u = jax.random.uniform(
+                jax.random.PRNGKey(seed), (T, K), minval=1e-6, maxval=1.0
+            )
+            return -jnp.log(u)
+
+        x = jax.vmap(sample_fading)(seed_arr)                     # (N, T, K)
+        x = jnp.where(fading[:, None, None, None], x[None], 1.0)  # (S, N, T, K)
+        h2 = gains[:, None, :, None] * x                          # (S, N, T, K)
+
+        def cell_keys(s_idx):
+            return jax.vmap(
+                lambda seed: jax.random.fold_in(
+                    jax.random.fold_in(base_key, s_idx), seed
+                )
+            )(seed_arr)
+
+        keys = jax.vmap(cell_keys)(jnp.arange(len(self.scenarios)))  # (S, N, 2)
+
+        traces = []
+        histories = []
+        for pol, pp in self._resolved:
+            def cell(h2_cell, eta_s, budg_s, key_cell, pol=pol, pp=pp):
+                params = resolve_params(
+                    pol,
+                    cfg,
+                    pp._replace(key=pp.key if pp.key is not None else key_cell),
+                    scenario_eta=eta_s,
+                    scenario_budgets=budg_s,
+                )
+                return pol.trace_fn(cfg, h2_cell, params)
+
+            over_seeds = jax.vmap(cell, in_axes=(0, None, None, 0))
+            tr = jax.vmap(over_seeds)(h2, etas, budgets, keys)    # (S, N, ...)
+            traces.append(tr)
+            if self.experiment is not None:
+                run = self.experiment.run
+                histories.append(jax.vmap(jax.vmap(run))(learn_keys, tr))
+
+        a = jnp.stack([t.a for t in traces])
+        b = jnp.stack([t.b for t in traces])
+        e = jnp.stack([t.e for t in traces])
+        ns = jnp.stack([t.num_selected for t in traces])
+        history = (
+            {k: jnp.stack([h[k] for h in histories]) for k in histories[0]}
+            if histories
+            else None
+        )
+        return a, b, e, ns, h2, history
+
+    # -- public API ----------------------------------------------------------
+    def run(
+        self,
+        seeds: Sequence[int],
+        *,
+        base_key: Optional[Array] = None,
+        learn_keys: Optional[Array] = None,
+        learn_seed: int = 0,
+    ) -> GridResult:
+        """Sweep the grid over ``seeds``; compiled once per grid shape.
+
+        ``learn_keys`` — optional explicit (S, N, 2) PRNG keys for the
+        learning trajectories (default: fold (scenario, seed) into
+        ``PRNGKey(learn_seed)``).  ``base_key`` seeds stochastic policies.
+        """
+        seeds = tuple(int(s) for s in seeds)
+        seed_arr = jnp.asarray(seeds, jnp.uint32)
+        S, N = len(self.scenarios), len(seeds)
+        if base_key is None:
+            base_key = jax.random.PRNGKey(0)
+        if learn_keys is None:
+            lk = jax.random.PRNGKey(learn_seed)
+            learn_keys = jnp.stack(
+                [
+                    jnp.stack(
+                        [
+                            jax.random.fold_in(jax.random.fold_in(lk, s), n)
+                            for n in seeds
+                        ]
+                    )
+                    for s in range(S)
+                ]
+            )
+        else:
+            learn_keys = jnp.asarray(learn_keys)
+            if learn_keys.shape[:2] != (S, N):
+                raise ValueError(
+                    f"learn_keys must have leading shape (S={S}, N={N}), "
+                    f"got {learn_keys.shape}"
+                )
+        a, b, e, ns, h2, history = self._fn(
+            seed_arr,
+            self._gains,
+            self._etas,
+            self._budgets,
+            self._fading,
+            base_key,
+            learn_keys,
+        )
+        return GridResult(
+            a=a,
+            b=b,
+            e=e,
+            num_selected=ns,
+            energy_spent=e.sum(axis=-2),
+            h2=h2,
+            history=history,
+            policies=self.policies,
+            scenarios=tuple(sc.name for sc in self.scenarios),
+            seeds=seeds,
+        )
+
+
+def run_grid(
+    scenarios: Sequence[Scenario],
+    policies: Sequence[PolicySpec],
+    seeds: Sequence[int],
+    *,
+    experiment=None,
+    base_key: Optional[Array] = None,
+    learn_keys: Optional[Array] = None,
+    learn_seed: int = 0,
+) -> GridResult:
+    """One-shot convenience wrapper around ``GridEngine``."""
+    return GridEngine(scenarios, policies, experiment=experiment).run(
+        seeds, base_key=base_key, learn_keys=learn_keys, learn_seed=learn_seed
+    )

@@ -1,9 +1,11 @@
 """P4 solver: optimality vs scipy, KKT structure, Proposition 1."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 from scipy.optimize import minimize
 
 from repro.core.bandwidth import solve_p4

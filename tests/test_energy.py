@@ -1,9 +1,11 @@
 """Radio physics: Lemma 1 properties + energy-model consistency."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.energy import (
     RadioParams,

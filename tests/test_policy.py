@@ -1,0 +1,132 @@
+"""Unified Policy API: registry dispatch, parameter resolution, validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    OceanConfig,
+    PolicyParams,
+    RadioParams,
+    Scenario,
+    amo,
+    available_policies,
+    eta_schedule,
+    get_policy,
+    pattern_trace,
+    run_policy,
+    select_all,
+    simulate,
+    smo,
+    stationary_channel,
+)
+
+RADIO = RadioParams()
+T, K = 40, 6
+CFG = OceanConfig(num_clients=K, num_rounds=T, radio=RADIO, energy_budget_j=0.15)
+H2 = stationary_channel(K).sample(jax.random.PRNGKey(3), T)
+
+
+def test_registry_contains_paper_policies():
+    names = available_policies()
+    for name in ("select_all", "smo", "amo", "ocean", "ocean-a", "ocean-d",
+                 "ocean-u", "pattern"):
+        assert name in names
+
+
+def test_unknown_policy_error_lists_available():
+    with pytest.raises(ValueError, match="unknown policy 'bogus'.*select_all"):
+        get_policy("bogus")
+
+
+def test_unknown_ocean_variant_error_is_helpful():
+    with pytest.raises(ValueError, match="unknown OCEAN variant 'z'.*ocean-a"):
+        get_policy("ocean-z")
+    with pytest.raises(ValueError, match="OCEAN variant"):
+        get_policy("ocean-ascending")
+
+
+def test_frame_len_zero_or_negative_rejected():
+    for bad in (0, -1, -7):
+        with pytest.raises(ValueError, match="frame_len"):
+            OceanConfig(
+                num_clients=K, num_rounds=T, radio=RADIO, frame_len=bad
+            )
+    # positive frame_len still fine
+    cfg = OceanConfig(num_clients=K, num_rounds=T, radio=RADIO, frame_len=10)
+    assert cfg.R == 10
+
+
+def test_baseline_policies_match_direct_calls():
+    for name, direct in (
+        ("select_all", select_all(CFG, H2)),
+        ("smo", smo(CFG, H2)),
+        ("amo", amo(CFG, H2)),
+    ):
+        tr = run_policy(name, CFG, H2)
+        np.testing.assert_array_equal(np.asarray(tr.a), np.asarray(direct.a))
+        np.testing.assert_array_equal(np.asarray(tr.b), np.asarray(direct.b))
+
+
+def test_ocean_variants_match_simulate():
+    for variant, sched in (("ocean-a", "ascend"), ("ocean-d", "descend"),
+                           ("ocean-u", "uniform")):
+        tr = run_policy(variant, CFG, H2, PolicyParams(v=1e-5))
+        _, decs = simulate(CFG, H2, eta_schedule(sched, T), 1e-5)
+        np.testing.assert_array_equal(np.asarray(tr.a), np.asarray(decs.a))
+        np.testing.assert_array_equal(np.asarray(tr.e), np.asarray(decs.e))
+
+
+def test_explicit_eta_overrides_variant_default():
+    eta = eta_schedule("descend", T)
+    tr = run_policy("ocean-a", CFG, H2, PolicyParams(v=1e-5, eta=eta))
+    _, decs = simulate(CFG, H2, eta, 1e-5)
+    np.testing.assert_array_equal(np.asarray(tr.a), np.asarray(decs.a))
+
+
+def test_pattern_policy_requires_key_and_counts():
+    counts = jnp.full((T,), 3, jnp.int32)
+    with pytest.raises(ValueError, match="requires PolicyParams.key"):
+        run_policy("pattern", CFG, H2, PolicyParams(counts=counts))
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="counts"):
+        run_policy("pattern", CFG, H2, PolicyParams(key=key))
+    tr = run_policy("pattern", CFG, H2, PolicyParams(key=key, counts=counts))
+    direct = pattern_trace(key, counts, K)
+    np.testing.assert_array_equal(np.asarray(tr.a), np.asarray(direct.a))
+    assert np.all(np.asarray(tr.num_selected) == 3)
+
+
+def test_policy_budget_override_changes_trace():
+    tight = jnp.full((K,), 0.01, jnp.float32)
+    tr_default = run_policy("amo", CFG, H2)
+    tr_tight = run_policy("amo", CFG, H2, PolicyParams(budgets=tight))
+    assert float(tr_tight.num_selected.sum()) < float(tr_default.num_selected.sum())
+    assert np.all(np.asarray(tr_tight.e.sum(0)) <= 0.01 * 1.02)
+
+
+def test_scenario_roundtrip_and_derivations():
+    sc = Scenario(
+        name="s1",
+        num_clients=K,
+        num_rounds=T,
+        pathloss_db=(32.0, 45.0),
+        energy_budget_j=(0.1,) * K,
+        eta="ascend",
+        frame_len=10,
+    )
+    sc2 = Scenario.from_json(sc.to_json())
+    assert sc2 == sc
+    assert sc2.ocean_config().R == 10
+    np.testing.assert_allclose(np.asarray(sc2.budgets()), 0.1)
+    g = np.asarray(sc2.mean_gain_seq())
+    assert g[0] > g[-1]  # 32 dB -> 45 dB means decaying gain
+    eta = np.asarray(sc2.eta_seq())
+    assert eta[-1] > eta[0]
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError, match="entries"):
+        Scenario(num_clients=4, energy_budget_j=(0.1, 0.2))
+    with pytest.raises(ValueError, match="eta schedule"):
+        Scenario(eta="sideways")

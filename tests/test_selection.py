@@ -1,11 +1,13 @@
 """OCEAN-P: exact optimality vs brute force (Theorem 1) + structure."""
 import itertools
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.bandwidth import solve_p4
 from repro.core.energy import RadioParams, f_shannon
