@@ -1,0 +1,123 @@
+"""Adaptivity across the environment zoo: OCEAN vs SMO/AMO (beyond Fig 10-13).
+
+The paper's scenarios 1/2 probe adaptivity with *scripted* linear
+path-loss drifts.  The ``repro.env`` subsystem replaces the script with
+real stochastic dynamics — Gauss-Markov correlated fading, LOS/NLOS
+blockage chains, random-waypoint mobility, energy harvesting, depleting
+batteries — and this benchmark reruns the paper's policy comparison over
+the whole zoo in ONE compiled grid (4 policies x 8 environments x 3
+seeds, single executable).
+
+Reproduced story: OCEAN's long-term queues keep beating the myopic
+baselines on utility in *every* environment, SMO's hard per-round caps
+never break the (realized) budget but waste most of it, and AMO spends
+the budget exactly but still trails OCEAN.  Extended story: the
+long-term energy constraint survives environments the paper never
+tested (harvesting/depleting budgets, drifts), with the soft-violation
+metric emitted for the correlated-fading and mobility cells where deep
+coherent fades stress the O(sqrt V) bound.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import RADIO, Timer, V_DEFAULT, claim, emit
+from repro.core import PolicyParams, Scenario, environment_zoo
+from repro.sim import GridEngine
+
+T_, K_ = 300, 10
+SEEDS = (0, 1, 2)
+POLICIES = ("ocean-a", "ocean-u", "smo", "amo")
+
+# Environments where the mean path loss follows a deterministic schedule;
+# here the paper's near-budget behaviour must carry over.  The correlated
+# (markov_fading) and mobile cells stress the soft bound instead and are
+# reported as metrics, not claims.
+SCHEDULED = ("stationary", "drift_away", "drift_toward", "harvesting", "depleting")
+
+
+def _zoo():
+    zoo = environment_zoo(num_rounds=T_, num_clients=K_, radio=RADIO)
+    zoo["drift_away"] = Scenario(
+        name="drift_away", num_rounds=T_, num_clients=K_, radio=RADIO,
+        pathloss_db=(32.0, 45.0),
+    )
+    zoo["drift_toward"] = Scenario(
+        name="drift_toward", num_rounds=T_, num_clients=K_, radio=RADIO,
+        pathloss_db=(45.0, 32.0),
+    )
+    return list(zoo.values())
+
+
+def run() -> bool:
+    ok = True
+    scenarios = _zoo()
+    with Timer() as t:
+        eng = GridEngine(
+            scenarios, [(n, PolicyParams(v=V_DEFAULT)) for n in POLICIES]
+        )
+        res = eng.run(SEEDS)
+        res.a.block_until_ready()
+    emit("adaptivity", "grid_cells", len(POLICIES) * len(scenarios) * len(SEEDS))
+    emit("adaptivity", "grid_runtime_s", t.elapsed, "compile + run, one program")
+
+    h2 = np.asarray(res.h2)
+    ok &= claim(
+        "adaptivity",
+        "all environment processes yield finite positive gains",
+        bool(np.all(np.isfinite(h2)) and np.all(h2 > 0)),
+    )
+
+    ns = np.asarray(res.num_selected)        # (P, S, N, T)
+    spent = np.asarray(res.energy_spent)     # (P, S, N, K)
+    total = np.asarray(res.budget_total)     # (S, N, K)
+    util = {p: ns[i].mean(axis=(1, 2)) for i, p in enumerate(POLICIES)}  # (S,)
+    ratio = {
+        p: spent[i].mean(axis=(1, 2)) / total.mean(axis=(1, 2))
+        for i, p in enumerate(POLICIES)
+    }
+
+    for s, name in enumerate(res.scenarios):
+        for p in POLICIES:
+            emit("adaptivity", f"{name}_{p}_avg_selected", util[p][s])
+            emit("adaptivity", f"{name}_{p}_spent_over_budget", ratio[p][s])
+
+    ok &= claim(
+        "adaptivity",
+        "OCEAN-u beats SMO on utility in every environment (>= 1.2x)",
+        bool(np.all(util["ocean-u"] >= 1.2 * util["smo"])),
+    )
+    ok &= claim(
+        "adaptivity",
+        "OCEAN-u at least matches AMO on utility in every environment",
+        bool(np.all(util["ocean-u"] >= 0.95 * util["amo"])),
+    )
+    ok &= claim(
+        "adaptivity",
+        "OCEAN-a beats SMO on utility in every environment",
+        bool(np.all(util["ocean-a"] >= util["smo"])),
+    )
+
+    smo_max = np.max(
+        np.asarray(spent[POLICIES.index("smo")]) / np.maximum(total, 1e-12),
+        axis=(1, 2),
+    )
+    ok &= claim(
+        "adaptivity",
+        "SMO's hard per-round caps never exceed the realized budget",
+        bool(np.all(smo_max <= 1.02)),
+    )
+    ok &= claim(
+        "adaptivity",
+        "AMO spends the (realized) budget to within 10% in every environment",
+        bool(np.all(np.abs(ratio["amo"] - 1.0) <= 0.10)),
+    )
+
+    sched_idx = [res.scenarios.index(n) for n in SCHEDULED]
+    ok &= claim(
+        "adaptivity",
+        "OCEAN-u keeps mean energy within 1.3x budget under every "
+        "scheduled-mean environment (soft O(sqrt V) violation)",
+        bool(np.all(ratio["ocean-u"][sched_idx] <= 1.3)),
+    )
+    return ok

@@ -98,7 +98,7 @@ ROWS: list = []
 
 def emit(bench: str, metric: str, value, note: str = ""):
     """CSV row: benchmark,metric,value,note."""
-    if isinstance(value, (jnp.ndarray, np.ndarray)):
+    if isinstance(value, (jnp.ndarray, np.ndarray, np.floating, np.integer)):
         value = float(value)
     if isinstance(value, float):
         value = f"{value:.6g}"

@@ -18,6 +18,7 @@ import time
 
 from benchmarks import (
     ablations,
+    adaptivity,
     common,
     energy_consumption,
     grid_scaling,
@@ -39,6 +40,7 @@ BENCHMARKS = {
     "fig15_structure": structure.run,
     "fig16_tradeoff": tradeoff.run,
     "ablations_beyond_paper": ablations.run,
+    "adaptivity_env_zoo": adaptivity.run,
     "grid_scaling": grid_scaling.run,
     "roofline": roofline.run,
 }

@@ -13,10 +13,12 @@ from repro.core.ocean import (
 )
 from repro.core.channel import (
     ChannelModel,
+    pathloss_schedule,
     scenario1_channel,
     scenario2_channel,
     stationary_channel,
 )
+from repro.env.spec import EnvSpec
 from repro.core.patterns import eta_schedule, ETA_SCHEDULES, COUNT_PATTERNS
 from repro.core.baselines import (
     PolicyTrace,
@@ -35,9 +37,12 @@ from repro.core.policy import (
     register_policy,
     run_policy,
 )
-from repro.core.scenario import Scenario, paper_scenarios
+from repro.core.scenario import Scenario, environment_zoo, paper_scenarios
 
 __all__ = [
+    "EnvSpec",
+    "environment_zoo",
+    "pathloss_schedule",
     "RadioParams",
     "energy",
     "f_shannon",

@@ -75,15 +75,23 @@ def _myopic_round(h2: Array, budget: Array, radio: RadioParams):
 
 
 def smo(
-    cfg: OceanConfig, h2_seq: Array, budgets: Optional[Array] = None
+    cfg: OceanConfig,
+    h2_seq: Array,
+    budgets: Optional[Array] = None,
+    budget_seq: Optional[Array] = None,
 ) -> PolicyTrace:
-    budgets = (cfg.budgets() if budgets is None else budgets) / cfg.num_rounds
+    """Static Myopic Optimal; ``budget_seq`` (T, K) makes the hard
+    per-round cap follow a time-varying budget process instead of the
+    constant H_k / T."""
+    if budget_seq is None:
+        per = (cfg.budgets() if budgets is None else budgets) / cfg.num_rounds
+        budget_seq = jnp.broadcast_to(per, h2_seq.shape)
 
-    def per_round(h2):
-        a, b = _myopic_round(h2, budgets, cfg.radio)
+    def per_round(h2, cap):
+        a, b = _myopic_round(h2, cap, cfg.radio)
         return a, b, energy(b, h2, cfg.radio, a)
 
-    a, b, e = jax.vmap(per_round)(h2_seq)
+    a, b, e = jax.vmap(per_round)(h2_seq, budget_seq)
     return _trace(a, b, e)
 
 

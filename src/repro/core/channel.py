@@ -9,6 +9,13 @@ channel *power* gain as
 
 i.e. Rayleigh envelope => exponential power fading around the path-loss
 mean, redrawn i.i.d. every round (block fading).
+
+This module is the *legacy* single-process channel.  Richer dynamics —
+correlated (Gauss-Markov) fading, LOS/NLOS blockage chains, mobile
+clients, stochastic energy arrivals — live in the ``repro.env``
+subsystem, whose ``iid_rayleigh`` process is bit-identical to
+``ChannelModel.sample`` and which ``Scenario``/``GridEngine`` consume
+through a serializable ``EnvSpec``.
 """
 from __future__ import annotations
 
@@ -18,11 +25,11 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+# Single source of truth for these primitives is repro.env.channel (the
+# import-graph leaf); re-exported here for the legacy call sites.
+from repro.env.channel import pathloss_schedule, pathloss_to_gain  # noqa: F401
+
 Array = jax.Array
-
-
-def pathloss_to_gain(pl_db: Array) -> Array:
-    return jnp.power(10.0, -jnp.asarray(pl_db, jnp.float32) / 10.0)
 
 
 @dataclasses.dataclass(frozen=True)

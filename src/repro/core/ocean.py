@@ -98,11 +98,15 @@ def ocean_round(
     eta: Array,
     cfg: OceanConfig,
     budgets: Optional[Array] = None,
+    budget_inc: Optional[Array] = None,
 ) -> Tuple[OceanState, RoundDecision]:
     """One OCEAN round: frame-reset -> P3 solve -> act -> queue update.
 
     ``budgets`` overrides ``cfg.budgets()`` (e.g. a traced (K,) array when
-    the scenario axis of a grid sweep varies the budgets).
+    the scenario axis of a grid sweep varies the budgets).  ``budget_inc``
+    overrides the per-round queue drain (default ``H_k / T``) — this is
+    how time-varying budget processes (energy harvesting, depleting
+    batteries; see ``repro.env.energy``) enter the queue dynamics.
     """
     R = cfg.R
     # Frame boundary reset (Alg. 1 line 3-5): at t = m*R, m >= 1.
@@ -112,9 +116,11 @@ def ocean_round(
     sol: OceanPSolution = ocean_p(q, h2, v, eta, cfg.radio)
     e = energy(sol.b, h2, cfg.radio, sol.a)
 
-    if budgets is None:
-        budgets = cfg.budgets()
-    q_next = jnp.maximum(q + e - budgets / cfg.num_rounds, 0.0)
+    if budget_inc is None:
+        if budgets is None:
+            budgets = cfg.budgets()
+        budget_inc = budgets / cfg.num_rounds
+    q_next = jnp.maximum(q + e - budget_inc, 0.0)
 
     new_state = OceanState(
         q=q_next,
@@ -147,14 +153,28 @@ def simulate(
     h2_seq: Array,       # (T, K) channel power gains
     eta_seq: Array,      # (T,)   temporal weights
     v: float | Array,    # scalar or per-frame (M,)
-    budgets: Optional[Array] = None,  # (K,) override of cfg.budgets()
+    budgets: Optional[Array] = None,     # (K,) override of cfg.budgets()
+    budget_seq: Optional[Array] = None,  # (T, K) per-round budget increments
 ) -> Tuple[OceanState, RoundDecision]:
-    """Run T rounds as one lax.scan; returns final state + stacked decisions."""
+    """Run T rounds as one lax.scan; returns final state + stacked decisions.
+
+    ``budget_seq`` feeds a time-varying per-round allowance into the
+    queue update (``repro.env`` budget processes); when omitted, the
+    constant ``H_k / T`` drain of the paper applies.
+    """
     v_seq = v_schedule(cfg, v)
     eta_seq = jnp.asarray(eta_seq, jnp.float32)
+    if budget_seq is None:
+        per_round = (cfg.budgets() if budgets is None else budgets) / cfg.num_rounds
+        budget_seq = jnp.broadcast_to(
+            per_round, (cfg.num_rounds, cfg.num_clients)
+        )
+    budget_seq = jnp.asarray(budget_seq, jnp.float32)
 
     def step(state, inputs):
-        h2, v_t, eta_t = inputs
-        return ocean_round(state, h2, v_t, eta_t, cfg, budgets)
+        h2, v_t, eta_t, inc_t = inputs
+        return ocean_round(state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t)
 
-    return jax.lax.scan(step, init_state(cfg), (h2_seq, v_seq, eta_seq))
+    return jax.lax.scan(
+        step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq)
+    )

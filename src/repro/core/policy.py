@@ -43,6 +43,10 @@ class PolicyParams(NamedTuple):
       budgets: (K,) per-client energy budgets H_k; None => ``cfg.budgets()``.
       key:     PRNG key for stochastic policies (pattern traces).
       counts:  (T,) client counts for the explicit pattern policy.
+      budget_seq: (T, K) per-round budget increments from a time-varying
+               budget process (``repro.env.energy``); None => the constant
+               H_k / T drain.  Consumed by OCEAN's queues and SMO's hard
+               per-round caps; AMO keeps budgeting against the totals.
     """
 
     v: Union[float, Array] = 1e-5
@@ -50,6 +54,7 @@ class PolicyParams(NamedTuple):
     budgets: Optional[Array] = None
     key: Optional[Array] = None
     counts: Optional[Array] = None
+    budget_seq: Optional[Array] = None
 
 
 TraceFn = Callable[[OceanConfig, Array, PolicyParams], PolicyTrace]
@@ -114,6 +119,7 @@ def resolve_params(
     *,
     scenario_eta: Optional[Array] = None,
     scenario_budgets: Optional[Array] = None,
+    scenario_budget_seq: Optional[Array] = None,
 ) -> PolicyParams:
     """Fill None fields: explicit > policy default > scenario > uniform/cfg."""
     params = PolicyParams() if params is None else params
@@ -128,11 +134,16 @@ def resolve_params(
     budgets = params.budgets
     if budgets is None:
         budgets = scenario_budgets if scenario_budgets is not None else cfg.budgets()
+    budget_seq = params.budget_seq
+    if budget_seq is None:
+        budget_seq = scenario_budget_seq  # may stay None: constant drain
     if policy.needs_key and params.key is None:
         raise ValueError(
             f"policy {policy.name!r} is stochastic and requires PolicyParams.key"
         )
-    return params._replace(eta=jnp.asarray(eta, jnp.float32), budgets=budgets)
+    return params._replace(
+        eta=jnp.asarray(eta, jnp.float32), budgets=budgets, budget_seq=budget_seq
+    )
 
 
 def run_policy(
@@ -154,7 +165,7 @@ def _select_all_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
 
 
 def _smo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
-    return smo(cfg, h2_seq, budgets=params.budgets)
+    return smo(cfg, h2_seq, budgets=params.budgets, budget_seq=params.budget_seq)
 
 
 def _amo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
@@ -162,7 +173,14 @@ def _amo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
 
 
 def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
-    _, decs = simulate(cfg, h2_seq, params.eta, params.v, budgets=params.budgets)
+    _, decs = simulate(
+        cfg,
+        h2_seq,
+        params.eta,
+        params.v,
+        budgets=params.budgets,
+        budget_seq=params.budget_seq,
+    )
     return PolicyTrace(a=decs.a, b=decs.b, e=decs.e, num_selected=decs.num_selected)
 
 

@@ -7,11 +7,15 @@ channel model + radio physics + energy budgets + eta schedule + (T, K).
 It is a plain frozen dataclass of JSON-serializable leaves, so scenario
 grids can be stored, diffed, and shipped to workers.
 
-The channel is the paper's block-fading model: a per-round mean path loss
-(constant, or linearly drifting as in §VI scenarios 1/2) with optional
-i.i.d. Exp(1) Rayleigh power fading.  ``mean_gain_seq`` exposes the (T,)
-deterministic part so a grid engine can batch the stochastic part across
-scenarios with one draw per seed.
+The default channel is the paper's block-fading model: a per-round mean
+path loss (constant, or linearly drifting as in §VI scenarios 1/2) with
+optional i.i.d. Exp(1) Rayleigh power fading.  Richer dynamics come from
+the ``repro.env`` subsystem: setting ``env`` to an ``EnvSpec`` picks any
+registered channel process (Gauss-Markov correlated fading, LOS/NLOS
+blockage, random-waypoint mobility) and budget process (harvesting,
+depleting).  The legacy ``pathloss_db``/``fading`` fields act as a
+deprecated shim that lowers to the ``iid_rayleigh``/``static`` processes
+bit-for-bit.
 """
 from __future__ import annotations
 
@@ -31,6 +35,9 @@ from repro.core.channel import (
 from repro.core.energy import RadioParams
 from repro.core.ocean import OceanConfig
 from repro.core.patterns import eta_schedule
+from repro.env.channel import LowerCtx, get_channel_process, sample_channel_process
+from repro.env.energy import sample_budget_process
+from repro.env.spec import EnvSpec, LoweredEnv, env_cell_keys, lower_env
 
 Array = jax.Array
 
@@ -54,6 +61,10 @@ class Scenario:
                        ``repro.core.patterns.ETA_SCHEDULES``) used by
                        policies that don't pin their own.
       frame_len:       OCEAN frame length R (None => R = T).
+      env:             optional ``EnvSpec`` picking registered channel and
+                       budget processes; None lowers the legacy
+                       ``pathloss_db``/``fading`` fields to the
+                       ``iid_rayleigh``/``static`` shim.
     """
 
     name: str = "stationary"
@@ -65,6 +76,7 @@ class Scenario:
     energy_budget_j: Union[float, Tuple[float, ...]] = 0.15
     eta: str = "uniform"
     frame_len: Optional[int] = None
+    env: Optional[EnvSpec] = None
 
     def __post_init__(self):
         if len(self.pathloss_db) != 2:
@@ -79,6 +91,8 @@ class Scenario:
                     f"entries, got {len(self.energy_budget_j)}"
                 )
         eta_schedule(self.eta, 1)  # fail fast on unknown schedule names
+        if self.env is not None:
+            self.env.validate()  # fail fast on unknown process names
 
     # -- derived objects ----------------------------------------------------
     def ocean_config(self) -> OceanConfig:
@@ -98,19 +112,74 @@ class Scenario:
             sched = linear_pathloss(start, end, self.num_rounds)
         return ChannelModel(self.num_clients, sched, fading=self.fading)
 
+    # -- environment (repro.env) --------------------------------------------
+    def env_spec(self) -> EnvSpec:
+        """The embedded EnvSpec, or the legacy-field shim lowering."""
+        return self.env if self.env is not None else EnvSpec()
+
+    def lower_ctx(self) -> LowerCtx:
+        return LowerCtx(
+            num_rounds=self.num_rounds,
+            num_clients=self.num_clients,
+            pathloss_db=tuple(self.pathloss_db),
+            fading=self.fading,
+            budgets_j=tuple(
+                (self.energy_budget_j,) * self.num_clients
+                if isinstance(self.energy_budget_j, (int, float))
+                else self.energy_budget_j
+            ),
+        )
+
+    def lower_env(self) -> LoweredEnv:
+        """Unified environment params + stable key salt for this scenario."""
+        return lower_env(self.env_spec(), self.lower_ctx())
+
     def mean_gain_seq(self) -> Array:
-        """(T,) deterministic mean power gain g_t = 10^{-PL_t/10}."""
-        t = jnp.arange(self.num_rounds)
-        return pathloss_to_gain(self.channel_model().pathloss_db(t))
+        """(T,) closed-form mean power gain E[h^2]_t, when one exists."""
+        spec = self.env_spec()
+        proc = get_channel_process(spec.channel)
+        if proc.mean_gain is None:
+            raise ValueError(
+                f"channel process {spec.channel!r} has no closed-form mean "
+                f"gain (e.g. mobility trajectories); sample and average "
+                f"instead"
+            )
+        return proc.mean_gain(spec.channel_params, self.lower_ctx())
 
     def sample_channel(self, seed_or_key: Union[int, Array]) -> Array:
-        """(T, K) channel power gains h^2 for one realization."""
+        """(T, K) channel power gains h^2 for one realization.
+
+        Scenarios without an ``env`` take the legacy ``ChannelModel``
+        path unchanged; env scenarios sample their channel process with
+        the same fading key plus a content-salted environment key — the
+        exact keying the grid engine uses, so single runs and grid cells
+        agree bit-for-bit.
+        """
         key = (
             jax.random.PRNGKey(seed_or_key)
             if isinstance(seed_or_key, int)
             else seed_or_key
         )
-        return self.channel_model().sample(key, self.num_rounds)
+        if self.env is None:
+            return self.channel_model().sample(key, self.num_rounds)
+        lowered = self.lower_env()
+        k_chan, _ = env_cell_keys(key, jnp.uint32(lowered.key_salt))
+        return sample_channel_process(
+            lowered.channel, key, k_chan, self.num_rounds, self.num_clients
+        )
+
+    def sample_budget(self, seed_or_key: Union[int, Array]) -> Tuple[Array, Array]:
+        """((T, K) per-round budget increments, (K,) totals) for one seed."""
+        key = (
+            jax.random.PRNGKey(seed_or_key)
+            if isinstance(seed_or_key, int)
+            else seed_or_key
+        )
+        lowered = self.lower_env()
+        _, k_budget = env_cell_keys(key, jnp.uint32(lowered.key_salt))
+        return sample_budget_process(
+            lowered.budget, k_budget, self.num_rounds, self.num_clients
+        )
 
     def eta_seq(self) -> Array:
         return eta_schedule(self.eta, self.num_rounds)
@@ -125,16 +194,32 @@ class Scenario:
         d["pathloss_db"] = list(self.pathloss_db)
         if not isinstance(self.energy_budget_j, (int, float)):
             d["energy_budget_j"] = list(self.energy_budget_j)
+        if self.env is None:
+            d.pop("env")  # keep pre-EnvSpec payloads byte-stable
+        else:
+            d["env"] = self.env.to_dict()
         return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Scenario":
-        d = dict(d)
+        """Build from a dict, ignoring unknown keys.
+
+        Specs serialized by newer versions (more fields) must load on
+        older ones and vice versa, so unknown keys are dropped instead of
+        raising ``TypeError``.
+        """
+        known = {f.name for f in dataclasses.fields(cls)}
+        d = {k: v for k, v in d.items() if k in known}
         d["pathloss_db"] = tuple(d.get("pathloss_db", (36.0, 36.0)))
         if "radio" in d and isinstance(d["radio"], dict):
-            d["radio"] = RadioParams(**d["radio"])
+            radio_known = {f.name for f in dataclasses.fields(RadioParams)}
+            d["radio"] = RadioParams(
+                **{k: v for k, v in d["radio"].items() if k in radio_known}
+            )
         if isinstance(d.get("energy_budget_j"), list):
             d["energy_budget_j"] = tuple(d["energy_budget_j"])
+        if isinstance(d.get("env"), dict):
+            d["env"] = EnvSpec.from_dict(d["env"])
         return cls(**d)
 
     def to_json(self) -> str:
@@ -155,5 +240,49 @@ def paper_scenarios(num_rounds: int = 300, num_clients: int = 10):
         ),
         "scenario2": Scenario(
             name="scenario2", pathloss_db=(45.0, 32.0), **base
+        ),
+    }
+
+
+def environment_zoo(
+    num_rounds: int = 300, num_clients: int = 10, **overrides
+) -> Dict[str, Scenario]:
+    """One grid-compatible scenario per registered environment family.
+
+    All entries share (T, K, radio, frame_len), so the whole zoo fits on
+    one ``GridEngine`` scenario axis and compiles to a single program.
+    ``overrides`` are forwarded to every ``Scenario`` (e.g. ``radio=...``,
+    ``energy_budget_j=...``).
+    """
+    base = dict(num_rounds=num_rounds, num_clients=num_clients, **overrides)
+    return {
+        "stationary": Scenario(name="stationary", **base),
+        "markov_fading": Scenario(
+            name="markov_fading",
+            env=EnvSpec(channel="gauss_markov", channel_params={"rho": 0.9}),
+            **base,
+        ),
+        "blockage": Scenario(
+            name="blockage",
+            env=EnvSpec(
+                channel="markov_shadowing",
+                channel_params={"p_enter": 0.15, "p_exit": 0.5, "extra_db": 10.0},
+            ),
+            **base,
+        ),
+        "mobile": Scenario(
+            name="mobile",
+            env=EnvSpec(channel="mobility", channel_params={"area_m": 60.0}),
+            **base,
+        ),
+        "harvesting": Scenario(
+            name="harvesting",
+            env=EnvSpec(budget="harvesting", budget_params={"p_active": 0.5}),
+            **base,
+        ),
+        "depleting": Scenario(
+            name="depleting",
+            env=EnvSpec(budget="depleting"),
+            **base,
         ),
     }

@@ -1,0 +1,55 @@
+"""Env — pluggable wireless-environment processes for the WFLN repro.
+
+Pure, serializable, vmap/scan-compatible stochastic processes that
+generate the (T, K) inputs the simulation engine consumes: channel power
+gains (i.i.d. Rayleigh, Gauss-Markov correlated fading, LOS/NLOS
+blockage chains, random-waypoint mobility) and per-round energy-budget
+increments (static, harvesting, depleting).  Every process lowers to one
+shared parameter pytree, so heterogeneous environments batch across a
+grid's scenario axis inside a single compiled program.
+"""
+from repro.env.channel import (
+    ChannelParams,
+    ChannelProcess,
+    LowerCtx,
+    available_channel_processes,
+    get_channel_process,
+    register_channel_process,
+    sample_channel_process,
+)
+from repro.env.energy import (
+    BudgetParams,
+    BudgetProcess,
+    available_budget_processes,
+    get_budget_process,
+    register_budget_process,
+    sample_budget_process,
+)
+from repro.env.spec import (
+    EnvSpec,
+    LoweredEnv,
+    env_cell_keys,
+    env_key_salt,
+    lower_env,
+)
+
+__all__ = [
+    "ChannelParams",
+    "ChannelProcess",
+    "LowerCtx",
+    "available_channel_processes",
+    "get_channel_process",
+    "register_channel_process",
+    "sample_channel_process",
+    "BudgetParams",
+    "BudgetProcess",
+    "available_budget_processes",
+    "get_budget_process",
+    "register_budget_process",
+    "sample_budget_process",
+    "EnvSpec",
+    "LoweredEnv",
+    "env_cell_keys",
+    "env_key_salt",
+    "lower_env",
+]

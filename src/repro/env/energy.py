@@ -1,0 +1,181 @@
+"""Budget processes — per-round energy-allowance dynamics.
+
+The paper gives every client one static long-term budget ``H_k`` that
+OCEAN drains at ``H_k / T`` per round.  A :class:`BudgetProcess`
+generalizes that to a (T, K) matrix of per-round *increments* ``dH`` plus
+a (K,) *total*: OCEAN's virtual queues and SMO's hard per-round caps
+consume ``dH[t]``, while AMO keeps budgeting against the total.
+
+Like the channel processes, every entry lowers to one shared
+:class:`BudgetParams` pytree interpreted by a single program
+(:func:`sample_budget_process`), so heterogeneous budget dynamics batch
+across the scenario axis of a grid without retracing.
+
+Processes
+---------
+``static``
+    ``dH[t] = H_k / T`` every round — bit-identical to the legacy
+    constant drain (same division, merely hoisted out of the loop).
+``harvesting``
+    Stochastic per-round energy arrivals: with probability ``p_active``
+    a round harvests an ``Exp``-distributed packet whose mean keeps the
+    long-run arrival rate at ``mean_j_per_round`` (default ``H_k / T``).
+    The realized total (sum of arrivals) replaces ``H_k``.
+``depleting``
+    Deterministically shrinking allowance (battery wear): increments
+    decay linearly to zero while summing to ``H_k``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Mapping, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.env.channel import LowerCtx, check_spec_keys
+
+Array = jax.Array
+
+
+class BudgetParams(NamedTuple):
+    """Unified, vmappable parameterization of every budget process."""
+
+    det_inc: Array       # (T, K) deterministic per-round increments
+    stoch_scale: Array   # ()  1.0 => add stochastic arrivals
+    rate: Array          # (K,) mean energy per *active* arrival (J)
+    p_active: Array      # ()  per-round arrival probability
+    total_static: Array  # (K,) declared total H_k (static/deterministic)
+    use_realized: Array  # ()  1.0 => total = sum of sampled increments
+
+
+def sample_budget_process(
+    params: BudgetParams, key: Array, num_rounds: int, num_clients: int
+) -> Tuple[Array, Array]:
+    """Draw (dH, total): (T, K) per-round increments and (K,) totals."""
+    T, K = num_rounds, num_clients
+    k_act, k_amt = jax.random.split(key)
+    u_act = jax.random.uniform(k_act, (T, K))
+    u_amt = jax.random.uniform(k_amt, (T, K), minval=1e-6, maxval=1.0)
+    arrivals = params.rate * -jnp.log(u_amt) * (u_act < params.p_active)
+    dh = params.det_inc + params.stoch_scale * arrivals
+    total = jnp.where(
+        params.use_realized > 0.0, jnp.sum(dh, axis=0), params.total_static
+    )
+    return dh, total
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+BudgetLowerFn = Callable[[Mapping[str, Any], LowerCtx], BudgetParams]
+
+
+class BudgetProcess(NamedTuple):
+    name: str
+    lower: BudgetLowerFn
+    doc: str = ""
+
+
+_BUDGET_REGISTRY: Dict[str, BudgetProcess] = {}
+
+
+def register_budget_process(
+    name: str, lower: BudgetLowerFn, *, doc: str = ""
+) -> BudgetProcess:
+    proc = BudgetProcess(name, lower, doc)
+    _BUDGET_REGISTRY[name] = proc
+    return proc
+
+
+def available_budget_processes() -> Tuple[str, ...]:
+    return tuple(sorted(_BUDGET_REGISTRY))
+
+
+def get_budget_process(name: str) -> BudgetProcess:
+    if name not in _BUDGET_REGISTRY:
+        raise ValueError(
+            f"unknown budget process {name!r}; available: "
+            f"{', '.join(available_budget_processes())}"
+        )
+    return _BUDGET_REGISTRY[name]
+
+
+# -- registry entries -------------------------------------------------------
+def _ctx_budgets(spec: Mapping[str, Any], ctx: LowerCtx) -> Array:
+    h = spec.get("budget_j", ctx.budgets_j)
+    return jnp.broadcast_to(jnp.asarray(h, jnp.float32), (ctx.num_clients,))
+
+
+def _zeros_like_params(ctx: LowerCtx, det_inc: Array, totals: Array) -> Dict[str, Array]:
+    return dict(
+        det_inc=det_inc,
+        stoch_scale=jnp.float32(0.0),
+        rate=jnp.zeros((ctx.num_clients,), jnp.float32),
+        p_active=jnp.float32(0.0),
+        total_static=totals,
+        use_realized=jnp.float32(0.0),
+    )
+
+
+def _static_lower(spec, ctx):
+    check_spec_keys("static", spec, ("budget_j",))
+    h = _ctx_budgets(spec, ctx)
+    # h / T is the exact expression the legacy queue update evaluated, so
+    # the static process reproduces it bit-for-bit.
+    det = jnp.broadcast_to(h / ctx.num_rounds, (ctx.num_rounds, ctx.num_clients))
+    return BudgetParams(**_zeros_like_params(ctx, det, h))
+
+
+def _harvesting_lower(spec, ctx):
+    check_spec_keys("harvesting", spec, ("budget_j", "p_active", "mean_j_per_round"))
+    h = _ctx_budgets(spec, ctx)
+    p_active = float(spec.get("p_active", 0.5))
+    if not 0.0 < p_active <= 1.0:
+        raise ValueError(f"harvesting p_active must be in (0, 1], got {p_active}")
+    mean = spec.get("mean_j_per_round")
+    mean_arr = (
+        h / ctx.num_rounds
+        if mean is None
+        else jnp.broadcast_to(jnp.asarray(mean, jnp.float32), (ctx.num_clients,))
+    )
+    fields = _zeros_like_params(
+        ctx,
+        jnp.zeros((ctx.num_rounds, ctx.num_clients), jnp.float32),
+        h,
+    )
+    fields.update(
+        stoch_scale=jnp.float32(1.0),
+        rate=mean_arr / p_active,
+        p_active=jnp.float32(p_active),
+        use_realized=jnp.float32(1.0),
+    )
+    return BudgetParams(**fields)
+
+
+def _depleting_lower(spec, ctx):
+    check_spec_keys("depleting", spec, ("budget_j", "end_frac"))
+    h = _ctx_budgets(spec, ctx)
+    T = ctx.num_rounds
+    end_frac = float(spec.get("end_frac", 0.0))
+    if not 0.0 <= end_frac <= 1.0:
+        raise ValueError(f"depleting end_frac must be in [0, 1], got {end_frac}")
+    # Linear ramp from w0 down to w0 * end_frac, normalized to sum to 1.
+    ramp = 1.0 - (1.0 - end_frac) * jnp.arange(T, dtype=jnp.float32) / max(T - 1, 1)
+    weights = ramp / jnp.sum(ramp)
+    det = weights[:, None] * h[None, :]
+    return BudgetParams(**_zeros_like_params(ctx, det, h))
+
+
+register_budget_process(
+    "static", _static_lower, doc="constant H_k / T drain (the paper's setting)"
+)
+register_budget_process(
+    "harvesting",
+    _harvesting_lower,
+    doc="stochastic per-round energy arrivals accumulating into H_k",
+)
+register_budget_process(
+    "depleting",
+    _depleting_lower,
+    doc="per-round allowance decays linearly to end_frac (battery wear)",
+)

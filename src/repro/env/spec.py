@@ -1,0 +1,132 @@
+"""EnvSpec — the serializable description of a wireless environment.
+
+An :class:`EnvSpec` names one registered channel process and one budget
+process plus their JSON-able parameter dicts.  ``Scenario`` embeds an
+optional ``EnvSpec``; scenarios without one keep the legacy
+``pathloss_db``/``fading`` fields, which lower to the ``iid_rayleigh`` /
+``static`` processes (the deprecated shim).
+
+Key discipline
+--------------
+Randomness for a (scenario, seed) cell uses two keys:
+
+* the *fading key* ``PRNGKey(seed)`` — shared across scenarios, exactly
+  as the legacy engine drew its Exp(1) stream (keeps ``iid_rayleigh``
+  bit-identical to ``ChannelModel.sample``);
+* the *environment key* ``fold_in(PRNGKey(seed), env_key_salt(spec))`` —
+  salted with a stable content hash of the spec, so adding, removing, or
+  reordering scenarios in a grid never changes another cell's blockage
+  chain, trajectories, or energy arrivals (it would if the salt were the
+  grid *index*).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import zlib
+from typing import Any, Dict, Mapping, NamedTuple, Tuple
+
+import jax
+
+from repro.env.channel import (
+    ChannelParams,
+    LowerCtx,
+    get_channel_process,
+)
+from repro.env.energy import BudgetParams, get_budget_process
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """One wireless environment: channel process + budget process.
+
+    Attributes:
+      channel:        registered channel-process name (see
+                      ``repro.env.available_channel_processes``).
+      channel_params: JSON-able parameter dict for the channel process.
+      budget:         registered budget-process name.
+      budget_params:  JSON-able parameter dict for the budget process.
+    """
+
+    channel: str = "iid_rayleigh"
+    channel_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    budget: str = "static"
+    budget_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def validate(self) -> None:
+        get_channel_process(self.channel)
+        get_budget_process(self.budget)
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "channel": self.channel,
+            "channel_params": dict(self.channel_params),
+            "budget": self.budget,
+            "budget_params": dict(self.budget_params),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "EnvSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "EnvSpec":
+        return cls.from_dict(json.loads(s))
+
+
+# The frozen-dataclass generated __hash__ would TypeError on the dict
+# fields; hash the canonical JSON instead so env-bearing Scenarios stay
+# usable as dict keys / set members (consistent with __eq__ for JSON-able
+# params).
+EnvSpec.__hash__ = lambda self: hash(self.to_json())  # type: ignore[method-assign]
+
+
+class LoweredEnv(NamedTuple):
+    """An EnvSpec lowered against one scenario's statics."""
+
+    channel: ChannelParams
+    budget: BudgetParams
+    key_salt: int  # uint32 content hash for fold_in
+
+
+def env_key_salt(spec: EnvSpec, ctx: LowerCtx) -> int:
+    """Stable uint32 salt from the spec *content* (never a grid index)."""
+    payload = json.dumps(
+        {
+            "env": spec.to_dict(),
+            "num_rounds": ctx.num_rounds,
+            "num_clients": ctx.num_clients,
+        },
+        sort_keys=True,
+        default=list,
+    )
+    return zlib.crc32(payload.encode()) & 0xFFFFFFFF
+
+
+def lower_env(spec: EnvSpec, ctx: LowerCtx) -> LoweredEnv:
+    """Resolve registry entries and lower to the unified param pytrees."""
+    chan = get_channel_process(spec.channel)
+    budg = get_budget_process(spec.budget)
+    return LoweredEnv(
+        channel=chan.lower(spec.channel_params, ctx),
+        budget=budg.lower(spec.budget_params, ctx),
+        key_salt=env_key_salt(spec, ctx),
+    )
+
+
+def env_cell_keys(fade_key: Array, key_salt) -> Tuple[Array, Array]:
+    """(channel_key, budget_key) for one (scenario, seed) cell.
+
+    Both derive from ``fold_in(fade_key, salt)`` so they are independent
+    of the fading stream and stable under grid composition.
+    """
+    env_key = jax.random.fold_in(fade_key, key_salt)
+    k_chan, k_budget = jax.random.split(env_key)
+    return k_chan, k_budget

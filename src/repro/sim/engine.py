@@ -5,9 +5,13 @@ path simulated one cell at a time — a Python loop that re-traced the
 ``lax.scan`` trajectory for every combination.  ``GridEngine`` instead
 builds a single jitted program that
 
-  1. samples the block-fading channels for all seeds with one vmapped draw
-     (bit-identical to ``ChannelModel.sample`` per seed, because the Exp(1)
-     fading does not depend on the scenario's path-loss schedule),
+  1. samples every scenario's *environment* — channel process and budget
+     process (``repro.env``) — with one vmapped ``lax.scan`` over the
+     (scenario, seed) axes.  All registered processes lower to one shared
+     parameter pytree, so a grid mixing i.i.d. Rayleigh cells with
+     Markov-fading, blockage, or mobile-client cells still traces a
+     single program; the ``iid_rayleigh`` shim is bit-identical to the
+     legacy ``ChannelModel.sample`` per seed,
   2. runs every registered policy over every (scenario, seed) cell via
      nested ``vmap`` (policies are unrolled — they are structurally
      different programs — while scenarios and seeds are batched axes),
@@ -18,9 +22,14 @@ and returns stacked ``(P, S, N, T, K)`` outputs.  The program is traced
 and compiled exactly once per ``GridEngine``; subsequent ``run`` calls with
 the same grid shape reuse the executable.
 
-Scenario-dependent *arrays* (mean channel gains, eta schedules, budgets)
+Scenario-dependent *arrays* (environment params, eta schedules, budgets)
 are batched; scenario-dependent *statics* (T, K, radio physics, frame
 length) must agree across the grid — they shape the compiled program.
+
+Environment streams are keyed by ``fold_in(PRNGKey(seed), salt)`` where
+``salt`` is a stable content hash of the scenario's EnvSpec — never its
+grid index — so adding, removing, or reordering scenarios cannot change
+any other cell's draws (see ``repro.env.spec``).
 """
 from __future__ import annotations
 
@@ -38,6 +47,9 @@ from repro.core.policy import (
     resolve_params,
 )
 from repro.core.scenario import Scenario
+from repro.env.channel import sample_channel_process
+from repro.env.energy import sample_budget_process
+from repro.env.spec import env_cell_keys
 
 Array = jax.Array
 
@@ -61,6 +73,8 @@ class GridResult(NamedTuple):
     policies: Tuple[str, ...]
     scenarios: Tuple[str, ...]
     seeds: Tuple[int, ...]
+    budget_inc: Optional[Array] = None    # (S, N, T, K) per-round increments
+    budget_total: Optional[Array] = None  # (S, N, K) realized totals H_k
 
     def cell(self, policy: str, scenario: str, seed: int) -> PolicyTrace:
         """Extract one (policy, scenario, seed) cell as a PolicyTrace."""
@@ -138,30 +152,45 @@ class GridEngine:
         self.policies = tuple(pol.name for pol, _ in self._resolved)
         self.experiment = experiment
 
-        # Scenario-batched arrays (the vmapped axes).
-        self._gains = jnp.stack([sc.mean_gain_seq() for sc in self.scenarios])
+        # Scenario-batched arrays (the vmapped axes): every scenario's
+        # environment lowers to the same param pytrees, stacked on axis 0.
+        lowered = [sc.lower_env() for sc in self.scenarios]
+        self._chan_params = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[l.channel for l in lowered]
+        )
+        self._budget_params = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[l.budget for l in lowered]
+        )
+        self._env_salts = jnp.asarray(
+            [l.key_salt for l in lowered], jnp.uint32
+        )
         self._etas = jnp.stack([sc.eta_seq() for sc in self.scenarios])
-        self._budgets = jnp.stack([sc.budgets() for sc in self.scenarios])
-        self._fading = jnp.asarray([sc.fading for sc in self.scenarios])
 
         self._fn = jax.jit(self._build)
 
     # -- the single compiled program ----------------------------------------
-    def _build(self, seed_arr, gains, etas, budgets, fading, base_key, learn_keys):
+    def _build(
+        self, seed_arr, chan_params, budget_params, env_salts, etas,
+        base_key, learn_keys,
+    ):
         cfg = self.cfg
         T, K = cfg.num_rounds, cfg.num_clients
 
-        def sample_fading(seed):
-            # Mirrors ChannelModel.sample exactly: the uniform draw depends
-            # only on the seed and (T, K), never on the path-loss schedule.
-            u = jax.random.uniform(
-                jax.random.PRNGKey(seed), (T, K), minval=1e-6, maxval=1.0
-            )
-            return -jnp.log(u)
+        def sample_cell(cp, bp, salt, seed):
+            # The fading key mirrors ChannelModel.sample exactly (shared
+            # across scenarios); scenario-specific streams fold in the
+            # spec's stable content salt (see module docstring).
+            fade_key = jax.random.PRNGKey(seed)
+            k_chan, k_budget = env_cell_keys(fade_key, salt)
+            h2 = sample_channel_process(cp, fade_key, k_chan, T, K)
+            dh, total = sample_budget_process(bp, k_budget, T, K)
+            return h2, dh, total
 
-        x = jax.vmap(sample_fading)(seed_arr)                     # (N, T, K)
-        x = jnp.where(fading[:, None, None, None], x[None], 1.0)  # (S, N, T, K)
-        h2 = gains[:, None, :, None] * x                          # (S, N, T, K)
+        over_seeds = jax.vmap(sample_cell, in_axes=(None, None, None, 0))
+        h2, budget_inc, budget_total = jax.vmap(
+            over_seeds, in_axes=(0, 0, 0, None)
+        )(chan_params, budget_params, env_salts, seed_arr)
+        # h2/budget_inc: (S, N, T, K); budget_total: (S, N, K)
 
         def cell_keys(s_idx):
             return jax.vmap(
@@ -175,18 +204,21 @@ class GridEngine:
         traces = []
         histories = []
         for pol, pp in self._resolved:
-            def cell(h2_cell, eta_s, budg_s, key_cell, pol=pol, pp=pp):
+            def cell(h2_cell, eta_s, total_cell, inc_cell, key_cell, pol=pol, pp=pp):
                 params = resolve_params(
                     pol,
                     cfg,
                     pp._replace(key=pp.key if pp.key is not None else key_cell),
                     scenario_eta=eta_s,
-                    scenario_budgets=budg_s,
+                    scenario_budgets=total_cell,
+                    scenario_budget_seq=inc_cell,
                 )
                 return pol.trace_fn(cfg, h2_cell, params)
 
-            over_seeds = jax.vmap(cell, in_axes=(0, None, None, 0))
-            tr = jax.vmap(over_seeds)(h2, etas, budgets, keys)    # (S, N, ...)
+            over_seeds = jax.vmap(cell, in_axes=(0, None, 0, 0, 0))
+            tr = jax.vmap(over_seeds)(
+                h2, etas, budget_total, budget_inc, keys
+            )                                                     # (S, N, ...)
             traces.append(tr)
             if self.experiment is not None:
                 run = self.experiment.run
@@ -201,7 +233,7 @@ class GridEngine:
             if histories
             else None
         )
-        return a, b, e, ns, h2, history
+        return a, b, e, ns, h2, budget_inc, budget_total, history
 
     # -- public API ----------------------------------------------------------
     def run(
@@ -243,12 +275,12 @@ class GridEngine:
                     f"learn_keys must have leading shape (S={S}, N={N}), "
                     f"got {learn_keys.shape}"
                 )
-        a, b, e, ns, h2, history = self._fn(
+        a, b, e, ns, h2, budget_inc, budget_total, history = self._fn(
             seed_arr,
-            self._gains,
+            self._chan_params,
+            self._budget_params,
+            self._env_salts,
             self._etas,
-            self._budgets,
-            self._fading,
             base_key,
             learn_keys,
         )
@@ -263,6 +295,8 @@ class GridEngine:
             policies=self.policies,
             scenarios=tuple(sc.name for sc in self.scenarios),
             seeds=seeds,
+            budget_inc=budget_inc,
+            budget_total=budget_total,
         )
 
 

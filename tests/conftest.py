@@ -5,5 +5,29 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 
 jax.config.update("jax_threefry_partitionable", True)
+
+
+def sample_many(sc, num_seeds: int, start: int = 0) -> np.ndarray:
+    """(N, T, K) env-channel draws via one jitted vmap (fast test path).
+
+    Shared by test_env.py and test_env_properties.py; uses the same
+    keying discipline as the grid engine (env_cell_keys).
+    """
+    from repro.env.channel import sample_channel_process
+    from repro.env.spec import env_cell_keys
+
+    lowered = sc.lower_env()
+
+    def one(seed):
+        fk = jax.random.PRNGKey(seed)
+        kc, _ = env_cell_keys(fk, jnp.uint32(lowered.key_salt))
+        return sample_channel_process(
+            lowered.channel, fk, kc, sc.num_rounds, sc.num_clients
+        )
+
+    seeds = jnp.arange(start, start + num_seeds, dtype=jnp.uint32)
+    return np.asarray(jax.jit(jax.vmap(one))(seeds))

@@ -1,0 +1,376 @@
+"""repro.env subsystem: registries, bit-identity shims, key stability,
+budget processes, EnvSpec/Scenario serialization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnvSpec, PolicyParams, Scenario, environment_zoo, simulate
+from repro.core.channel import ChannelModel, constant_pathloss
+from repro.core.policy import run_policy
+from repro.env import (
+    available_budget_processes,
+    available_channel_processes,
+    get_channel_process,
+    sample_channel_process,
+)
+from repro.env.channel import LowerCtx
+from repro.env.spec import env_cell_keys, env_key_salt, lower_env
+from repro.sim import GridEngine, run_grid
+
+T, K = 40, 6
+
+
+def ctx():
+    return LowerCtx(T, K, (36.0, 36.0), True, (0.15,) * K)
+
+
+# --------------------------------------------------------------------------
+# registries
+# --------------------------------------------------------------------------
+def test_registry_contents():
+    assert {"iid_rayleigh", "gauss_markov", "markov_shadowing", "mobility"} <= set(
+        available_channel_processes()
+    )
+    assert {"static", "harvesting", "depleting"} <= set(
+        available_budget_processes()
+    )
+
+
+def test_unknown_process_names_rejected():
+    with pytest.raises(ValueError, match="unknown channel process"):
+        Scenario(env=EnvSpec(channel="nope"))
+    with pytest.raises(ValueError, match="unknown budget process"):
+        Scenario(env=EnvSpec(budget="nope"))
+
+
+def test_env_package_imports_standalone():
+    """Regression: `import repro.env` must work without repro.core loaded
+    first (the env <-> core.__init__ import cycle)."""
+    import subprocess
+    import sys
+
+    proc = subprocess.run(
+        [sys.executable, "-c", "import repro.env; import repro.core"],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_unknown_param_keys_fail_fast():
+    """Typo'd parameter keys must not be silently replaced by defaults."""
+    with pytest.raises(ValueError, match="unknown parameter"):
+        Scenario(
+            env=EnvSpec(
+                channel="markov_shadowing", channel_params={"p_entry": 0.9}
+            )
+        ).lower_env()
+    with pytest.raises(ValueError, match="unknown parameter"):
+        Scenario(
+            env=EnvSpec(budget="harvesting", budget_params={"pactive": 0.1})
+        ).lower_env()
+    # mobility ignores scheduled path loss entirely -> must reject it
+    with pytest.raises(ValueError, match="unknown parameter"):
+        Scenario(
+            env=EnvSpec(
+                channel="mobility", channel_params={"pathloss_db": [50.0, 50.0]}
+            )
+        ).lower_env()
+
+
+def test_env_scenarios_are_hashable():
+    a = Scenario(env=EnvSpec(channel="mobility", channel_params={"area_m": 50.0}))
+    b = Scenario(env=EnvSpec(channel="mobility", channel_params={"area_m": 50.0}))
+    c = Scenario(env=EnvSpec(channel="mobility", channel_params={"area_m": 80.0}))
+    assert hash(a) == hash(b) and a == b
+    assert len({a, b, c}) == 2
+
+
+def test_invalid_process_params_fail_fast():
+    with pytest.raises(ValueError, match=r"\|rho\| < 1"):
+        Scenario(
+            env=EnvSpec(channel="gauss_markov", channel_params={"rho": 1.2})
+        ).lower_env()
+    with pytest.raises(ValueError, match="probability"):
+        Scenario(
+            env=EnvSpec(
+                channel="markov_shadowing", channel_params={"p_enter": 1.5}
+            )
+        ).lower_env()
+    with pytest.raises(ValueError, match="speed_mps"):
+        Scenario(
+            env=EnvSpec(channel="mobility", channel_params={"speed_mps": [5, 1]})
+        ).lower_env()
+
+
+# --------------------------------------------------------------------------
+# bit-identity of the iid_rayleigh shim (acceptance criterion)
+# --------------------------------------------------------------------------
+def test_iid_env_scenario_bit_identical_to_legacy():
+    legacy = Scenario(num_clients=K, num_rounds=T)
+    env_sc = Scenario(num_clients=K, num_rounds=T, env=EnvSpec())
+    for seed in (0, 7, 123):
+        np.testing.assert_array_equal(
+            np.asarray(env_sc.sample_channel(seed)),
+            np.asarray(legacy.sample_channel(seed)),
+        )
+
+
+def test_iid_env_engine_bit_identical_to_channel_model():
+    """EnvSpec path through the engine == legacy ChannelModel.sample."""
+    scenarios = [
+        Scenario(name="legacy", num_clients=K, num_rounds=T),
+        Scenario(name="env", num_clients=K, num_rounds=T, env=EnvSpec()),
+    ]
+    res = run_grid(scenarios, ["smo"], seeds=[0, 5])
+    model = ChannelModel(K, constant_pathloss(36.0))
+    for n, seed in enumerate(res.seeds):
+        ref = np.asarray(model.sample(jax.random.PRNGKey(seed), T))
+        np.testing.assert_array_equal(np.asarray(res.h2[0, n]), ref)
+        np.testing.assert_array_equal(np.asarray(res.h2[1, n]), ref)
+
+
+def test_gauss_markov_rho0_bit_identical_to_iid():
+    iid = Scenario(num_clients=K, num_rounds=T, env=EnvSpec())
+    gm = Scenario(
+        num_clients=K,
+        num_rounds=T,
+        env=EnvSpec(channel="gauss_markov", channel_params={"rho": 0.0}),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(gm.sample_channel(3)), np.asarray(iid.sample_channel(3))
+    )
+
+
+def test_gauss_markov_correlates_rounds():
+    gm = Scenario(
+        num_clients=K,
+        num_rounds=200,
+        env=EnvSpec(channel="gauss_markov", channel_params={"rho": 0.95}),
+    )
+    x = np.asarray(gm.sample_channel(0))
+    iid = np.asarray(Scenario(num_clients=K, num_rounds=200).sample_channel(0))
+    corr = np.corrcoef(x[:-1].ravel(), x[1:].ravel())[0, 1]
+    corr_iid = np.corrcoef(iid[:-1].ravel(), iid[1:].ravel())[0, 1]
+    assert corr > 0.5 > abs(corr_iid) + 0.3
+
+
+# --------------------------------------------------------------------------
+# environment-zoo grid: heterogeneous processes, one compiled program
+# --------------------------------------------------------------------------
+def test_env_zoo_grid_single_program():
+    zoo = list(environment_zoo(num_rounds=T, num_clients=K).values())
+    assert len(zoo) >= 3
+    eng = GridEngine(zoo, ["ocean-u", "smo"])
+    res = eng.run([0, 1])
+    P, S, N = 2, len(zoo), 2
+    assert res.a.shape == (P, S, N, T, K)
+    assert res.h2.shape == (S, N, T, K)
+    assert res.budget_inc.shape == (S, N, T, K)
+    assert res.budget_total.shape == (S, N, K)
+    assert bool(jnp.all(jnp.isfinite(res.h2))) and bool(jnp.all(res.h2 > 0))
+    if hasattr(eng._fn, "_cache_size"):
+        assert eng._fn._cache_size() == 1  # one executable for the whole zoo
+
+
+def test_env_grid_cells_match_single_scenario_sampling():
+    zoo = environment_zoo(num_rounds=T, num_clients=K)
+    scenarios = [zoo["blockage"], zoo["mobile"], zoo["harvesting"]]
+    res = run_grid(scenarios, ["smo"], seeds=[0, 2])
+    for s, sc in enumerate(scenarios):
+        for n, seed in enumerate(res.seeds):
+            np.testing.assert_array_equal(
+                np.asarray(res.h2[s, n]), np.asarray(sc.sample_channel(seed))
+            )
+            dh, tot = sc.sample_budget(seed)
+            np.testing.assert_array_equal(
+                np.asarray(res.budget_inc[s, n]), np.asarray(dh)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(res.budget_total[s, n]), np.asarray(tot)
+            )
+
+
+def test_channel_keys_stable_under_grid_composition():
+    """Regression (PR 2): env draws are salted by spec *content*, so
+    adding or reordering scenarios never changes other cells' draws."""
+    zoo = environment_zoo(num_rounds=T, num_clients=K)
+    a, b, c = zoo["blockage"], zoo["mobile"], zoo["markov_fading"]
+    r1 = run_grid([a, b], ["smo"], seeds=[0, 1])
+    r2 = run_grid([c, b, a], ["smo"], seeds=[0, 1])
+    np.testing.assert_array_equal(np.asarray(r1.h2[0]), np.asarray(r2.h2[2]))
+    np.testing.assert_array_equal(np.asarray(r1.h2[1]), np.asarray(r2.h2[1]))
+    np.testing.assert_array_equal(
+        np.asarray(r1.budget_inc[0]), np.asarray(r2.budget_inc[2])
+    )
+
+
+def test_env_key_salt_is_content_hash():
+    s1 = env_key_salt(EnvSpec(channel="mobility"), ctx())
+    s2 = env_key_salt(EnvSpec(channel="mobility"), ctx())
+    s3 = env_key_salt(EnvSpec(channel="markov_shadowing"), ctx())
+    assert s1 == s2 != s3
+    assert 0 <= s1 < 2**32
+
+
+# --------------------------------------------------------------------------
+# budget processes
+# --------------------------------------------------------------------------
+def test_static_budget_bit_identical_to_legacy_drain():
+    sc = Scenario(num_clients=K, num_rounds=T, env=EnvSpec())
+    dh, tot = sc.sample_budget(0)
+    h = np.float32(0.15)
+    np.testing.assert_array_equal(np.asarray(dh), np.full((T, K), h / T))
+    np.testing.assert_array_equal(np.asarray(tot), np.full((K,), h))
+
+
+def test_ocean_budget_seq_constant_matches_legacy():
+    sc = Scenario(num_clients=K, num_rounds=T)
+    cfg = sc.ocean_config()
+    h2 = sc.sample_channel(0)
+    eta = sc.eta_seq()
+    _, ref = simulate(cfg, h2, eta, 1e-5)
+    inc = jnp.broadcast_to(cfg.budgets() / T, (T, K))
+    _, out = simulate(cfg, h2, eta, 1e-5, budget_seq=inc)
+    np.testing.assert_array_equal(np.asarray(out.a), np.asarray(ref.a))
+    np.testing.assert_array_equal(np.asarray(out.e), np.asarray(ref.e))
+
+
+def test_depleting_budget_monotone_and_normalized():
+    sc = Scenario(num_clients=K, num_rounds=T, env=EnvSpec(budget="depleting"))
+    dh, tot = sc.sample_budget(0)
+    dh = np.asarray(dh)
+    assert np.all(np.diff(dh[:, 0]) <= 1e-9)  # decaying allowance
+    np.testing.assert_allclose(dh.sum(axis=0), np.asarray(tot), rtol=1e-5)
+
+
+def test_harvesting_realized_totals_and_smo_respects_them():
+    sc = Scenario(
+        num_clients=K,
+        num_rounds=T,
+        env=EnvSpec(budget="harvesting", budget_params={"p_active": 0.5}),
+    )
+    res = run_grid([sc], ["smo"], seeds=[0, 1, 2])
+    tot = np.asarray(res.budget_total[0])   # (N, K)
+    inc = np.asarray(res.budget_inc[0])     # (N, T, K)
+    assert np.all(tot > 0)
+    np.testing.assert_allclose(inc.sum(axis=1), tot, rtol=1e-5)
+    spent = np.asarray(res.energy_spent[0, 0])  # (N, K)
+    assert np.all(spent <= tot * 1.02 + 1e-9)   # hard per-round caps
+
+
+def test_smo_budget_seq_default_matches_legacy():
+    sc = Scenario(num_clients=K, num_rounds=T)
+    h2 = sc.sample_channel(4)
+    ref = run_policy("smo", sc.ocean_config(), h2)
+    out = run_policy(
+        "smo",
+        sc.ocean_config(),
+        h2,
+        PolicyParams(budget_seq=jnp.broadcast_to(sc.budgets() / T, (T, K))),
+    )
+    np.testing.assert_array_equal(np.asarray(out.a), np.asarray(ref.a))
+    np.testing.assert_array_equal(np.asarray(out.b), np.asarray(ref.b))
+
+
+# --------------------------------------------------------------------------
+# declared mean gains
+# --------------------------------------------------------------------------
+def test_mean_gain_matches_samples():
+    from conftest import sample_many
+
+    for name, params in [
+        ("iid_rayleigh", {}),
+        ("gauss_markov", {"rho": 0.8}),
+        ("markov_shadowing", {"p_enter": 0.2, "p_exit": 0.4, "extra_db": 6.0}),
+    ]:
+        sc = Scenario(
+            num_clients=K,
+            num_rounds=T,
+            env=EnvSpec(channel=name, channel_params=params),
+        )
+        g = np.asarray(sc.mean_gain_seq()).mean()
+        samples = sample_many(sc, 400)
+        assert abs(samples.mean() / g - 1.0) < 0.15, name
+
+
+def test_mobility_has_no_closed_form_mean():
+    sc = Scenario(num_clients=K, num_rounds=T, env=EnvSpec(channel="mobility"))
+    with pytest.raises(ValueError, match="no closed-form mean"):
+        sc.mean_gain_seq()
+
+
+# --------------------------------------------------------------------------
+# serialization (satellite: unknown keys, EnvSpec round-trip)
+# --------------------------------------------------------------------------
+def test_from_dict_ignores_unknown_keys():
+    d = Scenario(num_clients=K, num_rounds=T).to_dict()
+    d["a_future_field"] = {"nested": True}
+    d["radio"]["a_future_radio_knob"] = 7
+    sc = Scenario.from_dict(d)
+    assert sc.num_clients == K and sc.num_rounds == T
+
+
+def test_env_spec_json_round_trip():
+    spec = EnvSpec(
+        channel="gauss_markov",
+        channel_params={"rho": 0.9, "pathloss_db": [32.0, 45.0]},
+        budget="harvesting",
+        budget_params={"p_active": 0.25},
+    )
+    assert EnvSpec.from_json(spec.to_json()) == spec
+
+
+def test_scenario_with_env_json_round_trip():
+    sc = Scenario(
+        name="zoo",
+        num_clients=K,
+        num_rounds=T,
+        env=EnvSpec(channel="mobility", channel_params={"area_m": 80.0}),
+    )
+    back = Scenario.from_json(sc.to_json())
+    assert back == sc
+    # and the round-tripped spec samples identically
+    np.testing.assert_array_equal(
+        np.asarray(back.sample_channel(1)), np.asarray(sc.sample_channel(1))
+    )
+
+
+def test_legacy_scenario_json_payload_unchanged():
+    """Pre-EnvSpec payloads stay byte-stable (no 'env' key when unset)."""
+    sc = Scenario(num_clients=K, num_rounds=T)
+    assert "env" not in sc.to_dict()
+    assert Scenario.from_json(sc.to_json()) == sc
+
+
+# --------------------------------------------------------------------------
+# processes compose with vmap (engine contract)
+# --------------------------------------------------------------------------
+def test_process_params_stack_and_vmap():
+    specs = [
+        EnvSpec(),
+        EnvSpec(channel="gauss_markov", channel_params={"rho": 0.7}),
+        EnvSpec(channel="mobility"),
+    ]
+    lows = [lower_env(s, ctx()) for s in specs]
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[l.channel for l in lows]
+    )
+    salts = jnp.asarray([l.key_salt for l in lows], jnp.uint32)
+
+    def cell(cp, salt):
+        fk = jax.random.PRNGKey(0)
+        kc, _ = env_cell_keys(fk, salt)
+        return sample_channel_process(cp, fk, kc, T, K)
+
+    h2 = jax.jit(jax.vmap(cell))(stacked, salts)
+    assert h2.shape == (3, T, K)
+    ref = sample_channel_process(
+        lows[0].channel,
+        jax.random.PRNGKey(0),
+        env_cell_keys(jax.random.PRNGKey(0), jnp.uint32(lows[0].key_salt))[0],
+        T,
+        K,
+    )
+    np.testing.assert_array_equal(np.asarray(h2[0]), np.asarray(ref))

@@ -1,0 +1,91 @@
+"""Property tests for the environment zoo (hypothesis, dev extra)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from conftest import sample_many  # noqa: E402
+from repro.core import EnvSpec, Scenario  # noqa: E402
+from repro.env import available_channel_processes  # noqa: E402
+
+T, K = 30, 5
+
+_DEFAULT_PARAMS = {
+    "iid_rayleigh": {},
+    "gauss_markov": {"rho": 0.9},
+    "markov_shadowing": {"p_enter": 0.2, "p_exit": 0.5, "extra_db": 8.0},
+    "mobility": {"area_m": 60.0},
+}
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    name=st.sampled_from(sorted(_DEFAULT_PARAMS)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_every_process_finite_positive(name, seed):
+    """Every registered ChannelProcess yields finite, strictly positive
+    (T, K) power gains for any seed."""
+    sc = Scenario(
+        num_clients=K,
+        num_rounds=T,
+        env=EnvSpec(channel=name, channel_params=_DEFAULT_PARAMS[name]),
+    )
+    h2 = np.asarray(sc.sample_channel(seed))
+    assert h2.shape == (T, K)
+    assert np.all(np.isfinite(h2))
+    assert np.all(h2 > 0)
+
+
+def test_all_registered_processes_covered():
+    # keep _DEFAULT_PARAMS in sync with the registry
+    assert set(_DEFAULT_PARAMS) == set(available_channel_processes())
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    name=st.sampled_from(["iid_rayleigh", "gauss_markov", "markov_shadowing"]),
+    base_seed=st.integers(0, 2**16),
+)
+def test_declared_mean_pathloss(name, base_seed):
+    """Processes with a closed-form mean produce samples whose empirical
+    mean matches the declared mean gain (Exp(1) marginal preserved)."""
+    sc = Scenario(
+        num_clients=K,
+        num_rounds=T,
+        env=EnvSpec(channel=name, channel_params=_DEFAULT_PARAMS[name]),
+    )
+    g = float(np.asarray(sc.mean_gain_seq()).mean())
+    samples = sample_many(sc, 300, start=base_seed)
+    assert abs(samples.mean() / g - 1.0) < 0.2
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gauss_markov_rho0_bit_identical_to_iid(seed):
+    iid = Scenario(num_clients=K, num_rounds=T, env=EnvSpec())
+    gm = Scenario(
+        num_clients=K,
+        num_rounds=T,
+        env=EnvSpec(channel="gauss_markov", channel_params={"rho": 0.0}),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(gm.sample_channel(seed)), np.asarray(iid.sample_channel(seed))
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rho=st.floats(0.0, 0.99, allow_nan=False),
+    seed=st.integers(0, 2**20),
+)
+def test_gauss_markov_any_rho_finite_positive(rho, seed):
+    sc = Scenario(
+        num_clients=K,
+        num_rounds=T,
+        env=EnvSpec(channel="gauss_markov", channel_params={"rho": rho}),
+    )
+    h2 = np.asarray(sc.sample_channel(seed))
+    assert np.all(np.isfinite(h2)) and np.all(h2 > 0)
