@@ -4,9 +4,10 @@ The paper's scenarios 1/2 probe adaptivity with *scripted* linear
 path-loss drifts.  The ``repro.env`` subsystem replaces the script with
 real stochastic dynamics — Gauss-Markov correlated fading, LOS/NLOS
 blockage chains, random-waypoint mobility, energy harvesting, depleting
-batteries — and this benchmark reruns the paper's policy comparison over
-the whole zoo in ONE compiled grid (4 policies x 8 environments x 3
-seeds, single executable).
+batteries, spectrum-sharing bandwidth, deadline jitter — and this
+benchmark reruns the paper's policy comparison over the whole zoo in ONE
+compiled grid (4 policies x 10 environments x 3 seeds, single
+executable).
 
 Reproduced story: OCEAN's long-term queues keep beating the myopic
 baselines on utility in *every* environment, SMO's hard per-round caps
@@ -33,7 +34,15 @@ POLICIES = ("ocean-a", "ocean-u", "smo", "amo")
 # here the paper's near-budget behaviour must carry over.  The correlated
 # (markov_fading) and mobile cells stress the soft bound instead and are
 # reported as metrics, not claims.
-SCHEDULED = ("stationary", "drift_away", "drift_toward", "harvesting", "depleting")
+SCHEDULED = (
+    "stationary",
+    "drift_away",
+    "drift_toward",
+    "harvesting",
+    "depleting",
+    "spectrum_sharing",
+    "deadline_jitter",
+)
 
 
 def _zoo():

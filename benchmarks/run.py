@@ -23,6 +23,7 @@ from benchmarks import (
     energy_consumption,
     grid_scaling,
     learning_performance,
+    radio_sweep,
     roofline,
     scenarios,
     selection_patterns,
@@ -41,6 +42,7 @@ BENCHMARKS = {
     "fig16_tradeoff": tradeoff.run,
     "ablations_beyond_paper": ablations.run,
     "adaptivity_env_zoo": adaptivity.run,
+    "radio_sweep": radio_sweep.run,
     "grid_scaling": grid_scaling.run,
     "roofline": roofline.run,
 }

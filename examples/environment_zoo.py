@@ -1,9 +1,10 @@
-"""Environment zoo: one compiled grid over six wireless environments.
+"""Environment zoo: one compiled grid over eight wireless environments.
 
 The paper evaluates OCEAN under i.i.d. Rayleigh fading with scripted
-path-loss drifts.  The ``repro.env`` subsystem swaps that script for
-pluggable stochastic processes — correlated fading, blockage chains,
-mobile clients, harvesting/depleting energy budgets — and the grid
+path-loss drifts and fixed radio physics.  The ``repro.env`` subsystem
+swaps that script for pluggable stochastic processes — correlated
+fading, blockage chains, mobile clients, harvesting/depleting energy
+budgets, spectrum-sharing bandwidth, deadline jitter — and the grid
 engine still compiles the whole sweep to a single program.
 
     PYTHONPATH=src python examples/environment_zoo.py
@@ -15,8 +16,8 @@ from repro.sim import GridEngine
 
 T, K, SEEDS = 300, 10, (0, 1, 2)
 
-# Six environments, one scenario axis: same (T, K, radio, frame_len)
-# statics, wildly different dynamics.
+# Eight environments, one scenario axis: same (T, K, frame_len) statics,
+# wildly different dynamics (even the radio physics may differ per cell).
 scenarios = list(environment_zoo(num_rounds=T, num_clients=K).values())
 
 engine = GridEngine(

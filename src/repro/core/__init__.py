@@ -18,6 +18,7 @@ from repro.core.channel import (
     scenario2_channel,
     stationary_channel,
 )
+from repro.env.radio import TracedRadio, traced_radio
 from repro.env.spec import EnvSpec
 from repro.core.patterns import eta_schedule, ETA_SCHEDULES, COUNT_PATTERNS
 from repro.core.baselines import (
@@ -41,6 +42,8 @@ from repro.core.scenario import Scenario, environment_zoo, paper_scenarios
 
 __all__ = [
     "EnvSpec",
+    "TracedRadio",
+    "traced_radio",
     "environment_zoo",
     "pathloss_schedule",
     "RadioParams",

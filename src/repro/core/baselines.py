@@ -42,19 +42,29 @@ def _trace(a, b, e):
 # --------------------------------------------------------------------------
 # Select-All
 # --------------------------------------------------------------------------
-def select_all(cfg: OceanConfig, h2_seq: Array) -> PolicyTrace:
-    """Select everyone; minimize total energy via the P4 waterfiller."""
+def select_all(
+    cfg: OceanConfig, h2_seq: Array, radio_seq=None
+) -> PolicyTrace:
+    """Select everyone; minimize total energy via the P4 waterfiller.
+
+    ``radio_seq`` — optional per-round radio physics, a pytree of (T,)
+    leaves (``repro.env.radio.TracedRadio``); None bakes in the static
+    ``cfg.radio`` exactly as before.
+    """
     from repro.core.bandwidth import solve_p4
 
     K = cfg.num_clients
 
-    def per_round(h2):
+    def per_round(h2, radio):
         rho = 1.0 / jnp.maximum(h2, 1e-30)  # energy weights, all positive
-        b, _ = solve_p4(rho, jnp.ones((K,), bool), jnp.asarray(1.0), cfg.radio)
+        b, _ = solve_p4(rho, jnp.ones((K,), bool), jnp.asarray(1.0), radio)
         a = jnp.ones((K,), bool)
-        return a, b, energy(b, h2, cfg.radio, a)
+        return a, b, energy(b, h2, radio, a)
 
-    a, b, e = jax.vmap(per_round)(h2_seq)
+    if radio_seq is None:
+        a, b, e = jax.vmap(lambda h2: per_round(h2, cfg.radio))(h2_seq)
+    else:
+        a, b, e = jax.vmap(per_round)(h2_seq, radio_seq)
     return _trace(a, b, e)
 
 
@@ -79,39 +89,61 @@ def smo(
     h2_seq: Array,
     budgets: Optional[Array] = None,
     budget_seq: Optional[Array] = None,
+    radio_seq=None,
 ) -> PolicyTrace:
     """Static Myopic Optimal; ``budget_seq`` (T, K) makes the hard
     per-round cap follow a time-varying budget process instead of the
-    constant H_k / T."""
+    constant H_k / T, ``radio_seq`` per-round radio physics (None bakes
+    in the static ``cfg.radio``)."""
     if budget_seq is None:
         per = (cfg.budgets() if budgets is None else budgets) / cfg.num_rounds
         budget_seq = jnp.broadcast_to(per, h2_seq.shape)
 
-    def per_round(h2, cap):
-        a, b = _myopic_round(h2, cap, cfg.radio)
-        return a, b, energy(b, h2, cfg.radio, a)
+    def per_round(h2, cap, radio):
+        a, b = _myopic_round(h2, cap, radio)
+        return a, b, energy(b, h2, radio, a)
 
-    a, b, e = jax.vmap(per_round)(h2_seq, budget_seq)
+    if radio_seq is None:
+        a, b, e = jax.vmap(lambda h2, cap: per_round(h2, cap, cfg.radio))(
+            h2_seq, budget_seq
+        )
+    else:
+        a, b, e = jax.vmap(per_round)(h2_seq, budget_seq, radio_seq)
     return _trace(a, b, e)
 
 
 def amo(
-    cfg: OceanConfig, h2_seq: Array, budgets: Optional[Array] = None
+    cfg: OceanConfig,
+    h2_seq: Array,
+    budgets: Optional[Array] = None,
+    radio_seq=None,
 ) -> PolicyTrace:
     budgets = cfg.budgets() if budgets is None else budgets
     T = cfg.num_rounds
 
-    def step(spent, inputs):
-        h2, t = inputs
+    def round_fn(spent, h2, t, radio):
         remaining = jnp.maximum(budgets - spent, 0.0)
         per_round_budget = remaining / jnp.maximum(T - t, 1).astype(jnp.float32)
-        a, b = _myopic_round(h2, per_round_budget, cfg.radio)
-        e = energy(b, h2, cfg.radio, a)
+        a, b = _myopic_round(h2, per_round_budget, radio)
+        e = energy(b, h2, radio, a)
         return spent + e, (a, b, e)
 
-    _, (a, b, e) = jax.lax.scan(
-        step, jnp.zeros_like(budgets), (h2_seq, jnp.arange(T))
-    )
+    if radio_seq is None:
+        def step(spent, inputs):
+            h2, t = inputs
+            return round_fn(spent, h2, t, cfg.radio)
+
+        _, (a, b, e) = jax.lax.scan(
+            step, jnp.zeros_like(budgets), (h2_seq, jnp.arange(T))
+        )
+    else:
+        def step(spent, inputs):
+            h2, t, radio_t = inputs
+            return round_fn(spent, h2, t, radio_t)
+
+        _, (a, b, e) = jax.lax.scan(
+            step, jnp.zeros_like(budgets), (h2_seq, jnp.arange(T), radio_seq)
+        )
     return _trace(a, b, e)
 
 
@@ -125,23 +157,30 @@ def lookahead_dual(
     num_iters: int = 400,
     lr: float = 50.0,
     budgets: Optional[Array] = None,
+    radio_seq=None,
 ) -> Tuple[PolicyTrace, Array]:
     """Approximate the R=T lookahead oracle with full channel knowledge.
 
     Returns the primal trace of the final multipliers and the dual value
     (an upper bound on the oracle utility, used in Theorem-2 checks).
+    ``radio_seq`` — optional per-round radio physics (the oracle also
+    knows the realized bandwidth/deadline sequence).
     """
     T, K = h2_seq.shape
     eta_seq = jnp.asarray(eta_seq, jnp.float32)
     budgets = cfg.budgets() if budgets is None else budgets
 
     def rounds_for(mu):
-        def per_round(h2, eta_t):
-            sol = ocean_p(mu, h2, jnp.asarray(1.0), eta_t, cfg.radio)
-            e = energy(sol.b, h2, cfg.radio, sol.a)
+        def per_round(h2, eta_t, radio):
+            sol = ocean_p(mu, h2, jnp.asarray(1.0), eta_t, radio)
+            e = energy(sol.b, h2, radio, sol.a)
             return sol.a, sol.b, e
 
-        return jax.vmap(per_round)(h2_seq, eta_seq)
+        if radio_seq is None:
+            return jax.vmap(lambda h2, eta_t: per_round(h2, eta_t, cfg.radio))(
+                h2_seq, eta_seq
+            )
+        return jax.vmap(per_round)(h2_seq, eta_seq, radio_seq)
 
     def dual_step(mu, _):
         a, b, e = rounds_for(mu)

@@ -22,6 +22,7 @@ from typing import Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 Scalar = Union[float, Array]
@@ -31,9 +32,20 @@ Scalar = Union[float, Array]
 _EXP2_CLIP = 80.0
 
 
+_RADIO_FIELDS = ("bandwidth_hz", "noise_w", "deadline_s", "model_bits", "b_min")
+
+
 @dataclasses.dataclass(frozen=True)
 class RadioParams:
-    """Static radio parameters of the WFLN (paper §VI defaults).
+    """Radio parameters of the WFLN (paper §VI defaults).
+
+    Every consumer of radio physics (``ocean_p``, ``solve_p4``, ``energy``,
+    ...) only reads the attributes below, so fields may be Python floats
+    (the static configuration baked into a program) *or* jnp scalars /
+    per-round arrays (traced leaves, e.g. one cell of a bandwidth-sweep
+    grid or a round slice of a ``repro.env.radio`` sequence — see
+    ``TracedRadio`` there, which adds precomputed ``beta``/``energy_scale``
+    leaves for bit-exact lowering).
 
     Attributes:
       bandwidth_hz:  total OFDMA uplink bandwidth B (Hz).
@@ -44,19 +56,23 @@ class RadioParams:
                      client (paper: b_min_hz / B; must satisfy b_min <= 1/K).
     """
 
-    bandwidth_hz: float = 10e6
-    noise_w: float = 1e-12
-    deadline_s: float = 0.3
-    model_bits: float = 3.4e5
-    b_min: float = 0.02
+    bandwidth_hz: Scalar = 10e6
+    noise_w: Scalar = 1e-12
+    deadline_s: Scalar = 0.3
+    model_bits: Scalar = 3.4e5
+    b_min: Scalar = 0.02
 
     @property
-    def beta(self) -> float:
-        """L / (tau * B): exponent scale of the Shannon inversion."""
-        return float(self.model_bits) / (self.deadline_s * self.bandwidth_hz)
+    def beta(self) -> Scalar:
+        """L / (tau * B): exponent scale of the Shannon inversion.
+
+        Computed on trace when the fields are traced; plain float math
+        (the legacy value, bit-for-bit) when they are Python floats.
+        """
+        return self.model_bits / (self.deadline_s * self.bandwidth_hz)
 
     @property
-    def energy_scale(self) -> float:
+    def energy_scale(self) -> Scalar:
         """tau * N0 * B: prefactor of E before the 1/h^2 term."""
         return self.deadline_s * self.noise_w * self.bandwidth_hz
 
@@ -64,10 +80,33 @@ class RadioParams:
         return dataclasses.replace(self, model_bits=float(model_bits))
 
     def validate(self, num_clients: int) -> None:
-        if self.b_min * num_clients > 1.0 + 1e-9:
+        """Fail fast on physically impossible configurations.
+
+        Handles float *and* concrete-array leaves (per-round sequences
+        are checked elementwise).  Traced leaves cannot be inspected
+        here — those configurations are validated when the radio process
+        lowers (``repro.env.radio``), so tracer-bearing instances pass
+        through silently.
+        """
+        fields = {f: getattr(self, f) for f in _RADIO_FIELDS}
+        if any(isinstance(v, jax.core.Tracer) for v in fields.values()):
+            return
+        vals = {k: np.asarray(v, np.float64) for k, v in fields.items()}
+        for name in ("bandwidth_hz", "deadline_s", "noise_w", "model_bits"):
+            if not np.all(vals[name] > 0.0):
+                raise ValueError(
+                    f"{name}={fields[name]} must be positive: the Shannon "
+                    f"inversion E = tau*N0*B*f(b) is undefined otherwise"
+                )
+        if not np.all(vals["b_min"] > 0.0):
             raise ValueError(
-                f"b_min={self.b_min} infeasible for K={num_clients} clients "
-                f"(need b_min <= 1/K)"
+                f"b_min={fields['b_min']} must be positive (it is the "
+                f"smallest bandwidth ratio a selected client can receive)"
+            )
+        if float(np.max(vals["b_min"])) * num_clients > 1.0 + 1e-9:
+            raise ValueError(
+                f"b_min={fields['b_min']} infeasible for K={num_clients} "
+                f"clients (need b_min <= 1/K)"
             )
 
 

@@ -99,6 +99,7 @@ def ocean_round(
     cfg: OceanConfig,
     budgets: Optional[Array] = None,
     budget_inc: Optional[Array] = None,
+    radio=None,
 ) -> Tuple[OceanState, RoundDecision]:
     """One OCEAN round: frame-reset -> P3 solve -> act -> queue update.
 
@@ -107,14 +108,18 @@ def ocean_round(
     overrides the per-round queue drain (default ``H_k / T``) — this is
     how time-varying budget processes (energy harvesting, depleting
     batteries; see ``repro.env.energy``) enter the queue dynamics.
+    ``radio`` overrides ``cfg.radio`` with this round's physics — any
+    pytree of (traced) scalars exposing the ``RadioParams`` attributes,
+    e.g. one round of a ``repro.env.radio`` sequence.
     """
     R = cfg.R
+    radio = cfg.radio if radio is None else radio
     # Frame boundary reset (Alg. 1 line 3-5): at t = m*R, m >= 1.
     at_boundary = (state.t > 0) & (jnp.mod(state.t, R) == 0)
     q = jnp.where(at_boundary, jnp.zeros_like(state.q), state.q)
 
-    sol: OceanPSolution = ocean_p(q, h2, v, eta, cfg.radio)
-    e = energy(sol.b, h2, cfg.radio, sol.a)
+    sol: OceanPSolution = ocean_p(q, h2, v, eta, radio)
+    e = energy(sol.b, h2, radio, sol.a)
 
     if budget_inc is None:
         if budgets is None:
@@ -155,12 +160,17 @@ def simulate(
     v: float | Array,    # scalar or per-frame (M,)
     budgets: Optional[Array] = None,     # (K,) override of cfg.budgets()
     budget_seq: Optional[Array] = None,  # (T, K) per-round budget increments
+    radio_seq=None,                      # (T,)-leaf radio pytree (TracedRadio)
 ) -> Tuple[OceanState, RoundDecision]:
     """Run T rounds as one lax.scan; returns final state + stacked decisions.
 
     ``budget_seq`` feeds a time-varying per-round allowance into the
     queue update (``repro.env`` budget processes); when omitted, the
-    constant ``H_k / T`` drain of the paper applies.
+    constant ``H_k / T`` drain of the paper applies.  ``radio_seq`` feeds
+    per-round radio physics (``repro.env.radio`` processes: spectrum
+    sharing, deadline jitter) — a pytree whose leaves carry a leading
+    ``(T,)`` axis the scan slices; when omitted the static ``cfg.radio``
+    is baked in, the paper's (and the legacy) program.
     """
     v_seq = v_schedule(cfg, v)
     eta_seq = jnp.asarray(eta_seq, jnp.float32)
@@ -171,10 +181,21 @@ def simulate(
         )
     budget_seq = jnp.asarray(budget_seq, jnp.float32)
 
+    if radio_seq is None:
+        def step(state, inputs):
+            h2, v_t, eta_t, inc_t = inputs
+            return ocean_round(state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t)
+
+        return jax.lax.scan(
+            step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq)
+        )
+
     def step(state, inputs):
-        h2, v_t, eta_t, inc_t = inputs
-        return ocean_round(state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t)
+        h2, v_t, eta_t, inc_t, radio_t = inputs
+        return ocean_round(
+            state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t, radio=radio_t
+        )
 
     return jax.lax.scan(
-        step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq)
+        step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq, radio_seq)
     )

@@ -47,6 +47,11 @@ class PolicyParams(NamedTuple):
                budget process (``repro.env.energy``); None => the constant
                H_k / T drain.  Consumed by OCEAN's queues and SMO's hard
                per-round caps; AMO keeps budgeting against the totals.
+      radio_seq: per-round radio physics from a radio process
+               (``repro.env.radio``): a pytree of (T,) leaves exposing the
+               ``RadioParams`` attributes (``TracedRadio``).  None => the
+               static ``cfg.radio`` floats are baked into the program (the
+               legacy path, bit-for-bit).
     """
 
     v: Union[float, Array] = 1e-5
@@ -55,6 +60,7 @@ class PolicyParams(NamedTuple):
     key: Optional[Array] = None
     counts: Optional[Array] = None
     budget_seq: Optional[Array] = None
+    radio_seq: Optional[object] = None
 
 
 TraceFn = Callable[[OceanConfig, Array, PolicyParams], PolicyTrace]
@@ -120,6 +126,7 @@ def resolve_params(
     scenario_eta: Optional[Array] = None,
     scenario_budgets: Optional[Array] = None,
     scenario_budget_seq: Optional[Array] = None,
+    scenario_radio_seq=None,
 ) -> PolicyParams:
     """Fill None fields: explicit > policy default > scenario > uniform/cfg."""
     params = PolicyParams() if params is None else params
@@ -137,12 +144,18 @@ def resolve_params(
     budget_seq = params.budget_seq
     if budget_seq is None:
         budget_seq = scenario_budget_seq  # may stay None: constant drain
+    radio_seq = params.radio_seq
+    if radio_seq is None:
+        radio_seq = scenario_radio_seq  # may stay None: static cfg.radio
     if policy.needs_key and params.key is None:
         raise ValueError(
             f"policy {policy.name!r} is stochastic and requires PolicyParams.key"
         )
     return params._replace(
-        eta=jnp.asarray(eta, jnp.float32), budgets=budgets, budget_seq=budget_seq
+        eta=jnp.asarray(eta, jnp.float32),
+        budgets=budgets,
+        budget_seq=budget_seq,
+        radio_seq=radio_seq,
     )
 
 
@@ -161,15 +174,21 @@ def run_policy(
 # registry entries
 # --------------------------------------------------------------------------
 def _select_all_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
-    return select_all(cfg, h2_seq)
+    return select_all(cfg, h2_seq, radio_seq=params.radio_seq)
 
 
 def _smo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
-    return smo(cfg, h2_seq, budgets=params.budgets, budget_seq=params.budget_seq)
+    return smo(
+        cfg,
+        h2_seq,
+        budgets=params.budgets,
+        budget_seq=params.budget_seq,
+        radio_seq=params.radio_seq,
+    )
 
 
 def _amo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
-    return amo(cfg, h2_seq, budgets=params.budgets)
+    return amo(cfg, h2_seq, budgets=params.budgets, radio_seq=params.radio_seq)
 
 
 def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
@@ -180,6 +199,7 @@ def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
         params.v,
         budgets=params.budgets,
         budget_seq=params.budget_seq,
+        radio_seq=params.radio_seq,
     )
     return PolicyTrace(a=decs.a, b=decs.b, e=decs.e, num_selected=decs.num_selected)
 

@@ -37,7 +37,14 @@ from repro.core.ocean import OceanConfig
 from repro.core.patterns import eta_schedule
 from repro.env.channel import LowerCtx, get_channel_process, sample_channel_process
 from repro.env.energy import sample_budget_process
-from repro.env.spec import EnvSpec, LoweredEnv, env_cell_keys, lower_env
+from repro.env.radio import TracedRadio, sample_radio_process
+from repro.env.spec import (
+    EnvSpec,
+    LoweredEnv,
+    env_cell_keys,
+    lower_env,
+    radio_cell_key,
+)
 
 Array = jax.Array
 
@@ -128,6 +135,7 @@ class Scenario:
                 if isinstance(self.energy_budget_j, (int, float))
                 else self.energy_budget_j
             ),
+            radio=self.radio,
         )
 
     def lower_env(self) -> LoweredEnv:
@@ -180,6 +188,23 @@ class Scenario:
         return sample_budget_process(
             lowered.budget, k_budget, self.num_rounds, self.num_clients
         )
+
+    def sample_radio(self, seed_or_key: Union[int, Array]) -> TracedRadio:
+        """Per-round (T,)-leaf radio sequences (``TracedRadio``) for one seed.
+
+        The ``static`` process returns the scenario's ``RadioParams``
+        broadcast bit-for-bit; ``spectrum_sharing``/``deadline_jitter``
+        realize their modulators from the same content-salted key
+        discipline the grid engine uses.
+        """
+        key = (
+            jax.random.PRNGKey(seed_or_key)
+            if isinstance(seed_or_key, int)
+            else seed_or_key
+        )
+        lowered = self.lower_env()
+        k_radio = radio_cell_key(key, jnp.uint32(lowered.key_salt))
+        return sample_radio_process(lowered.radio, k_radio, self.num_rounds)
 
     def eta_seq(self) -> Array:
         return eta_schedule(self.eta, self.num_rounds)
@@ -283,6 +308,19 @@ def environment_zoo(
         "depleting": Scenario(
             name="depleting",
             env=EnvSpec(budget="depleting"),
+            **base,
+        ),
+        "spectrum_sharing": Scenario(
+            name="spectrum_sharing",
+            env=EnvSpec(
+                radio="spectrum_sharing",
+                radio_params={"share_min": 0.5, "share_max": 1.0},
+            ),
+            **base,
+        ),
+        "deadline_jitter": Scenario(
+            name="deadline_jitter",
+            env=EnvSpec(radio="deadline_jitter", radio_params={"amp": 0.3}),
             **base,
         ),
     }

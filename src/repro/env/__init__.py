@@ -1,12 +1,14 @@
 """Env — pluggable wireless-environment processes for the WFLN repro.
 
 Pure, serializable, vmap/scan-compatible stochastic processes that
-generate the (T, K) inputs the simulation engine consumes: channel power
+generate the inputs the simulation engine consumes: (T, K) channel power
 gains (i.i.d. Rayleigh, Gauss-Markov correlated fading, LOS/NLOS
-blockage chains, random-waypoint mobility) and per-round energy-budget
-increments (static, harvesting, depleting).  Every process lowers to one
-shared parameter pytree, so heterogeneous environments batch across a
-grid's scenario axis inside a single compiled program.
+blockage chains, random-waypoint mobility), (T, K) per-round energy-budget
+increments (static, harvesting, depleting), and per-round (T,) radio
+physics sequences (static, spectrum-sharing bandwidth, deadline jitter).
+Every process lowers to one shared parameter pytree, so heterogeneous
+environments batch across a grid's scenario axis inside a single
+compiled program.
 """
 from repro.env.channel import (
     ChannelParams,
@@ -25,15 +27,35 @@ from repro.env.energy import (
     register_budget_process,
     sample_budget_process,
 )
+from repro.env.radio import (
+    RadioProcess,
+    RadioProcessParams,
+    TracedRadio,
+    available_radio_processes,
+    get_radio_process,
+    register_radio_process,
+    sample_radio_process,
+    traced_radio,
+)
 from repro.env.spec import (
     EnvSpec,
     LoweredEnv,
     env_cell_keys,
     env_key_salt,
     lower_env,
+    radio_cell_key,
 )
 
 __all__ = [
+    "RadioProcess",
+    "RadioProcessParams",
+    "TracedRadio",
+    "available_radio_processes",
+    "get_radio_process",
+    "register_radio_process",
+    "sample_radio_process",
+    "traced_radio",
+    "radio_cell_key",
     "ChannelParams",
     "ChannelProcess",
     "LowerCtx",

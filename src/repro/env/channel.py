@@ -83,6 +83,12 @@ class LowerCtx(NamedTuple):
       pathloss_db: the scenario's (start_db, end_db) scheduled drift.
       fading:      the scenario's legacy fading flag.
       budgets_j:   (K,) per-client total energy budgets H_k.
+      radio:       the scenario's base radio physics — any object exposing
+                   ``bandwidth_hz``/``noise_w``/``deadline_s``/``model_bits``/
+                   ``b_min`` attributes (duck-typed so ``repro.env`` never
+                   imports ``repro.core``; in practice a
+                   ``repro.core.energy.RadioParams``).  ``None`` falls back
+                   to the paper's §VI defaults.
     """
 
     num_rounds: int
@@ -90,6 +96,7 @@ class LowerCtx(NamedTuple):
     pathloss_db: Tuple[float, float] = (36.0, 36.0)
     fading: bool = True
     budgets_j: Tuple[float, ...] = (0.15,)
+    radio: Any = None
 
 
 class ChannelParams(NamedTuple):

@@ -1,0 +1,398 @@
+"""Radio processes — the (possibly time-varying) physics behind every round.
+
+The paper treats the radio layer — total bandwidth B, deadline tau, noise
+N0, model size L, minimum ratio b_min — as constants (§VI).  A
+:class:`RadioProcess` promotes them to first-class environment data: every
+registered process lowers a JSON-able parameter dict to one shared
+:class:`RadioProcessParams` pytree, and a single ``lax.scan``
+(:func:`sample_radio_process`) interprets that pytree into a
+:class:`TracedRadio` — per-round ``(T,)`` sequences of every radio leaf.
+Because the interpreter is the same program for every process, a grid can
+mix static cells with spectrum-sharing and deadline-jitter cells (and
+with any channel/budget process) and still compile ONE executable.
+
+Processes
+---------
+``static``
+    Constant sequences equal to the scenario's ``RadioParams`` —
+    bit-identical to the legacy fixed-radio path (``beta`` and
+    ``energy_scale`` are precomputed *eagerly* at lowering time in Python
+    float precision, exactly the values the legacy properties produced,
+    then broadcast; the interpreter's ``where`` returns them untouched).
+``spectrum_sharing``
+    Time-varying total bandwidth: a bounded, symmetric Markov modulator
+    walks over ``num_levels`` equispaced shares in
+    ``[share_min, share_max]`` (reflecting at the bounds, so the
+    stationary distribution is uniform and the long-run mean share is
+    ``(share_min + share_max) / 2``), modelling a licensee returning and
+    reclaiming spectrum.
+``deadline_jitter``
+    Per-round deadline tau_t = tau * (1 + amp * y_t) with
+    ``y_t = rho * y_{t-1} + (1 - |rho|) * u_t``, ``u_t ~ U[-1, 1]`` — an
+    AR(1) (``rho != 0``) or i.i.d. (``rho = 0``) jitter that stays inside
+    the declared bounds ``[tau*(1-amp), tau*(1+amp)]`` by construction.
+
+``beta = L/(tau_t B_t)`` and ``energy_scale = tau_t N0 B_t`` are computed
+on trace for modulated cells; static cells reuse the eagerly precomputed
+legacy bits (the same discipline as ``ChannelParams.sched_gain``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.env.channel import LowerCtx, check_spec_keys
+
+Array = jax.Array
+
+# Paper §VI base physics — mirrors repro.core.energy.RadioParams defaults
+# (duplicated as plain floats so repro.env stays importable without
+# repro.core; kept in sync by tests/test_radio.py).
+_PAPER_RADIO: Dict[str, float] = dict(
+    bandwidth_hz=10e6,
+    noise_w=1e-12,
+    deadline_s=0.3,
+    model_bits=3.4e5,
+    b_min=0.02,
+)
+
+
+class TracedRadio(NamedTuple):
+    """Radio physics as a pytree of jnp leaves (scalars or ``(T,)``).
+
+    Duck-type compatible with ``repro.core.energy.RadioParams``: every
+    consumer (``ocean_p``, ``solve_p4``, ``energy``, ...) only reads these
+    attributes.  Unlike the dataclass properties, ``beta`` and
+    ``energy_scale`` are *stored* leaves: for static cells they are
+    precomputed eagerly at lowering time in Python float precision, so a
+    traced program reproduces the legacy baked-float programs bit-for-bit
+    (XLA would otherwise re-derive them in float32 on trace).
+    """
+
+    bandwidth_hz: Array   # B (Hz)
+    noise_w: Array        # N0 (W)
+    deadline_s: Array     # tau (s)
+    model_bits: Array     # L (bits)
+    b_min: Array          # minimum bandwidth ratio
+    beta: Array           # L / (tau * B)
+    energy_scale: Array   # tau * N0 * B
+
+
+def _radio_fields(radio: Any) -> Dict[str, float]:
+    """Base radio leaves as Python floats (duck-typed; None => paper)."""
+    if radio is None:
+        return dict(_PAPER_RADIO)
+    return {k: float(getattr(radio, k)) for k in _PAPER_RADIO}
+
+
+def traced_radio(radio: Any = None, num_rounds: Optional[int] = None) -> TracedRadio:
+    """Lower static radio physics to a :class:`TracedRadio`.
+
+    ``beta``/``energy_scale`` are computed here in float64 and cast once —
+    the exact float32 values the legacy Python-float properties fed into
+    jitted programs.  With ``num_rounds`` every leaf is broadcast to
+    ``(T,)`` (the per-round-sequence form policies and ``lax.scan``
+    consume); without it leaves stay scalars.
+    """
+    f = _radio_fields(radio)
+    beta = f["model_bits"] / (f["deadline_s"] * f["bandwidth_hz"])
+    energy_scale = f["deadline_s"] * f["noise_w"] * f["bandwidth_hz"]
+    leaves = TracedRadio(
+        bandwidth_hz=jnp.float32(f["bandwidth_hz"]),
+        noise_w=jnp.float32(f["noise_w"]),
+        deadline_s=jnp.float32(f["deadline_s"]),
+        model_bits=jnp.float32(f["model_bits"]),
+        b_min=jnp.float32(f["b_min"]),
+        beta=jnp.float32(beta),
+        energy_scale=jnp.float32(energy_scale),
+    )
+    if num_rounds is None:
+        return leaves
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (num_rounds,)), leaves
+    )
+
+
+class RadioProcessParams(NamedTuple):
+    """Unified, vmappable parameterization of every radio process.
+
+    All leaves are float32 arrays; "off" modulators are encoded as zero
+    flags, never as structurally different pytrees, so heterogeneous
+    radio cells stack on a grid's scenario axis.
+    """
+
+    base: TracedRadio      # (T,) leaves — eager-precomputed static physics
+    bw_mod_on: Array       # ()  1.0 => Markov bandwidth modulator active
+    bw_share_min: Array    # ()  lowest available share of B
+    bw_share_max: Array    # ()  highest available share of B
+    bw_p_change: Array     # ()  per-round probability of a level move
+    bw_levels: Array       # ()  number of Markov levels (>= 2)
+    tau_mod_on: Array      # ()  1.0 => deadline jitter active
+    tau_amp: Array         # ()  jitter amplitude in (0, 1)
+    tau_rho: Array         # ()  AR(1) coherence of the jitter (0 => iid)
+
+
+def _off_mods(base: TracedRadio) -> Dict[str, Any]:
+    return dict(
+        base=base,
+        bw_mod_on=jnp.float32(0.0),
+        bw_share_min=jnp.float32(1.0),
+        bw_share_max=jnp.float32(1.0),
+        bw_p_change=jnp.float32(0.0),
+        bw_levels=jnp.float32(2.0),
+        tau_mod_on=jnp.float32(0.0),
+        tau_amp=jnp.float32(0.0),
+        tau_rho=jnp.float32(0.0),
+    )
+
+
+# --------------------------------------------------------------------------
+# the single interpreter: one lax.scan evaluates every registered process
+# --------------------------------------------------------------------------
+def sample_radio_process(
+    params: RadioProcessParams, key: Array, num_rounds: int
+) -> TracedRadio:
+    """Realize the per-round ``(T,)`` radio sequences for one cell.
+
+    Static cells return ``params.base`` bit-for-bit (the modulated branch
+    of each ``where`` is computed but discarded); modulated cells derive
+    ``beta``/``energy_scale`` on trace from the realized B_t / tau_t.
+    """
+    T = num_rounds
+    k_init, k_bw, k_tau = jax.random.split(key, 3)
+    u_bw = jax.random.uniform(k_bw, (T,))
+    u_tau = jax.random.uniform(k_tau, (T,))
+    ki_level, ki_y = jax.random.split(k_init)
+    # Stationary starts: uniform over levels; U[-1, 1] for the jitter.
+    levels = jnp.maximum(params.bw_levels, 2.0)
+    level0 = jnp.floor(jax.random.uniform(ki_level) * levels)
+    level0 = jnp.clip(level0, 0.0, levels - 1.0)
+    y0 = 2.0 * jax.random.uniform(ki_y) - 1.0
+
+    def step(carry, xs):
+        level, y = carry
+        u_b, u_t = xs
+        # Symmetric reflecting walk: attempted moves past a bound are
+        # rejected (clip), which keeps the stationary distribution uniform.
+        p = params.bw_p_change
+        move = jnp.where(u_b < 0.5 * p, 1.0, jnp.where(u_b < p, -1.0, 0.0))
+        level_new = jnp.clip(level + move, 0.0, levels - 1.0)
+        share = params.bw_share_min + (
+            params.bw_share_max - params.bw_share_min
+        ) * level_new / (levels - 1.0)
+        # Bounded AR(1): |y| <= |rho|*|y_prev| + (1-|rho|) <= 1 by
+        # induction — the |.| keeps the bound for anti-correlated rho < 0.
+        y_new = params.tau_rho * y + (1.0 - jnp.abs(params.tau_rho)) * (
+            2.0 * u_t - 1.0
+        )
+        scale = 1.0 + params.tau_amp * y_new
+        return (level_new, y_new), (share, scale)
+
+    _, (share, scale) = jax.lax.scan(step, (level0, y0), (u_bw, u_tau))
+
+    base = params.base
+    bw = jnp.where(params.bw_mod_on > 0.0, base.bandwidth_hz * share, base.bandwidth_hz)
+    tau = jnp.where(params.tau_mod_on > 0.0, base.deadline_s * scale, base.deadline_s)
+    modulated = (params.bw_mod_on > 0.0) | (params.tau_mod_on > 0.0)
+    # Static cells must reuse the eagerly precomputed leaves — an on-trace
+    # recompute rounds differently (same discipline as sched_gain).
+    beta = jnp.where(modulated, base.model_bits / (tau * bw), base.beta)
+    energy_scale = jnp.where(modulated, tau * base.noise_w * bw, base.energy_scale)
+    return TracedRadio(
+        bandwidth_hz=bw,
+        noise_w=base.noise_w,
+        deadline_s=tau,
+        model_bits=base.model_bits,
+        b_min=base.b_min,
+        beta=beta,
+        energy_scale=energy_scale,
+    )
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+RadioLowerFn = Callable[[Mapping[str, Any], LowerCtx], RadioProcessParams]
+MeanFn = Callable[[Mapping[str, Any], LowerCtx], float]
+
+
+class RadioProcess(NamedTuple):
+    """A registered radio process.
+
+    Attributes:
+      name:          registry key (the ``EnvSpec.radio`` string).
+      lower:         (params dict, ctx) -> RadioProcessParams.
+      mean_bandwidth: (params dict, ctx) -> long-run mean B_t (Hz).
+      mean_deadline:  (params dict, ctx) -> long-run mean tau_t (s).
+      doc:           one-line description for tables/docs.
+    """
+
+    name: str
+    lower: RadioLowerFn
+    mean_bandwidth: Optional[MeanFn] = None
+    mean_deadline: Optional[MeanFn] = None
+    doc: str = ""
+
+
+_RADIO_REGISTRY: Dict[str, RadioProcess] = {}
+
+
+def register_radio_process(
+    name: str,
+    lower: RadioLowerFn,
+    *,
+    mean_bandwidth: Optional[MeanFn] = None,
+    mean_deadline: Optional[MeanFn] = None,
+    doc: str = "",
+) -> RadioProcess:
+    proc = RadioProcess(name, lower, mean_bandwidth, mean_deadline, doc)
+    _RADIO_REGISTRY[name] = proc
+    return proc
+
+
+def available_radio_processes() -> Tuple[str, ...]:
+    return tuple(sorted(_RADIO_REGISTRY))
+
+
+def get_radio_process(name: str) -> RadioProcess:
+    if name not in _RADIO_REGISTRY:
+        raise ValueError(
+            f"unknown radio process {name!r}; available: "
+            f"{', '.join(available_radio_processes())}"
+        )
+    return _RADIO_REGISTRY[name]
+
+
+# -- registry entries -------------------------------------------------------
+def _validate_base(name: str, ctx: LowerCtx) -> Dict[str, float]:
+    """Lowering-time physics validation (replaces jit-time checks the
+    traced leaves can no longer perform).
+
+    The rules live in one place — ``RadioParams.validate`` — reached
+    duck-typed through the base object so ``repro.env`` never imports
+    ``repro.core``.  ``ctx.radio is None`` means the paper defaults,
+    which are valid by construction.
+    """
+    f = _radio_fields(ctx.radio)
+    validate = getattr(ctx.radio, "validate", None)
+    if validate is not None:
+        try:
+            validate(ctx.num_clients)
+        except ValueError as e:
+            raise ValueError(f"radio process {name!r}: {e}") from None
+    return f
+
+
+def _base_seq(ctx: LowerCtx) -> TracedRadio:
+    return traced_radio(ctx.radio, num_rounds=ctx.num_rounds)
+
+
+def _static_lower(spec, ctx):
+    check_spec_keys("static", spec, ())
+    _validate_base("static", ctx)
+    return RadioProcessParams(**_off_mods(_base_seq(ctx)))
+
+
+def _spectrum_lower(spec, ctx):
+    check_spec_keys(
+        "spectrum_sharing", spec, ("share_min", "share_max", "p_change", "num_levels")
+    )
+    f = _validate_base("spectrum_sharing", ctx)
+    share_min = float(spec.get("share_min", 0.5))
+    share_max = float(spec.get("share_max", 1.0))
+    p_change = float(spec.get("p_change", 0.5))
+    num_levels = int(spec.get("num_levels", 5))
+    if not 0.0 < share_min <= share_max:
+        raise ValueError(
+            f"spectrum_sharing needs 0 < share_min <= share_max, got "
+            f"share_min={share_min}, share_max={share_max}"
+        )
+    if not 0.0 <= p_change <= 1.0:
+        raise ValueError(
+            f"spectrum_sharing p_change must be a probability in [0, 1], "
+            f"got {p_change}"
+        )
+    if num_levels < 2:
+        raise ValueError(
+            f"spectrum_sharing num_levels must be >= 2, got {num_levels}"
+        )
+    # b_min is a *ratio* of the instantaneous B_t, so feasibility
+    # (b_min * K <= 1) is preserved at every level; but the smallest share
+    # must still leave a usable band.
+    if share_min * f["bandwidth_hz"] <= 0.0:
+        raise ValueError("spectrum_sharing: share_min * bandwidth_hz must be > 0")
+    fields = _off_mods(_base_seq(ctx))
+    fields.update(
+        bw_mod_on=jnp.float32(1.0),
+        bw_share_min=jnp.float32(share_min),
+        bw_share_max=jnp.float32(share_max),
+        bw_p_change=jnp.float32(p_change),
+        bw_levels=jnp.float32(num_levels),
+    )
+    return RadioProcessParams(**fields)
+
+
+def _spectrum_mean_bandwidth(spec, ctx):
+    f = _radio_fields(ctx.radio)
+    share_min = float(spec.get("share_min", 0.5))
+    share_max = float(spec.get("share_max", 1.0))
+    # Reflecting symmetric walk => uniform over levels => mean of the
+    # equispaced shares is the midpoint.
+    return f["bandwidth_hz"] * 0.5 * (share_min + share_max)
+
+
+def _jitter_lower(spec, ctx):
+    check_spec_keys("deadline_jitter", spec, ("amp", "rho"))
+    _validate_base("deadline_jitter", ctx)
+    amp = float(spec.get("amp", 0.3))
+    rho = float(spec.get("rho", 0.0))
+    if not 0.0 <= amp < 1.0:
+        raise ValueError(
+            f"deadline_jitter amp must be in [0, 1) so tau stays positive, "
+            f"got {amp}"
+        )
+    if not abs(rho) < 1.0:
+        raise ValueError(
+            f"deadline_jitter AR(1) coherence rho must satisfy |rho| < 1, "
+            f"got {rho}"
+        )
+    fields = _off_mods(_base_seq(ctx))
+    fields.update(
+        tau_mod_on=jnp.float32(1.0),
+        tau_amp=jnp.float32(amp),
+        tau_rho=jnp.float32(rho),
+    )
+    return RadioProcessParams(**fields)
+
+
+def _base_mean_bandwidth(spec, ctx):
+    return _radio_fields(ctx.radio)["bandwidth_hz"]
+
+
+def _base_mean_deadline(spec, ctx):
+    return _radio_fields(ctx.radio)["deadline_s"]
+
+
+register_radio_process(
+    "static",
+    _static_lower,
+    mean_bandwidth=_base_mean_bandwidth,
+    mean_deadline=_base_mean_deadline,
+    doc="constant B/tau/N0 (the paper; bit-identical to fixed RadioParams)",
+)
+register_radio_process(
+    "spectrum_sharing",
+    _spectrum_lower,
+    mean_bandwidth=_spectrum_mean_bandwidth,
+    mean_deadline=_base_mean_deadline,
+    doc="bounded Markov modulator on total bandwidth (reflecting level walk)",
+)
+register_radio_process(
+    "deadline_jitter",
+    _jitter_lower,
+    mean_bandwidth=_base_mean_bandwidth,
+    mean_deadline=_base_mean_deadline,
+    doc="i.i.d./AR(1) per-round deadline tau_t in [tau(1-amp), tau(1+amp)]",
+)

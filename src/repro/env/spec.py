@@ -34,13 +34,14 @@ from repro.env.channel import (
     get_channel_process,
 )
 from repro.env.energy import BudgetParams, get_budget_process
+from repro.env.radio import RadioProcessParams, get_radio_process
 
 Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
 class EnvSpec:
-    """One wireless environment: channel process + budget process.
+    """One wireless environment: channel + budget + radio processes.
 
     Attributes:
       channel:        registered channel-process name (see
@@ -48,25 +49,41 @@ class EnvSpec:
       channel_params: JSON-able parameter dict for the channel process.
       budget:         registered budget-process name.
       budget_params:  JSON-able parameter dict for the budget process.
+      radio:          registered radio-process name (see
+                      ``repro.env.available_radio_processes``); ``static``
+                      reproduces the scenario's fixed ``RadioParams``
+                      bit-for-bit.
+      radio_params:   JSON-able parameter dict for the radio process.
     """
 
     channel: str = "iid_rayleigh"
     channel_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     budget: str = "static"
     budget_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    radio: str = "static"
+    radio_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     def validate(self) -> None:
         get_channel_process(self.channel)
         get_budget_process(self.budget)
+        get_radio_process(self.radio)
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "channel": self.channel,
             "channel_params": dict(self.channel_params),
             "budget": self.budget,
             "budget_params": dict(self.budget_params),
         }
+        # The radio keys appear only when non-default: pre-radio payloads
+        # stay byte-stable AND — because env_key_salt hashes this dict —
+        # every pre-existing scenario keeps its exact channel/budget
+        # streams (adding the radio axis must not perturb other draws).
+        if self.radio != "static" or self.radio_params:
+            d["radio"] = self.radio
+            d["radio_params"] = dict(self.radio_params)
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "EnvSpec":
@@ -93,6 +110,7 @@ class LoweredEnv(NamedTuple):
 
     channel: ChannelParams
     budget: BudgetParams
+    radio: RadioProcessParams
     key_salt: int  # uint32 content hash for fold_in
 
 
@@ -114,9 +132,11 @@ def lower_env(spec: EnvSpec, ctx: LowerCtx) -> LoweredEnv:
     """Resolve registry entries and lower to the unified param pytrees."""
     chan = get_channel_process(spec.channel)
     budg = get_budget_process(spec.budget)
+    radio = get_radio_process(spec.radio)
     return LoweredEnv(
         channel=chan.lower(spec.channel_params, ctx),
         budget=budg.lower(spec.budget_params, ctx),
+        radio=radio.lower(spec.radio_params, ctx),
         key_salt=env_key_salt(spec, ctx),
     )
 
@@ -130,3 +150,15 @@ def env_cell_keys(fade_key: Array, key_salt) -> Tuple[Array, Array]:
     env_key = jax.random.fold_in(fade_key, key_salt)
     k_chan, k_budget = jax.random.split(env_key)
     return k_chan, k_budget
+
+
+# Distinct stream id folded on top of the env key for the radio process.
+# A fold_in (rather than widening the split above to three) keeps the
+# channel/budget keys — and so every pre-radio draw — bit-identical.
+_RADIO_STREAM = 0x7261_6449  # "radI"
+
+
+def radio_cell_key(fade_key: Array, key_salt) -> Array:
+    """PRNG key feeding the radio process of one (scenario, seed) cell."""
+    env_key = jax.random.fold_in(fade_key, key_salt)
+    return jax.random.fold_in(env_key, _RADIO_STREAM)

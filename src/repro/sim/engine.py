@@ -22,9 +22,11 @@ and returns stacked ``(P, S, N, T, K)`` outputs.  The program is traced
 and compiled exactly once per ``GridEngine``; subsequent ``run`` calls with
 the same grid shape reuse the executable.
 
-Scenario-dependent *arrays* (environment params, eta schedules, budgets)
-are batched; scenario-dependent *statics* (T, K, radio physics, frame
-length) must agree across the grid — they shape the compiled program.
+Scenario-dependent *arrays* (environment params, eta schedules, budgets,
+radio physics — bandwidth/deadline/noise/b_min lower to traced per-round
+sequences via ``repro.env.radio``, so they form sweepable grid axes) are
+batched; scenario-dependent *statics* (T, K, frame length) must agree
+across the grid — they shape the compiled program.
 
 Environment streams are keyed by ``fold_in(PRNGKey(seed), salt)`` where
 ``salt`` is a stable content hash of the scenario's EnvSpec — never its
@@ -49,7 +51,8 @@ from repro.core.policy import (
 from repro.core.scenario import Scenario
 from repro.env.channel import sample_channel_process
 from repro.env.energy import sample_budget_process
-from repro.env.spec import env_cell_keys
+from repro.env.radio import TracedRadio, sample_radio_process
+from repro.env.spec import env_cell_keys, radio_cell_key
 
 Array = jax.Array
 
@@ -75,6 +78,7 @@ class GridResult(NamedTuple):
     seeds: Tuple[int, ...]
     budget_inc: Optional[Array] = None    # (S, N, T, K) per-round increments
     budget_total: Optional[Array] = None  # (S, N, K) realized totals H_k
+    radio_seq: Optional[TracedRadio] = None  # pytree of (S, N, T) radio leaves
 
     def cell(self, policy: str, scenario: str, seed: int) -> PolicyTrace:
         """Extract one (policy, scenario, seed) cell as a PolicyTrace."""
@@ -108,11 +112,14 @@ def _resolve_policy_specs(policies: Sequence[PolicySpec]):
 
 
 def _check_compatible(scenarios: Sequence[Scenario]) -> Scenario:
+    # ``radio`` is deliberately absent: radio physics lower to traced
+    # per-round sequences batched over the scenario axis, so bandwidth /
+    # deadline / noise / b_min may all vary across the grid.
     base = scenarios[0]
     for sc in scenarios[1:]:
         mismatches = [
             f"{field}: {getattr(base, field)!r} != {getattr(sc, field)!r}"
-            for field in ("num_rounds", "num_clients", "radio", "frame_len")
+            for field in ("num_rounds", "num_clients", "frame_len")
             if getattr(base, field) != getattr(sc, field)
         ]
         if mismatches:
@@ -128,7 +135,8 @@ class GridEngine:
     """Compile once, sweep many: vectorized (policy, scenario, seed) grids.
 
     Args:
-      scenarios: Scenario specs sharing (T, K, radio, frame_len).
+      scenarios: Scenario specs sharing (T, K, frame_len); radio physics
+                 and environments may differ per scenario.
       policies:  policy names, Policy objects, or (name, PolicyParams)
                  pairs — e.g. ``[("ocean", PolicyParams(v=v)) for v in VS]``
                  turns the policy axis into a V sweep.
@@ -161,6 +169,9 @@ class GridEngine:
         self._budget_params = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *[l.budget for l in lowered]
         )
+        self._radio_params = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[l.radio for l in lowered]
+        )
         self._env_salts = jnp.asarray(
             [l.key_salt for l in lowered], jnp.uint32
         )
@@ -170,27 +181,30 @@ class GridEngine:
 
     # -- the single compiled program ----------------------------------------
     def _build(
-        self, seed_arr, chan_params, budget_params, env_salts, etas,
-        base_key, learn_keys,
+        self, seed_arr, chan_params, budget_params, radio_params, env_salts,
+        etas, base_key, learn_keys,
     ):
         cfg = self.cfg
         T, K = cfg.num_rounds, cfg.num_clients
 
-        def sample_cell(cp, bp, salt, seed):
+        def sample_cell(cp, bp, rp, salt, seed):
             # The fading key mirrors ChannelModel.sample exactly (shared
             # across scenarios); scenario-specific streams fold in the
             # spec's stable content salt (see module docstring).
             fade_key = jax.random.PRNGKey(seed)
             k_chan, k_budget = env_cell_keys(fade_key, salt)
+            k_radio = radio_cell_key(fade_key, salt)
             h2 = sample_channel_process(cp, fade_key, k_chan, T, K)
             dh, total = sample_budget_process(bp, k_budget, T, K)
-            return h2, dh, total
+            radio_seq = sample_radio_process(rp, k_radio, T)
+            return h2, dh, total, radio_seq
 
-        over_seeds = jax.vmap(sample_cell, in_axes=(None, None, None, 0))
-        h2, budget_inc, budget_total = jax.vmap(
-            over_seeds, in_axes=(0, 0, 0, None)
-        )(chan_params, budget_params, env_salts, seed_arr)
-        # h2/budget_inc: (S, N, T, K); budget_total: (S, N, K)
+        over_seeds = jax.vmap(sample_cell, in_axes=(None, None, None, None, 0))
+        h2, budget_inc, budget_total, radio_seq = jax.vmap(
+            over_seeds, in_axes=(0, 0, 0, 0, None)
+        )(chan_params, budget_params, radio_params, env_salts, seed_arr)
+        # h2/budget_inc: (S, N, T, K); budget_total: (S, N, K);
+        # radio_seq: TracedRadio of (S, N, T) leaves
 
         def cell_keys(s_idx):
             return jax.vmap(
@@ -204,7 +218,10 @@ class GridEngine:
         traces = []
         histories = []
         for pol, pp in self._resolved:
-            def cell(h2_cell, eta_s, total_cell, inc_cell, key_cell, pol=pol, pp=pp):
+            def cell(
+                h2_cell, eta_s, total_cell, inc_cell, radio_cell, key_cell,
+                pol=pol, pp=pp,
+            ):
                 params = resolve_params(
                     pol,
                     cfg,
@@ -212,12 +229,13 @@ class GridEngine:
                     scenario_eta=eta_s,
                     scenario_budgets=total_cell,
                     scenario_budget_seq=inc_cell,
+                    scenario_radio_seq=radio_cell,
                 )
                 return pol.trace_fn(cfg, h2_cell, params)
 
-            over_seeds = jax.vmap(cell, in_axes=(0, None, 0, 0, 0))
+            over_seeds = jax.vmap(cell, in_axes=(0, None, 0, 0, 0, 0))
             tr = jax.vmap(over_seeds)(
-                h2, etas, budget_total, budget_inc, keys
+                h2, etas, budget_total, budget_inc, radio_seq, keys
             )                                                     # (S, N, ...)
             traces.append(tr)
             if self.experiment is not None:
@@ -233,7 +251,7 @@ class GridEngine:
             if histories
             else None
         )
-        return a, b, e, ns, h2, budget_inc, budget_total, history
+        return a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history
 
     # -- public API ----------------------------------------------------------
     def run(
@@ -275,10 +293,11 @@ class GridEngine:
                     f"learn_keys must have leading shape (S={S}, N={N}), "
                     f"got {learn_keys.shape}"
                 )
-        a, b, e, ns, h2, budget_inc, budget_total, history = self._fn(
+        a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history = self._fn(
             seed_arr,
             self._chan_params,
             self._budget_params,
+            self._radio_params,
             self._env_salts,
             self._etas,
             base_key,
@@ -297,6 +316,7 @@ class GridEngine:
             seeds=seeds,
             budget_inc=budget_inc,
             budget_total=budget_total,
+            radio_seq=radio_seq,
         )
 
 

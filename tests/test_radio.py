@@ -1,0 +1,457 @@
+"""Traced radio physics: RadioProcess registry, bit-identity with the
+legacy fixed-RadioParams path, one-program mixed grids, grid-composition
+stability, fail-fast validation, and the V-sweep energy bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnvSpec, PolicyParams, RadioParams, Scenario, traced_radio
+from repro.core.ocean import OceanConfig
+from repro.env import (
+    available_radio_processes,
+    sample_radio_process,
+)
+from repro.env.channel import LowerCtx
+from repro.env.radio import _PAPER_RADIO
+from repro.env.spec import env_key_salt, radio_cell_key
+from repro.fed.loop import policy_trace
+from repro.sim import GridEngine, run_grid
+
+T, K = 40, 6
+
+ALL_POLICIES = ("ocean-a", "ocean-u", "smo", "amo", "select_all")
+
+
+def mixed_radio_scenarios():
+    """>= 3 radio processes x >= 2 channel processes (acceptance grid)."""
+    base = dict(num_clients=K, num_rounds=T)
+    return [
+        Scenario(name="static", **base),
+        Scenario(
+            name="spectrum",
+            env=EnvSpec(radio="spectrum_sharing"),
+            **base,
+        ),
+        Scenario(
+            name="jitter",
+            env=EnvSpec(radio="deadline_jitter", radio_params={"amp": 0.4, "rho": 0.7}),
+            **base,
+        ),
+        Scenario(
+            name="gm_spectrum",
+            env=EnvSpec(
+                channel="gauss_markov",
+                channel_params={"rho": 0.8},
+                radio="spectrum_sharing",
+                radio_params={"share_min": 0.3, "share_max": 0.9},
+            ),
+            **base,
+        ),
+    ]
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+def test_registry_contents():
+    assert {"static", "spectrum_sharing", "deadline_jitter"} <= set(
+        available_radio_processes()
+    )
+
+
+def test_unknown_radio_process_rejected():
+    with pytest.raises(ValueError, match="unknown radio process"):
+        Scenario(env=EnvSpec(radio="nope"))
+
+
+def test_paper_radio_defaults_in_sync():
+    """env.radio duplicates the RadioParams defaults (import-cycle-free);
+    they must never drift apart."""
+    r = RadioParams()
+    for field, value in _PAPER_RADIO.items():
+        assert getattr(r, field) == value, field
+
+
+# --------------------------------------------------------------------------
+# bit-identity of the static radio process (acceptance criterion)
+# --------------------------------------------------------------------------
+def test_traced_radio_matches_legacy_derived_values():
+    """Eagerly lowered beta/energy_scale carry the float32 image of the
+    legacy Python-float properties, bit for bit."""
+    r = RadioParams(bandwidth_hz=7e6, deadline_s=0.21, noise_w=3e-12)
+    tr = traced_radio(r)
+    assert np.asarray(tr.beta) == np.float32(r.beta)
+    assert np.asarray(tr.energy_scale) == np.float32(r.energy_scale)
+    assert np.asarray(tr.b_min) == np.float32(r.b_min)
+    seq = traced_radio(r, num_rounds=T)
+    assert seq.bandwidth_hz.shape == (T,)
+    np.testing.assert_array_equal(
+        np.asarray(seq.beta), np.full((T,), np.float32(r.beta))
+    )
+
+
+def test_static_radio_sequence_is_constant_base():
+    sc = Scenario(num_clients=K, num_rounds=T, env=EnvSpec())
+    seq = sc.sample_radio(0)
+    np.testing.assert_array_equal(
+        np.asarray(seq.bandwidth_hz), np.full((T,), np.float32(10e6))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(seq.deadline_s), np.full((T,), np.float32(0.3))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(seq.beta), np.full((T,), np.float32(RadioParams().beta))
+    )
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_static_radio_grid_bit_identical_to_legacy(policy):
+    """radio=static through the engine (traced per-round radio) must
+    reproduce the legacy baked-float policy traces bit-for-bit."""
+    scenarios = [
+        Scenario(name="legacy", num_clients=K, num_rounds=T),
+        Scenario(name="env", num_clients=K, num_rounds=T, env=EnvSpec()),
+    ]
+    seeds = (0, 7)
+    res = run_grid(scenarios, [(policy, PolicyParams(v=1e-5))], seeds=seeds)
+    cfg = scenarios[0].ocean_config()
+    for s, sc in enumerate(scenarios):
+        for n, seed in enumerate(seeds):
+            h2 = sc.sample_channel(seed)
+            tr = policy_trace(policy, cfg, h2, v=1e-5)
+            np.testing.assert_array_equal(
+                np.asarray(res.a[0, s, n]), np.asarray(tr.a)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(res.b[0, s, n]), np.asarray(tr.b)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(res.e[0, s, n]), np.asarray(tr.e)
+            )
+
+
+def test_mixed_radio_grid_single_program():
+    """A grid mixing >= 3 radio processes with >= 2 channel processes
+    still compiles to ONE executable (acceptance criterion)."""
+    eng = GridEngine(mixed_radio_scenarios(), ["ocean-u", "smo"])
+    res = eng.run([0, 1])
+    assert res.a.shape == (2, 4, 2, T, K)
+    assert bool(jnp.all(jnp.isfinite(res.e)))
+    bw = np.asarray(res.radio_seq.bandwidth_hz)       # (S, N, T)
+    assert np.all(bw[0] == np.float32(10e6))          # static cell untouched
+    assert bw[1].std() > 0                            # spectrum cell varies
+    if hasattr(eng._fn, "_cache_size"):
+        assert eng._fn._cache_size() == 1
+
+
+def test_radio_grid_cells_match_single_scenario_sampling():
+    scenarios = mixed_radio_scenarios()
+    res = run_grid(scenarios, ["smo"], seeds=[0, 2])
+    for s, sc in enumerate(scenarios):
+        for n, seed in enumerate(res.seeds):
+            single = sc.sample_radio(seed)
+            cell = jax.tree_util.tree_map(lambda x: x[s, n], res.radio_seq)
+            for got, ref in zip(cell, single):
+                np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# --------------------------------------------------------------------------
+# heterogeneous RadioParams as grid axes (the tentpole payoff)
+# --------------------------------------------------------------------------
+def test_bandwidth_axis_sweeps_in_one_grid():
+    """Scenarios may now disagree on RadioParams — bandwidth becomes a
+    batched axis instead of a grid-incompatibility error."""
+    scenarios = [
+        Scenario(name=f"B{int(b/1e6)}", num_clients=K, num_rounds=T,
+                 radio=RadioParams(bandwidth_hz=b))
+        for b in (5e6, 10e6, 20e6)
+    ]
+    eng = GridEngine(scenarios, ["ocean-u"])
+    res = eng.run([0, 1])
+    sel = np.asarray(res.num_selected[0]).mean(axis=(1, 2))  # (S,)
+    assert np.all(np.diff(sel) >= -1e-6)  # more bandwidth => more selected
+    if hasattr(eng._fn, "_cache_size"):
+        assert eng._fn._cache_size() == 1
+
+
+def test_deadline_axis_matches_per_scenario_runs():
+    """Each deadline cell of the grid equals its own solo static run."""
+    taus = (0.15, 0.3, 0.6)
+    scenarios = [
+        Scenario(name=f"tau{t_}", num_clients=K, num_rounds=T,
+                 radio=RadioParams(deadline_s=t_))
+        for t_ in taus
+    ]
+    res = run_grid(scenarios, ["smo"], seeds=[3])
+    for s, sc in enumerate(scenarios):
+        h2 = sc.sample_channel(3)
+        tr = policy_trace("smo", sc.ocean_config(), h2)
+        np.testing.assert_array_equal(
+            np.asarray(res.b[0, s, 0]), np.asarray(tr.b)
+        )
+
+
+# --------------------------------------------------------------------------
+# grid-composition stability (extends the PR-2 content-salt regression)
+# --------------------------------------------------------------------------
+def test_radio_streams_stable_under_grid_composition():
+    """Adding/reordering radio-bearing scenarios leaves every other
+    cell's channel, budget, AND radio streams bit-identical."""
+    base = dict(num_clients=K, num_rounds=T)
+    spectrum = Scenario(name="spectrum", env=EnvSpec(radio="spectrum_sharing"), **base)
+    jitter = Scenario(
+        name="jitter", env=EnvSpec(radio="deadline_jitter"), **base
+    )
+    blockage = Scenario(
+        name="blockage",
+        env=EnvSpec(channel="markov_shadowing", budget="harvesting"),
+        **base,
+    )
+    r1 = run_grid([spectrum, blockage], ["smo"], seeds=[0, 1])
+    r2 = run_grid([jitter, blockage, spectrum], ["smo"], seeds=[0, 1])
+    # blockage cell: channel + budget + radio streams all unperturbed
+    np.testing.assert_array_equal(np.asarray(r1.h2[1]), np.asarray(r2.h2[1]))
+    np.testing.assert_array_equal(
+        np.asarray(r1.budget_inc[1]), np.asarray(r2.budget_inc[1])
+    )
+    for f1, f2 in zip(
+        jax.tree_util.tree_map(lambda x: x[1], r1.radio_seq),
+        jax.tree_util.tree_map(lambda x: x[1], r2.radio_seq),
+    ):
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    # spectrum cell keeps its radio draws when moved to another slot
+    np.testing.assert_array_equal(
+        np.asarray(r1.radio_seq.bandwidth_hz[0]),
+        np.asarray(r2.radio_seq.bandwidth_hz[2]),
+    )
+
+
+def test_default_radio_keeps_env_salts_stable():
+    """EnvSpec.to_dict omits default radio keys, so pre-radio scenarios
+    keep their exact salts — and therefore their channel/budget draws."""
+    ctx = LowerCtx(T, K, (36.0, 36.0), True, (0.15,) * K)
+    spec = EnvSpec(channel="markov_shadowing")
+    assert "radio" not in spec.to_dict()
+    assert env_key_salt(spec, ctx) == env_key_salt(
+        EnvSpec(channel="markov_shadowing", radio="static"), ctx
+    )
+    assert env_key_salt(spec, ctx) != env_key_salt(
+        EnvSpec(channel="markov_shadowing", radio="deadline_jitter"), ctx
+    )
+
+
+def test_radio_key_independent_of_channel_budget_streams():
+    """The radio key is folded on top of the env key, never split from
+    it — channel/budget keys are unchanged by the radio axis."""
+    fk = jax.random.PRNGKey(0)
+    salt = jnp.uint32(12345)
+    kr = radio_cell_key(fk, salt)
+    from repro.env.spec import env_cell_keys
+
+    kc, kb = env_cell_keys(fk, salt)
+    assert not np.array_equal(np.asarray(kr), np.asarray(kc))
+    assert not np.array_equal(np.asarray(kr), np.asarray(kb))
+
+
+# --------------------------------------------------------------------------
+# serialization
+# --------------------------------------------------------------------------
+def test_radio_env_spec_json_round_trip():
+    spec = EnvSpec(
+        radio="spectrum_sharing",
+        radio_params={"share_min": 0.4, "share_max": 0.9, "p_change": 0.25},
+    )
+    assert EnvSpec.from_json(spec.to_json()) == spec
+    sc = Scenario(name="sweep", num_clients=K, num_rounds=T, env=spec)
+    back = Scenario.from_json(sc.to_json())
+    assert back == sc
+    for got, ref in zip(back.sample_radio(1), sc.sample_radio(1)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_radio_env_from_dict_ignores_unknown_keys():
+    d = EnvSpec(radio="deadline_jitter").to_dict()
+    d["a_future_field"] = 1
+    assert EnvSpec.from_dict(d).radio == "deadline_jitter"
+
+
+# --------------------------------------------------------------------------
+# fail-fast validation (satellite: tests + fix)
+# --------------------------------------------------------------------------
+def test_unknown_radio_param_keys_fail_fast():
+    with pytest.raises(ValueError, match="unknown parameter"):
+        Scenario(
+            env=EnvSpec(radio="spectrum_sharing", radio_params={"shar_min": 0.5})
+        ).lower_env()
+    with pytest.raises(ValueError, match="unknown parameter"):
+        Scenario(
+            env=EnvSpec(radio="deadline_jitter", radio_params={"amplitude": 0.2})
+        ).lower_env()
+    # static takes no parameters at all
+    with pytest.raises(ValueError, match="unknown parameter"):
+        Scenario(
+            env=EnvSpec(radio="static", radio_params={"share_min": 0.5})
+        ).lower_env()
+
+
+def test_lowering_rejects_infeasible_b_min():
+    sc = Scenario(
+        num_clients=10,
+        num_rounds=T,
+        radio=RadioParams(b_min=0.2),
+        env=EnvSpec(radio="deadline_jitter"),
+    )
+    with pytest.raises(ValueError, match=r"b_min.*infeasible.*1/K"):
+        sc.lower_env()
+
+
+def test_lowering_rejects_non_positive_physics():
+    for field in ("bandwidth_hz", "deadline_s"):
+        sc = Scenario(
+            num_clients=K,
+            num_rounds=T,
+            radio=RadioParams(**{field: 0.0}),
+            env=EnvSpec(),
+        )
+        with pytest.raises(ValueError, match=f"{field}.*must be positive"):
+            sc.lower_env()
+
+
+def test_radio_params_validate_rejects_non_positive():
+    with pytest.raises(ValueError, match="bandwidth_hz.*positive"):
+        OceanConfig(
+            num_clients=K, num_rounds=T, radio=RadioParams(bandwidth_hz=-1.0)
+        )
+    with pytest.raises(ValueError, match="b_min.*positive"):
+        OceanConfig(num_clients=K, num_rounds=T, radio=RadioParams(b_min=0.0))
+
+
+def test_radio_params_validate_handles_array_leaves():
+    """Concrete per-round array leaves validate elementwise instead of
+    crashing on float() conversion."""
+    OceanConfig(
+        num_clients=K,
+        num_rounds=T,
+        radio=RadioParams(deadline_s=jnp.full((T,), 0.3)),
+    )
+    with pytest.raises(ValueError, match=r"(?s)deadline_s.*positive"):
+        OceanConfig(
+            num_clients=K,
+            num_rounds=T,
+            radio=RadioParams(deadline_s=jnp.full((T,), -0.3)),
+        )
+
+
+def test_invalid_modulator_params_fail_fast():
+    cases = [
+        ("spectrum_sharing", {"share_min": 0.0}, "share_min"),
+        ("spectrum_sharing", {"share_min": 0.9, "share_max": 0.5}, "share_min"),
+        ("spectrum_sharing", {"p_change": 1.5}, "probability"),
+        ("spectrum_sharing", {"num_levels": 1}, "num_levels"),
+        ("deadline_jitter", {"amp": 1.0}, "amp"),
+        ("deadline_jitter", {"rho": 1.0}, "rho"),
+    ]
+    for radio, params, match in cases:
+        with pytest.raises(ValueError, match=match):
+            Scenario(
+                num_clients=K,
+                num_rounds=T,
+                env=EnvSpec(radio=radio, radio_params=params),
+            ).lower_env()
+
+
+# --------------------------------------------------------------------------
+# modulator dynamics
+# --------------------------------------------------------------------------
+def test_spectrum_sharing_bandwidth_within_declared_bounds():
+    sc = Scenario(
+        num_clients=K,
+        num_rounds=200,
+        env=EnvSpec(
+            radio="spectrum_sharing",
+            radio_params={"share_min": 0.4, "share_max": 0.8},
+        ),
+    )
+    for seed in (0, 1, 2):
+        bw = np.asarray(sc.sample_radio(seed).bandwidth_hz)
+        assert np.all(bw >= 0.4 * 10e6 - 1e-3)
+        assert np.all(bw <= 0.8 * 10e6 + 1e-3)
+        assert bw.std() > 0  # actually moves
+
+
+def test_deadline_jitter_within_declared_bounds():
+    sc = Scenario(
+        num_clients=K,
+        num_rounds=200,
+        env=EnvSpec(radio="deadline_jitter", radio_params={"amp": 0.25, "rho": 0.6}),
+    )
+    tau = np.asarray(sc.sample_radio(5).deadline_s)
+    assert np.all(tau >= 0.3 * 0.75 - 1e-6)
+    assert np.all(tau <= 0.3 * 1.25 + 1e-6)
+    assert tau.std() > 0
+
+
+def test_modulated_beta_consistent_with_sequences():
+    """beta_t and energy_scale_t track the realized B_t / tau_t."""
+    sc = Scenario(
+        num_clients=K,
+        num_rounds=100,
+        env=EnvSpec(radio="spectrum_sharing"),
+    )
+    seq = sc.sample_radio(0)
+    np.testing.assert_allclose(
+        np.asarray(seq.beta),
+        np.asarray(seq.model_bits / (seq.deadline_s * seq.bandwidth_hz)),
+        rtol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(seq.energy_scale),
+        np.asarray(seq.deadline_s * seq.noise_w * seq.bandwidth_hz),
+        rtol=1e-6,
+    )
+
+
+# --------------------------------------------------------------------------
+# V-sweep energy bound (ROADMAP follow-up; marked slow, runs in CI)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "env_name,env",
+    [
+        ("iid_rayleigh", None),
+        (
+            "markov_fading",
+            EnvSpec(channel="gauss_markov", channel_params={"rho": 0.9}),
+        ),
+    ],
+)
+def test_ocean_energy_excess_scales_sublinearly_in_v(env_name, env):
+    """Theorem-2 style O(sqrt V) energy bound, swept across V in
+    {1, 10, 100}: OCEAN's spent-over-budget excess grows no faster than
+    sqrt(V) between decades, i.e. the V-normalized violation
+    excess(V)/sqrt(V) shrinks ~O(1/sqrt(V)) as V grows."""
+    T_, K_ = 300, 10
+    sc = Scenario(name=env_name, num_clients=K_, num_rounds=T_, env=env)
+    vs = (1.0, 10.0, 100.0)
+    res = run_grid(
+        [sc], [("ocean-u", PolicyParams(v=v)) for v in vs], seeds=[0, 1]
+    )
+    spent = np.asarray(res.energy_spent)   # (P, 1, N, K)
+    total = np.asarray(res.budget_total)   # (1, N, K)
+    excess = np.array(
+        [max(0.0, spent[i].mean() / total.mean() - 1.0) for i in range(len(vs))]
+    )
+    assert np.all(excess > 0)  # these V dwarf V_DEFAULT=1e-5: queues saturate
+    for lo, hi in ((0, 1), (1, 2)):
+        growth = excess[hi] / excess[lo]
+        allowed = np.sqrt(vs[hi] / vs[lo]) * 1.25
+        assert growth <= allowed, (
+            f"{env_name}: excess grew {growth:.2f}x from V={vs[lo]} to "
+            f"V={vs[hi]}, faster than the O(sqrt V) bound ({allowed:.2f}x)"
+        )
+    normalized = excess / np.sqrt(np.asarray(vs))
+    assert np.all(np.diff(normalized) < 0), (
+        f"{env_name}: excess/sqrt(V) must shrink monotonically, got "
+        f"{normalized}"
+    )
