@@ -1,0 +1,121 @@
+"""Solver-backend throughput: bisect vs newton vs pallas on the P3 hot loop.
+
+Every figure benchmark spends its time inside ``ocean_p``; this module
+starts the perf trajectory for that hot loop.  For each backend it times
+a jitted, vmapped batch of per-round P3 solves (steady state, compile
+excluded and reported separately) across K in {10, 20, 50, 100}, plus
+one grid-scaling cell (a small ``GridEngine`` sweep per backend) so the
+numbers cover the real engine path too.
+
+Claims:
+  * ``newton`` >= 3x faster than ``bisect`` steady-state at K=20 (CPU),
+  * fast backends reproduce ``bisect``'s selections on the bench draws.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, claim, emit, paper_scenario
+from repro.core import PolicyParams, RadioParams
+from repro.core.selection import ocean_p
+from repro.sim import GridEngine
+
+BENCH = "solver_bench"
+BACKENDS = ("bisect", "newton", "pallas")
+KS = (10, 20, 50, 100)
+BATCH = {10: 64, 20: 64, 50: 16, 100: 8}
+CLAIM_K = 20
+CLAIM_SPEEDUP = 3.0
+
+
+def _draws(k: int, batch: int):
+    rng = np.random.default_rng(k)
+    q = jnp.asarray(rng.uniform(0, 0.2, (batch, k)).astype(np.float32))
+    h2 = jnp.asarray((2.5e-4 * rng.exponential(size=(batch, k))).astype(np.float32))
+    return q, h2
+
+
+def _bench_backend(backend: str, k: int, batch: int, radio: RadioParams):
+    q, h2 = _draws(k, batch)
+    v, eta = jnp.float32(1e-5), jnp.float32(1.0)
+    fn = jax.jit(
+        jax.vmap(lambda q, h2: ocean_p(q, h2, v, eta, radio, solver=backend))
+    )
+    with Timer() as t_compile:
+        sol = jax.block_until_ready(fn(q, h2))
+    # steady state: repeat until ~1s of wall clock
+    import time
+
+    t0 = time.perf_counter()
+    reps = 0
+    while time.perf_counter() - t0 < 1.0:
+        sol = fn(q, h2)
+        reps += 1
+    jax.block_until_ready(sol)
+    per_call = (time.perf_counter() - t0) / reps
+    return sol, t_compile.elapsed, per_call
+
+
+def run() -> bool:
+    ok = True
+    radio = RadioParams(b_min=0.005)  # feasible up to K=200 clients
+    steady = {}
+
+    for k in KS:
+        batch = BATCH[k]
+        sols = {}
+        for backend in BACKENDS:
+            sol, t_compile, per_call = _bench_backend(backend, k, batch, radio)
+            sols[backend] = sol
+            steady[(backend, k)] = per_call
+            emit(BENCH, f"{backend}_K{k}_rounds_per_s", batch / per_call)
+            emit(BENCH, f"{backend}_K{k}_steady_ms", per_call * 1e3)
+            emit(BENCH, f"{backend}_K{k}_compile_s", t_compile)
+        for backend in ("newton", "pallas"):
+            identical = bool(
+                np.array_equal(np.asarray(sols[backend].a), np.asarray(sols["bisect"].a))
+            )
+            if k == CLAIM_K:
+                ok &= claim(
+                    BENCH,
+                    f"{backend} reproduces bisect selections at K={k}",
+                    identical,
+                )
+            else:
+                emit(BENCH, f"{backend}_K{k}_selections_match_bisect", identical)
+
+    for backend in ("newton", "pallas"):
+        speedup = steady[("bisect", CLAIM_K)] / max(steady[(backend, CLAIM_K)], 1e-12)
+        emit(BENCH, f"{backend}_speedup_vs_bisect_K{CLAIM_K}", speedup)
+    ok &= claim(
+        BENCH,
+        f"newton >= {CLAIM_SPEEDUP}x faster than bisect steady-state at K={CLAIM_K}",
+        steady[("bisect", CLAIM_K)]
+        >= CLAIM_SPEEDUP * steady[("newton", CLAIM_K)],
+    )
+
+    # -- one grid-scaling cell: the engine path, per backend ----------------
+    T_, K_ = 60, 10
+    scenarios = [
+        paper_scenario("stationary", T_=T_, K_=K_),
+        paper_scenario("scenario1", T_=T_, K_=K_, pathloss=(32.0, 45.0)),
+    ]
+    policies = [("ocean-u", PolicyParams(v=1e-5)), "smo"]
+    grid_steady = {}
+    for backend in BACKENDS:
+        engine = GridEngine(scenarios, policies, solver=backend)
+        res = engine.run(range(3))
+        jax.block_until_ready(res.a)          # compile
+        with Timer() as t:
+            res = engine.run(range(3))
+            jax.block_until_ready(res.a)
+        grid_steady[backend] = t.elapsed
+        emit(BENCH, f"grid_cell_{backend}_steady_s", t.elapsed, f"2x2x3 grid T={T_}")
+    emit(
+        BENCH,
+        "grid_cell_newton_speedup_vs_bisect",
+        grid_steady["bisect"] / max(grid_steady["newton"], 1e-12),
+    )
+    return ok

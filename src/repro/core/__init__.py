@@ -3,6 +3,12 @@ bandwidth allocation under long-term energy constraints."""
 from repro.core.energy import RadioParams, energy, f_shannon, f_shannon_prime
 from repro.core.bandwidth import solve_p4
 from repro.core.selection import OceanPSolution, ocean_p, p3_value, priorities
+from repro.core.solvers import (
+    SolverBackend,
+    available_solvers,
+    get_solver,
+    register_solver,
+)
 from repro.core.ocean import (
     OceanConfig,
     OceanState,
@@ -51,6 +57,10 @@ __all__ = [
     "f_shannon",
     "f_shannon_prime",
     "solve_p4",
+    "SolverBackend",
+    "available_solvers",
+    "get_solver",
+    "register_solver",
     "OceanPSolution",
     "ocean_p",
     "p3_value",

@@ -66,6 +66,7 @@ def solve_p4(
     radio: RadioParams,
     outer_iters: int = 42,
     inner_iters: int = 42,
+    method: str = "bisect",
 ) -> Tuple[Array, Array]:
     """Optimal bandwidth split of ``delta`` among ``mask``-ed clients.
 
@@ -74,12 +75,25 @@ def solve_p4(
       mask:  (K,) bool — membership of S - S0.
       delta: scalar — total ratio to distribute (= 1 - |S0| * b_min).
       radio: physics.
+      method: solver backend name (``repro.core.solvers``).  ``bisect``
+            (default) is this module's bit-stable double bisection; any
+            other registered backend with a single-mask waterfiller
+            (``newton``, ``pallas``) dispatches to it.  ``outer_iters``/
+            ``inner_iters`` are bisect step counts and apply only to
+            ``bisect`` — other methods converge superlinearly and use
+            their own budgets (``repro.core.solvers.NEWTON_*``).
 
     Returns:
       b:    (K,) allocation, 0 outside the mask, sum(b[mask]) == delta.
       cost: scalar — sum_k rho_k f(b_k) over the mask (the energy-weighted
             objective P4 minimizes, *without* the N0*tau*B prefactor).
     """
+    if method != "bisect":
+        from repro.core.solvers import get_solver, waterfill_newton
+
+        backend = get_solver(method)  # fail fast on unknown names
+        waterfill = backend.waterfill or waterfill_newton
+        return waterfill(rho, mask, delta, radio)
     rho = jnp.asarray(rho)
     mask = jnp.asarray(mask, bool)
     delta = jnp.asarray(delta, rho.dtype)

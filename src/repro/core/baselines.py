@@ -49,7 +49,8 @@ def select_all(
 
     ``radio_seq`` — optional per-round radio physics, a pytree of (T,)
     leaves (``repro.env.radio.TracedRadio``); None bakes in the static
-    ``cfg.radio`` exactly as before.
+    ``cfg.radio`` exactly as before.  ``cfg.solver`` picks the P4
+    waterfilling backend (``repro.core.solvers``).
     """
     from repro.core.bandwidth import solve_p4
 
@@ -57,7 +58,9 @@ def select_all(
 
     def per_round(h2, radio):
         rho = 1.0 / jnp.maximum(h2, 1e-30)  # energy weights, all positive
-        b, _ = solve_p4(rho, jnp.ones((K,), bool), jnp.asarray(1.0), radio)
+        b, _ = solve_p4(
+            rho, jnp.ones((K,), bool), jnp.asarray(1.0), radio, method=cfg.solver
+        )
         a = jnp.ones((K,), bool)
         return a, b, energy(b, h2, radio, a)
 
@@ -172,7 +175,7 @@ def lookahead_dual(
 
     def rounds_for(mu):
         def per_round(h2, eta_t, radio):
-            sol = ocean_p(mu, h2, jnp.asarray(1.0), eta_t, radio)
+            sol = ocean_p(mu, h2, jnp.asarray(1.0), eta_t, radio, solver=cfg.solver)
             e = energy(sol.b, h2, radio, sol.a)
             return sol.a, sol.b, e
 

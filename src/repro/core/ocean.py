@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.energy import RadioParams, energy
 from repro.core.selection import OceanPSolution, ocean_p
+from repro.core.solvers import get_solver
 
 Array = jax.Array
 
@@ -36,6 +37,9 @@ class OceanConfig:
                    the setting used in the paper's experiments §VI-A).
       radio:       physics (bandwidth, noise, deadline, model bits, b_min).
       energy_budget_j: per-client long-term budget H_k (scalar or (K,)).
+      solver:      P4/OCEAN-P backend name (``repro.core.solvers``):
+                   ``bisect`` (default, bit-stable reference), ``newton``
+                   (fast safeguarded Newton), or ``pallas`` (fused kernel).
     """
 
     num_clients: int
@@ -43,8 +47,10 @@ class OceanConfig:
     radio: RadioParams
     energy_budget_j: float = 0.15
     frame_len: Optional[int] = None  # default: R = T
+    solver: str = "bisect"
 
     def __post_init__(self):
+        get_solver(self.solver)  # fail fast on unknown backend names
         self.radio.validate(self.num_clients)
         if self.frame_len is not None and self.frame_len <= 0:
             raise ValueError(
@@ -118,7 +124,7 @@ def ocean_round(
     at_boundary = (state.t > 0) & (jnp.mod(state.t, R) == 0)
     q = jnp.where(at_boundary, jnp.zeros_like(state.q), state.q)
 
-    sol: OceanPSolution = ocean_p(q, h2, v, eta, radio)
+    sol: OceanPSolution = ocean_p(q, h2, v, eta, radio, solver=cfg.solver)
     e = energy(sol.b, h2, radio, sol.a)
 
     if budget_inc is None:

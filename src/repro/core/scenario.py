@@ -35,6 +35,7 @@ from repro.core.channel import (
 from repro.core.energy import RadioParams
 from repro.core.ocean import OceanConfig
 from repro.core.patterns import eta_schedule
+from repro.core.solvers import get_solver
 from repro.env.channel import LowerCtx, get_channel_process, sample_channel_process
 from repro.env.energy import sample_budget_process
 from repro.env.radio import TracedRadio, sample_radio_process
@@ -72,6 +73,10 @@ class Scenario:
                        budget processes; None lowers the legacy
                        ``pathloss_db``/``fading`` fields to the
                        ``iid_rayleigh``/``static`` shim.
+      solver:          P4/OCEAN-P backend (``repro.core.solvers``):
+                       ``bisect`` (default, bit-stable), ``newton``, or
+                       ``pallas``.  A compiled-program static: all
+                       scenarios of one grid must agree.
     """
 
     name: str = "stationary"
@@ -84,8 +89,10 @@ class Scenario:
     eta: str = "uniform"
     frame_len: Optional[int] = None
     env: Optional[EnvSpec] = None
+    solver: str = "bisect"
 
     def __post_init__(self):
+        get_solver(self.solver)  # fail fast on unknown backend names
         if len(self.pathloss_db) != 2:
             raise ValueError(
                 f"pathloss_db must be a (start_db, end_db) pair, got "
@@ -109,6 +116,7 @@ class Scenario:
             radio=self.radio,
             energy_budget_j=self.energy_budget_j,  # type: ignore[arg-type]
             frame_len=self.frame_len,
+            solver=self.solver,
         )
 
     def channel_model(self) -> ChannelModel:
@@ -223,6 +231,8 @@ class Scenario:
             d.pop("env")  # keep pre-EnvSpec payloads byte-stable
         else:
             d["env"] = self.env.to_dict()
+        if self.solver == "bisect":
+            d.pop("solver")  # keep pre-solver payloads byte-stable
         return d
 
     @classmethod

@@ -17,13 +17,13 @@ Leftover bandwidth when *only* S0 is selected is spread evenly over S0
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bandwidth import solve_p4
 from repro.core.energy import RadioParams, f_shannon
+from repro.core.solvers import SolverBackend, get_solver
 
 Array = jax.Array
 
@@ -43,6 +43,19 @@ def priorities(q: Array, h2: Array) -> Array:
     return jnp.asarray(q) / jnp.maximum(jnp.asarray(h2), 1e-30)
 
 
+def _promote_real(x: Array) -> Array:
+    """Promote integer/bool inputs to the floating dtype they imply.
+
+    ``jnp.promote_types`` handles every integer width (int16/int64/bool,
+    not just the int32 the old guard caught); float inputs pass through
+    untouched so the float32 hot path stays bit-identical.
+    """
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        x = x.astype(jnp.promote_types(x.dtype, jnp.float32))
+    return x
+
+
 def ocean_p(
     q: Array,
     h2: Array,
@@ -51,10 +64,17 @@ def ocean_p(
     radio: RadioParams,
     outer_iters: int = 42,
     inner_iters: int = 42,
+    solver: Union[str, SolverBackend, None] = None,
 ) -> OceanPSolution:
-    """Solve P3 exactly.  All args jittable; shapes: q, h2 -> (K,)."""
-    q = jnp.asarray(q, jnp.float32) if jnp.asarray(q).dtype == jnp.int32 else jnp.asarray(q)
-    h2 = jnp.asarray(h2)
+    """Solve P3 exactly.  All args jittable; shapes: q, h2 -> (K,).
+
+    ``solver`` picks the P4 backend (``repro.core.solvers``): ``bisect``
+    (default, bit-stable reference), ``newton`` (fast safeguarded
+    Newton), or ``pallas`` (fused kernel).  All solve the same problem
+    exactly; only ``bisect`` is byte-stable against historical figures.
+    """
+    q = _promote_real(q)
+    h2 = _promote_real(h2)
     dtype = jnp.result_type(q.dtype, h2.dtype, jnp.float32)
     q = q.astype(dtype)
     h2 = h2.astype(dtype)
@@ -71,30 +91,17 @@ def ocean_p(
 
     # Candidate m = number of positive-rho clients admitted, m in [0, K].
     # Sorted rank r belongs to candidate m's P4 iff n0 <= r < n0 + m.
-    ranks = jnp.arange(K)
-
-    def eval_candidate(m):
-        mask = (ranks >= n0) & (ranks < n0 + m)
-        feasible = m <= (K - n0)
-        b_sorted, cost = solve_p4(
-            rho_sorted, mask, delta, radio, outer_iters, inner_iters
-        )
-        # W*(S) = V*eta*(n0 + m) - energy_scale * cost      (paper Eq. 13/14)
-        w = v_eta * (n0 + m).astype(dtype) - radio.energy_scale * cost
-        w = jnp.where(feasible, w, -jnp.inf)
-        return w, b_sorted, mask
-
-    ms = jnp.arange(K + 1)
-    w_all, b_all, mask_all = jax.vmap(eval_candidate)(ms)
-
-    best = jnp.argmax(w_all)
-    w_star = w_all[best]
-    b_pos_sorted = b_all[best]          # positive-rho members' allocation
-    sel_pos_sorted = mask_all[best]
+    backend = get_solver(solver)
+    sol = backend.prefixes(
+        rho_sorted, n0, delta, v_eta, radio, outer_iters, inner_iters
+    )
+    m_star = sol.m_star
+    w_star = sol.w_star
+    b_pos_sorted = sol.b_pos_sorted     # positive-rho members' allocation
+    sel_pos_sorted = sol.sel_pos_sorted
 
     # S0 allocation: b_min each, plus any leftover when nobody else is
     # selected (so sum b == 1 always holds when anyone is selected).
-    m_star = ms[best]
     leftover = jnp.where(m_star == 0, delta, 0.0)
     b0_each = radio.b_min + leftover / jnp.maximum(n0.astype(dtype), 1.0)
     b_sorted_full = jnp.where(in_s0, b0_each, b_pos_sorted)

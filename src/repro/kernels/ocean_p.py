@@ -1,0 +1,210 @@
+"""Fused OCEAN-P prefix solver (Pallas) — the per-round P3 hot loop.
+
+One kernel invocation solves the whole candidate lattice of the paper's
+Theorem-1 structure: the K+1 prefixes of the rho-sorted client order,
+each a convex P4 waterfilling problem.  The XLA backends (``bisect``,
+``newton`` in ``repro.core.solvers``) vmap the candidates, materializing
+(K+1, K) intermediates in HBM for every bisection/Newton step; this
+kernel instead
+
+  * keeps ``rho_sorted`` (and all per-candidate state) resident in VMEM,
+  * iterates the K+1 candidates *sequentially* in an on-chip loop,
+    carrying only the running argmax (best W, best m, best allocation) —
+    the (K+1, K) lattice is never materialized anywhere,
+  * reuses the exact safeguarded-Newton math of the ``newton`` backend
+    (``repro.core.solvers.b_of_lam_newton``) inside the kernel, so the
+    two backends agree to float32 precision by construction.
+
+Scalars (n0, delta, V*eta, beta, b_min, energy_scale) arrive as one SMEM
+row so a traced per-round radio pytree (``repro.env.radio``) lowers
+straight into the kernel.  On non-TPU backends the kernel runs in
+interpret mode (same trace, compiled by XLA) — the CPU fallback used by
+tests and CI.  Parity is pinned against ``repro.kernels.ref``'s
+pure-jnp oracle in tests/test_solvers.py.
+
+CAVEAT: tests and CI are CPU-only, so only the interpret path is
+continuously validated; the compiled Mosaic path (auto-selected on TPU
+hosts) shares the trace but its SMEM/VMEM lowering has not run on real
+hardware yet — pass ``interpret=True`` explicitly to force the
+validated path, and see the ROADMAP PR-4 follow-up before relying on
+``solver="pallas"`` in a TPU production job.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _fused_kernel(scal_ref, rho_ref, b_ref, wm_ref, *, K: int, outer: int, inner: int):
+    from repro.core.solvers import _budget_repair, _geo_mid, b_of_lam_newton
+    from repro.core.energy import f_shannon, f_shannon_prime, f_shannon_second
+
+    n0 = scal_ref[0, 0]
+    delta = scal_ref[0, 1]
+    v_eta = scal_ref[0, 2]
+    beta = scal_ref[0, 3]
+    b_min = scal_ref[0, 4]
+    scale = scal_ref[0, 5]
+
+    rho = rho_ref[...]                                           # (1, K) resident
+    ranks = jax.lax.broadcasted_iota(jnp.float32, (1, K), 1)
+    pos = ranks >= n0
+    kf = jnp.float32(K)
+    fp_min = -f_shannon_prime(b_min, beta)                       # > 0 scalar
+
+    def candidate(m, carry):
+        best_w, best_m, best_b = carry
+        mf = m.astype(jnp.float32)
+        mask = pos & (ranks < n0 + mf)
+        b_max = jnp.maximum(delta - jnp.maximum(mf - 1.0, 0.0) * b_min, b_min)
+        rho_max = jnp.max(jnp.where(mask, rho, 0.0))
+        lam_hi = rho_max * fp_min * (1.0 + 1e-6) + 1e-30
+        # Seed at the KKT level of an equal split: the true lam lies between
+        # min and max over the prefix of rho_k |f'(delta/m)|; start at their
+        # geometric mean and let the bracketed Newton polish.
+        rho_min = jnp.min(jnp.where(mask, rho, jnp.inf))
+        rho_min = jnp.where(jnp.isfinite(rho_min), rho_min, 0.0)
+        b_eq = jnp.clip(delta / jnp.maximum(mf, 1.0), b_min, b_max)
+        lam0 = jnp.clip(
+            jnp.sqrt(jnp.maximum(rho_min * rho_max, 1e-30))
+            * jnp.maximum(-f_shannon_prime(b_eq, beta), 1e-30),
+            0.0,
+            lam_hi,
+        )
+
+        def outer_body(_, oc):
+            lam, lo, hi = oc
+            b = b_of_lam_newton(lam, rho, beta, b_min, b_max, inner)
+            r = jnp.sum(jnp.where(mask, b, 0.0)) - delta
+            too_big = r > 0
+            lo = jnp.where(too_big, lam, lo)
+            hi = jnp.where(too_big, hi, lam)
+            interior = mask & (b > b_min) & (b < b_max)
+            dbdlam = -1.0 / (
+                jnp.maximum(rho, 1e-30)
+                * jnp.maximum(f_shannon_second(b, beta), 1e-30)
+            )
+            drdlam = jnp.sum(jnp.where(interior, dbdlam, 0.0))
+            lam_n = lam - r / jnp.minimum(drdlam, -1e-30)
+            ok = (lam_n >= lo) & (lam_n <= hi) & jnp.isfinite(lam_n)
+            lam = jnp.where(ok, lam_n, _geo_mid(lo, hi))
+            return lam, lo, hi
+
+        lam, _, _ = jax.lax.fori_loop(
+            0, outer, outer_body, (lam0, jnp.zeros_like(lam_hi), lam_hi)
+        )
+        b = b_of_lam_newton(lam, rho, beta, b_min, b_max, inner)
+        b = jnp.where(mask, b, 0.0)
+        b = _budget_repair(b, mask, delta, b_min, b_max)
+        cost = jnp.sum(jnp.where(mask, rho * f_shannon(jnp.maximum(b, b_min), beta), 0.0))
+        has_any = mf > 0
+        b = jnp.where(has_any, b, jnp.zeros_like(b))
+        cost = jnp.where(has_any, cost, 0.0)
+
+        w = v_eta * (n0 + mf) - scale * cost
+        w = jnp.where(mf <= kf - n0, w, NEG_INF)
+
+        better = w > best_w                  # strict: ties keep the smaller m
+        best_b = jnp.where(better, b, best_b)
+        return (
+            jnp.where(better, w, best_w),
+            jnp.where(better, mf, best_m),
+            best_b,
+        )
+
+    best_w, best_m, best_b = jax.lax.fori_loop(
+        0,
+        K + 1,
+        candidate,
+        (jnp.float32(NEG_INF), jnp.float32(0.0), jnp.zeros((1, K), jnp.float32)),
+    )
+    b_ref[...] = best_b
+    wm_ref[0, 0] = best_w
+    wm_ref[0, 1] = best_m
+
+
+def ocean_p_prefixes_fused(
+    rho_sorted: jax.Array,
+    n0: jax.Array,
+    delta: jax.Array,
+    v_eta: jax.Array,
+    radio,
+    *,
+    outer_iters: int = 12,
+    inner_iters: int = 9,
+    interpret: Optional[bool] = None,
+):
+    """Backend-contract wrapper: solve all K+1 prefixes, return the winner.
+
+    Returns a ``repro.core.solvers.PrefixSolution``.  ``interpret=None``
+    auto-selects interpret mode off-TPU (the CPU fallback).
+    """
+    from repro.core.solvers import PrefixSolution
+
+    if interpret is None:
+        interpret = _default_interpret()
+    K = rho_sorted.shape[0]
+    dtype = rho_sorted.dtype
+
+    scal = jnp.stack(
+        [
+            jnp.asarray(n0, jnp.float32),
+            jnp.asarray(delta, jnp.float32),
+            jnp.asarray(v_eta, jnp.float32),
+            jnp.asarray(radio.beta, jnp.float32),
+            jnp.asarray(radio.b_min, jnp.float32),
+            jnp.asarray(radio.energy_scale, jnp.float32),
+            jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32),
+        ]
+    ).reshape(1, 8)
+    rho2d = rho_sorted.astype(jnp.float32).reshape(1, K)
+
+    kernel = functools.partial(
+        _fused_kernel, K=K, outer=outer_iters, inner=inner_iters
+    )
+    if interpret:
+        in_specs = out_specs = None
+    else:  # TPU: scalars in SMEM, vectors in VMEM
+        from jax.experimental.pallas import tpu as pltpu
+
+        in_specs = [
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ]
+        out_specs = (
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        )
+    call_kwargs = {}
+    if in_specs is not None:
+        call_kwargs = dict(in_specs=in_specs, out_specs=out_specs)
+    b2d, wm = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1, K), jnp.float32),
+            jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        ),
+        interpret=interpret,
+        **call_kwargs,
+    )(scal, rho2d)
+
+    m_star = jnp.round(wm[0, 1]).astype(jnp.int32)
+    ranks = jnp.arange(K)
+    sel = (ranks >= n0) & (ranks < n0 + m_star)
+    return PrefixSolution(
+        m_star=m_star,
+        w_star=wm[0, 0].astype(dtype),
+        b_pos_sorted=b2d[0].astype(dtype),
+        sel_pos_sorted=sel,
+    )

@@ -54,6 +54,15 @@ def wkv_scan_ref(
     return jnp.moveaxis(y, 0, 1)
 
 
+def ocean_p_prefixes_ref(rho_sorted, n0, delta, v_eta, radio):
+    """Oracle for the fused OCEAN-P kernel: the bit-stable double-bisection
+    backend (``repro.core.solvers._prefix_bisect``), itself pinned to
+    brute-force 2^K enumeration in tests/test_selection.py."""
+    from repro.core.solvers import _prefix_bisect
+
+    return _prefix_bisect(rho_sorted, n0, delta, v_eta, radio, 42, 42)
+
+
 def mamba_scan_ref(da: jax.Array, dbu: jax.Array, c: jax.Array) -> jax.Array:
     """(B, T, Di, Ds) sequential selective scan; returns f32 (B, T, Di)."""
     b, t, di, ds = da.shape

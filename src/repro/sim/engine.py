@@ -32,13 +32,26 @@ Environment streams are keyed by ``fold_in(PRNGKey(seed), salt)`` where
 ``salt`` is a stable content hash of the scenario's EnvSpec — never its
 grid index — so adding, removing, or reordering scenarios cannot change
 any other cell's draws (see ``repro.env.spec``).
+
+Two execution knobs (see the README "Performance" section):
+
+* ``solver=`` picks the P3/P4 backend (``repro.core.solvers``) for the
+  whole grid — a compiled-program static, so all scenarios must agree;
+* ``shard=`` distributes the flattened (S*N) cell axis over an
+  auto-built mesh of all local devices via ``shard_map`` (padded to the
+  mesh size, donated input buffers off-CPU).  Cells are independent, so
+  the sharded program is bit-identical to the unsharded nested-vmap one.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core.baselines import PolicyTrace
 from repro.core.ocean import OceanConfig
@@ -82,11 +95,26 @@ class GridResult(NamedTuple):
 
     def cell(self, policy: str, scenario: str, seed: int) -> PolicyTrace:
         """Extract one (policy, scenario, seed) cell as a PolicyTrace."""
-        if self.policies.count(policy) > 1:
+        for label, name, axis in (
+            ("policy", policy, self.policies),
+            ("scenario", scenario, self.scenarios),
+        ):
+            if axis.count(name) > 1:
+                raise ValueError(
+                    f"{label} name {name!r} appears {axis.count(name)} "
+                    f"times on the {label} axis (e.g. a parameter sweep); "
+                    f"index the result arrays positionally instead of via "
+                    f"cell()"
+                )
+            if name not in axis:
+                raise ValueError(
+                    f"unknown {label} {name!r}; this grid's {label} axis: "
+                    f"{', '.join(axis)}"
+                )
+        if seed not in self.seeds:
             raise ValueError(
-                f"policy name {policy!r} appears {self.policies.count(policy)} "
-                f"times on the policy axis (e.g. a parameter sweep); index the "
-                f"result arrays positionally instead of via cell()"
+                f"unknown seed {seed!r}; this grid ran seeds "
+                f"{', '.join(str(s) for s in self.seeds)}"
             )
         p = self.policies.index(policy)
         s = self.scenarios.index(scenario)
@@ -119,7 +147,7 @@ def _check_compatible(scenarios: Sequence[Scenario]) -> Scenario:
     for sc in scenarios[1:]:
         mismatches = [
             f"{field}: {getattr(base, field)!r} != {getattr(sc, field)!r}"
-            for field in ("num_rounds", "num_clients", "frame_len")
+            for field in ("num_rounds", "num_clients", "frame_len", "solver")
             if getattr(base, field) != getattr(sc, field)
         ]
         if mismatches:
@@ -142,6 +170,15 @@ class GridEngine:
                  turns the policy axis into a V sweep.
       experiment: optional ``WflnExperiment``; when given, every cell's
                  FedAvg history is computed inside the same program.
+      solver:    P4/OCEAN-P backend override (``repro.core.solvers``);
+                 None keeps the scenarios' ``solver`` field (default
+                 ``bisect``, the bit-stable reference).
+      shard:     multi-device execution: the flattened (S*N) cell axis is
+                 ``shard_map``-ped over an auto-built mesh of all local
+                 devices, with donated input buffers (off-CPU).  None =
+                 auto (shard iff more than one device is visible), True =
+                 force (a 1-device mesh is a no-op), False = never.  The
+                 sharded program is bit-identical to the unsharded one.
     """
 
     def __init__(
@@ -150,12 +187,17 @@ class GridEngine:
         policies: Sequence[PolicySpec],
         *,
         experiment=None,
+        solver: Optional[str] = None,
+        shard: Optional[bool] = None,
     ):
         if not scenarios or not policies:
             raise ValueError("need at least one scenario and one policy")
         self.scenarios = tuple(scenarios)
         base = _check_compatible(self.scenarios)
         self.cfg: OceanConfig = base.ocean_config()
+        if solver is not None:
+            # replace() re-runs __post_init__, failing fast on bad names.
+            self.cfg = dataclasses.replace(self.cfg, solver=solver)
         self._resolved = _resolve_policy_specs(policies)
         self.policies = tuple(pol.name for pol, _ in self._resolved)
         self.experiment = experiment
@@ -177,7 +219,30 @@ class GridEngine:
         )
         self._etas = jnp.stack([sc.eta_seq() for sc in self.scenarios])
 
-        self._fn = jax.jit(self._build)
+        devices = jax.devices()
+        self._ndev = len(devices)
+        self._shard = bool(shard) if shard is not None else self._ndev > 1
+        if self._shard:
+            mesh = Mesh(np.asarray(devices), ("cells",))
+            pc, rep = PartitionSpec("cells"), PartitionSpec()
+            fn = shard_map(
+                self._build_flat,
+                mesh=mesh,
+                in_specs=(pc, pc, pc, pc, pc, pc, pc, rep, pc),
+                out_specs=pc,
+                check_rep=False,
+            )
+            # Flattened inputs are rebuilt per run() call, so their buffers
+            # can be donated to the program (XLA aliases them into the
+            # outputs).  CPU has no donation support — skip the warning.
+            donate = (
+                ()
+                if jax.default_backend() == "cpu"
+                else (0, 1, 2, 3, 4, 5, 6, 8)
+            )
+            self._fn = jax.jit(fn, donate_argnums=donate)
+        else:
+            self._fn = jax.jit(self._build)
 
     # -- the single compiled program ----------------------------------------
     def _build(
@@ -253,6 +318,115 @@ class GridEngine:
         )
         return a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history
 
+    # -- the sharded program: one vmap over the flattened (S*N) cell axis ----
+    def _build_flat(
+        self, seed_flat, sidx_flat, chan_params, budget_params, radio_params,
+        env_salts, etas, base_key, learn_keys,
+    ):
+        """Per-cell program over the flattened (padded) cell axis.
+
+        Runs inside ``shard_map``: every argument except ``base_key``
+        carries a leading cell axis split over the mesh, so each device
+        executes this vmap on its local chunk.  The per-cell math is the
+        same as ``_build``'s nested vmaps (cell c = s * N + n), so the
+        sharded sweep is bit-identical to the unsharded one.
+        """
+        cfg = self.cfg
+        T, K = cfg.num_rounds, cfg.num_clients
+
+        def cell(seed, s_idx, cp, bp, rp, salt, eta_s, lkey):
+            fade_key = jax.random.PRNGKey(seed)
+            k_chan, k_budget = env_cell_keys(fade_key, salt)
+            k_radio = radio_cell_key(fade_key, salt)
+            h2 = sample_channel_process(cp, fade_key, k_chan, T, K)
+            dh, total = sample_budget_process(bp, k_budget, T, K)
+            radio_seq = sample_radio_process(rp, k_radio, T)
+            key_cell = jax.random.fold_in(
+                jax.random.fold_in(base_key, s_idx), seed
+            )
+
+            traces, hists = [], []
+            for pol, pp in self._resolved:
+                params = resolve_params(
+                    pol,
+                    cfg,
+                    pp._replace(key=pp.key if pp.key is not None else key_cell),
+                    scenario_eta=eta_s,
+                    scenario_budgets=total,
+                    scenario_budget_seq=dh,
+                    scenario_radio_seq=radio_seq,
+                )
+                tr = pol.trace_fn(cfg, h2, params)
+                traces.append(tr)
+                if self.experiment is not None:
+                    hists.append(self.experiment.run(lkey, tr))
+            a = jnp.stack([t.a for t in traces])
+            b = jnp.stack([t.b for t in traces])
+            e = jnp.stack([t.e for t in traces])
+            ns = jnp.stack([t.num_selected for t in traces])
+            history = (
+                {k: jnp.stack([h[k] for h in hists]) for k in hists[0]}
+                if hists
+                else {}
+            )
+            return a, b, e, ns, h2, dh, total, radio_seq, history
+
+        return jax.vmap(cell)(
+            seed_flat, sidx_flat, chan_params, budget_params, radio_params,
+            env_salts, etas, learn_keys,
+        )
+
+    def _run_sharded(self, seed_arr, base_key, learn_keys):
+        """Flatten (S, N) -> padded (C,), execute, restore the grid axes."""
+        S, N = len(self.scenarios), seed_arr.shape[0]
+        C = S * N
+        pad = (-C) % self._ndev
+
+        def pad_cells(x):
+            if pad == 0:
+                return x
+            return jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)], axis=0)
+
+        def per_scenario(tree):  # (S, ...) leaves -> (C_pad, ...), s-major
+            return jax.tree_util.tree_map(
+                lambda x: pad_cells(jnp.repeat(x, N, axis=0)), tree
+            )
+
+        seed_flat = pad_cells(jnp.tile(seed_arr, S))
+        sidx_flat = pad_cells(jnp.repeat(jnp.arange(S), N))
+        lk_flat = pad_cells(learn_keys.reshape((C,) + learn_keys.shape[2:]))
+
+        outs = self._fn(
+            seed_flat,
+            sidx_flat,
+            per_scenario(self._chan_params),
+            per_scenario(self._budget_params),
+            per_scenario(self._radio_params),
+            pad_cells(jnp.repeat(self._env_salts, N, axis=0)),
+            per_scenario(self._etas),
+            base_key,
+            lk_flat,
+        )
+
+        def to_grid(tree):  # (C_pad, ...) leaves -> (S, N, ...)
+            return jax.tree_util.tree_map(
+                lambda x: x[:C].reshape((S, N) + x.shape[1:]), tree
+            )
+
+        a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history = outs
+        # per-cell policy stacks sit on axis 2 after to_grid; lead with P.
+        a, b, e, ns = (jnp.moveaxis(to_grid(x), 2, 0) for x in (a, b, e, ns))
+        history = (
+            {k: jnp.moveaxis(v, 2, 0) for k, v in to_grid(history).items()}
+            if history
+            else None
+        )
+        return (
+            a, b, e, ns,
+            to_grid(h2), to_grid(budget_inc), to_grid(budget_total),
+            to_grid(radio_seq), history,
+        )
+
     # -- public API ----------------------------------------------------------
     def run(
         self,
@@ -293,16 +467,23 @@ class GridEngine:
                     f"learn_keys must have leading shape (S={S}, N={N}), "
                     f"got {learn_keys.shape}"
                 )
-        a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history = self._fn(
-            seed_arr,
-            self._chan_params,
-            self._budget_params,
-            self._radio_params,
-            self._env_salts,
-            self._etas,
-            base_key,
-            learn_keys,
-        )
+        if self._shard:
+            (
+                a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
+            ) = self._run_sharded(seed_arr, base_key, learn_keys)
+        else:
+            (
+                a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
+            ) = self._fn(
+                seed_arr,
+                self._chan_params,
+                self._budget_params,
+                self._radio_params,
+                self._env_salts,
+                self._etas,
+                base_key,
+                learn_keys,
+            )
         return GridResult(
             a=a,
             b=b,
@@ -326,11 +507,15 @@ def run_grid(
     seeds: Sequence[int],
     *,
     experiment=None,
+    solver: Optional[str] = None,
+    shard: Optional[bool] = None,
     base_key: Optional[Array] = None,
     learn_keys: Optional[Array] = None,
     learn_seed: int = 0,
 ) -> GridResult:
     """One-shot convenience wrapper around ``GridEngine``."""
-    return GridEngine(scenarios, policies, experiment=experiment).run(
+    return GridEngine(
+        scenarios, policies, experiment=experiment, solver=solver, shard=shard
+    ).run(
         seeds, base_key=base_key, learn_keys=learn_keys, learn_seed=learn_seed
     )

@@ -126,6 +126,32 @@ def test_heterogeneous_budget_scenario_axis():
     assert np.all(np.asarray(res.energy_spent[0, 0, 0]) <= 0.02 * 1.02)
 
 
+def test_duplicate_scenario_names_ambiguous_for_cell():
+    sc = Scenario(name="twin", num_clients=K, num_rounds=T)
+    res = run_grid([sc, sc], ["smo"], seeds=[0])
+    with pytest.raises(ValueError, match="positionally"):
+        res.cell("smo", "twin", 0)
+
+
+def test_unknown_seed_and_names_raise_helpfully():
+    res = run_grid(make_scenarios(), ["smo"], seeds=[0, 7])
+    with pytest.raises(ValueError, match="unknown seed 3"):
+        res.cell("smo", "stationary", 3)
+    with pytest.raises(ValueError, match="unknown scenario 'nope'"):
+        res.cell("smo", "nope", 0)
+    with pytest.raises(ValueError, match="unknown policy 'ocean-z'"):
+        res.cell("ocean-z", "stationary", 0)
+
+
+def test_solver_mismatch_across_scenarios_rejected():
+    scenarios = [
+        Scenario(name="a", num_clients=K, num_rounds=T, solver="bisect"),
+        Scenario(name="b", num_clients=K, num_rounds=T, solver="newton"),
+    ]
+    with pytest.raises(ValueError, match="grid-incompatible"):
+        GridEngine(scenarios, ["smo"])
+
+
 def test_incompatible_scenarios_rejected():
     scenarios = [
         Scenario(num_clients=K, num_rounds=T),

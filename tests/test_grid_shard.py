@@ -1,0 +1,125 @@
+"""Sharded GridEngine: flattened (S*N) cell axis over a device mesh.
+
+The sharded program must be bit-identical to the unsharded nested-vmap
+program.  One-device no-op identity runs in-process; the genuinely
+multi-device case forces 4 host CPU devices via XLA_FLAGS in a
+subprocess (the flag must be set before jax initializes).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import PolicyParams, Scenario
+from repro.sim import GridEngine
+
+T, K = 20, 5
+
+
+def _scenarios():
+    return [
+        Scenario(name="stationary", num_clients=K, num_rounds=T),
+        Scenario(
+            name="drift",
+            num_clients=K,
+            num_rounds=T,
+            pathloss_db=(32.0, 45.0),
+            eta="ascend",
+        ),
+    ]
+
+
+POLICIES = [("ocean-u", PolicyParams(v=1e-5)), "smo"]
+FIELDS = ("a", "b", "e", "num_selected", "h2", "budget_inc", "budget_total")
+
+
+def _assert_results_equal(r1, r2):
+    for f in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r1, f)), np.asarray(getattr(r2, f)), err_msg=f
+        )
+    for l1, l2 in zip(
+        jax.tree_util.tree_leaves(r1.radio_seq),
+        jax.tree_util.tree_leaves(r2.radio_seq),
+    ):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_one_device_shard_is_bit_identical_noop():
+    """shard=True on a 1-device mesh must change nothing (C pads to C)."""
+    scenarios = _scenarios()
+    base = GridEngine(scenarios, POLICIES, shard=False).run([0, 1, 2])
+    flat = GridEngine(scenarios, POLICIES, shard=True).run([0, 1, 2])
+    _assert_results_equal(base, flat)
+
+
+def test_shard_with_uneven_cell_count_pads():
+    """C = S*N not divisible by the mesh still returns exact (S, N) axes."""
+    sc = _scenarios()[:1]
+    base = GridEngine(sc, POLICIES, shard=False).run([0, 1, 2])
+    flat = GridEngine(sc, POLICIES, shard=True).run([0, 1, 2])
+    assert flat.a.shape == (2, 1, 3, T, K)
+    _assert_results_equal(base, flat)
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2, reason="needs >1 device (CI forces 4 via XLA_FLAGS)"
+)
+def test_multi_device_shard_bit_identical_inprocess():
+    scenarios = _scenarios()
+    base = GridEngine(scenarios, POLICIES, shard=False).run([0, 1, 2])
+    flat = GridEngine(scenarios, POLICIES, shard=True).run([0, 1, 2])
+    _assert_results_equal(base, flat)
+    # auto mode shards by itself when more than one device is visible
+    assert GridEngine(scenarios, POLICIES)._shard
+
+
+_SUBPROCESS_SCRIPT = """
+import jax, numpy as np
+assert len(jax.devices()) == 4, jax.devices()
+from repro.core import PolicyParams, Scenario
+from repro.sim import GridEngine
+T, K = 12, 4
+scenarios = [
+    Scenario(name="stationary", num_clients=K, num_rounds=T),
+    Scenario(name="drift", num_clients=K, num_rounds=T, pathloss_db=(32.0, 45.0)),
+]
+policies = [("ocean-u", PolicyParams(v=1e-5)), "smo"]
+base = GridEngine(scenarios, policies, shard=False).run([0, 1, 2])
+flat = GridEngine(scenarios, policies, shard=True).run([0, 1, 2])  # C=6 -> pad 8
+for f in ("a", "b", "e", "num_selected", "h2", "budget_inc", "budget_total"):
+    np.testing.assert_array_equal(
+        np.asarray(getattr(base, f)), np.asarray(getattr(flat, f)), err_msg=f
+    )
+for l1, l2 in zip(
+    jax.tree_util.tree_leaves(base.radio_seq),
+    jax.tree_util.tree_leaves(flat.radio_seq),
+):
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+print("SHARDED_BIT_IDENTICAL")
+"""
+
+
+@pytest.mark.slow
+def test_forced_four_host_devices_subprocess():
+    """End-to-end: 4 forced host devices, sharded == unsharded bitwise."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_BIT_IDENTICAL" in out.stdout

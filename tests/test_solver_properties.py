@@ -1,0 +1,57 @@
+"""Hypothesis property tests for the solver backends (dev extra).
+
+Complements tests/test_solvers.py (which keeps the same guarantees
+exercised without hypothesis): brute-force 2^K optimality via the
+``p3_value`` oracle for *every* backend, and exact argmax-selection
+agreement of the fast backends with the bit-stable ``bisect`` reference
+on randomized (q, h2, V, eta, radio) draws.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core.energy import RadioParams  # noqa: E402
+from repro.core.selection import ocean_p, p3_value  # noqa: E402
+from test_solvers import BACKENDS, _draw, brute_force_best  # noqa: E402
+
+RADIO = RadioParams()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 5))
+def test_backends_match_bruteforce_property(seed, k):
+    rng = np.random.default_rng(seed)
+    q, h2 = _draw(rng, k)
+    v, eta = 1e-5, 1.0
+    ref, _ = brute_force_best(q, h2, v, eta, RADIO)
+    for backend in BACKENDS:
+        sol = ocean_p(q, h2, jnp.asarray(v), jnp.asarray(eta), RADIO, solver=backend)
+        ours = float(sol.objective)
+        assert ours >= ref - max(1e-6, 5e-3 * abs(ref)), backend
+        achieved = float(p3_value(sol.a, sol.b, q, h2, v, eta, RADIO))
+        assert achieved == pytest.approx(ours, rel=1e-3, abs=1e-6), backend
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fast_backends_identical_selection_property(seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, 14))
+    q, h2 = _draw(rng, k)
+    v = jnp.asarray(10.0 ** rng.uniform(-6.0, -4.0), jnp.float32)
+    eta = jnp.asarray(rng.uniform(0.5, 1.5), jnp.float32)
+    radio = RadioParams(
+        bandwidth_hz=float(10.0 ** rng.uniform(6.5, 7.5)),
+        deadline_s=float(rng.uniform(0.1, 0.5)),
+        b_min=float(rng.uniform(0.005, 0.9 / k)),
+    )
+    ref = ocean_p(q, h2, v, eta, radio, solver="bisect")
+    for backend in ("newton", "pallas"):
+        sol = ocean_p(q, h2, v, eta, radio, solver=backend)
+        np.testing.assert_array_equal(
+            np.asarray(sol.a), np.asarray(ref.a), err_msg=f"{backend} k={k}"
+        )
