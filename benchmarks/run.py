@@ -7,6 +7,13 @@ validates the paper's claims (CLAIM rows), and returns overall success.
 
 ``--json-dir`` additionally writes one machine-readable
 ``BENCH_<module>.json`` per module (the same rows as the CSV stream).
+
+``--check-baseline`` compares every throughput metric (``*_rounds_per_s``)
+against the committed ``benchmarks/baselines/BENCH_<module>.json`` and
+fails the run on a regression beyond ``--baseline-tolerance`` (default
+30%) — the recorded perf trajectory is a gate, not just an artifact.
+Refresh a baseline by re-running with ``--json-dir benchmarks/baselines``
+on the reference machine and committing the result.
 """
 from __future__ import annotations
 
@@ -31,7 +38,56 @@ from benchmarks import (
     structure,
     temporal_pattern,
     tradeoff,
+    traj_bench,
 )
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+BASELINE_METRIC_SUFFIX = "_rounds_per_s"
+
+
+def check_baseline(name: str, rows, baseline_dir: str, tolerance: float) -> bool:
+    """Gate this run's throughput rows against the committed baseline.
+
+    Compares every ``*_rounds_per_s`` metric to the same metric in
+    ``<baseline_dir>/BENCH_<name>.json``; a value below
+    ``(1 - tolerance) * baseline`` is a regression and fails the module.
+    Metrics missing on either side are reported but don't fail (the
+    lattice may legitimately grow/shrink across PRs).  No baseline file
+    => silently passes (modules opt in by committing one).
+    """
+    path = os.path.join(baseline_dir, f"BENCH_{name}.json")
+    if not os.path.exists(path):
+        return True
+    with open(path) as f:
+        base_rows = json.load(f)["rows"]
+    base = {
+        r["metric"]: float(r["value"])
+        for r in base_rows
+        if r["metric"].endswith(BASELINE_METRIC_SUFFIX)
+    }
+    ok = True
+    for r in rows:
+        metric = r["metric"]
+        if not metric.endswith(BASELINE_METRIC_SUFFIX):
+            continue
+        if metric not in base:
+            print(f"{name},BASELINE_NEW,{metric},no recorded baseline yet")
+            continue
+        cur, ref = float(r["value"]), base[metric]
+        ratio = cur / max(ref, 1e-12)
+        status = "OK" if ratio >= 1.0 - tolerance else "REGRESSION"
+        print(
+            f"{name},BASELINE_{status},{metric},"
+            f"{cur:.6g} vs {ref:.6g} ({ratio:.2f}x)"
+        )
+        if status == "REGRESSION":
+            ok = False
+    missing = sorted(
+        m for m in base if m not in {r["metric"] for r in rows}
+    )
+    for m in missing:
+        print(f"{name},BASELINE_GONE,{m},metric no longer emitted")
+    return ok
 
 
 def _enable_compilation_cache() -> None:
@@ -67,6 +123,7 @@ BENCHMARKS = {
     "radio_sweep": radio_sweep.run,
     "grid_scaling": grid_scaling.run,
     "solver_bench": solver_bench.run,
+    "traj_bench": traj_bench.run,
     "roofline": roofline.run,
 }
 
@@ -79,6 +136,22 @@ def main() -> int:
         "--json-dir",
         default=None,
         help="also write BENCH_<module>.json row dumps into this directory",
+    )
+    ap.add_argument(
+        "--check-baseline",
+        action="store_true",
+        help="fail on *_rounds_per_s regressions vs benchmarks/baselines/",
+    )
+    ap.add_argument(
+        "--baseline-dir",
+        default=BASELINE_DIR,
+        help="directory of committed BENCH_<module>.json baselines",
+    )
+    ap.add_argument(
+        "--baseline-tolerance",
+        type=float,
+        default=0.30,
+        help="allowed fractional rounds/sec drop before failing (default 0.30)",
     )
     args = ap.parse_args()
 
@@ -108,6 +181,13 @@ def main() -> int:
             ok = False
         elapsed = time.time() - t0
         print(f"{name},total_runtime_s,{elapsed:.1f},")
+        if args.check_baseline:
+            ok &= check_baseline(
+                name,
+                common.ROWS[rows_before:],
+                args.baseline_dir,
+                args.baseline_tolerance,
+            )
         if args.json_dir:
             os.makedirs(args.json_dir, exist_ok=True)
             payload = {

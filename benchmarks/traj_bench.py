@@ -1,0 +1,168 @@
+"""Trajectory-backend throughput: scan vs fused whole-trajectory kernel.
+
+PR 4's ``solver_bench`` timed the per-round P3 solve; this module times
+the **whole T-round trajectory** — the ``lax.scan`` path versus the
+fused Pallas kernel (``repro.kernels.ocean_traj``) that keeps the queue
+carry VMEM-resident.  Three kinds of cells:
+
+* single-cell ``simulate`` rounds/sec across K in {10, 20, 50, 100} at
+  T = 200, plus a T = 1000 horizon sweep at K in {10, 20} (the full
+  cross product would spend minutes re-measuring the same per-round
+  cost; the two slices cover both axes),
+* a 24-cell batched grid (2 scenarios x 12 seeds, T = 200, K = 10)
+  through ``GridEngine`` — the configuration the acceptance claim gates
+  on: the engine's nested vmaps batch the fused kernel into one
+  multi-cell launch,
+* bit-identity of the fused trajectory against the scan path on the
+  bench draws (same solver, so the comparison isolates the trajectory
+  backend).
+
+The headline claim compares the recommended fast configuration
+(``traj="fused"`` with ``newton``-seeded rounds) against the default
+scan path (``bisect``), mirroring how the backends are actually
+deployed; the scan+newton row is emitted alongside so the share of the
+win owed to the solver vs the fused trajectory stays visible.  All
+numbers are CPU interpret-mode — see the README "Performance" section.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Timer, claim, emit, paper_scenario
+from repro.core import OceanConfig, PolicyParams, RadioParams
+from repro.core.ocean import simulate
+from repro.core.patterns import eta_schedule
+from repro.sim import GridEngine
+
+BENCH = "traj_bench"
+# (traj, solver) combos timed per cell; scan+bisect is the deployed
+# default, scan+newton isolates the solver's share of the win.
+COMBOS = (("scan", "bisect"), ("scan", "newton"), ("fused", "newton"))
+KS = (10, 20, 50, 100)
+T_BASE = 200
+T_LONG = 1000
+KS_LONG = (10, 20)
+# bisect re-measures 42x42 bisections per round: keep its lattice small.
+BISECT_MAX_K = 50
+
+GRID_T, GRID_K = 200, 10
+GRID_SEEDS = tuple(range(12))
+CLAIM_SPEEDUP = 2.0
+
+
+def _steady(fn, *args, budget_s: float = 0.5):
+    """Steady-state seconds per call (compile excluded, >= 1 rep).
+
+    Blocks on every rep: whole-trajectory calls run for seconds, and the
+    async-dispatch timing loop solver_bench uses for its ms-scale cells
+    would enqueue hundreds of them before noticing the budget elapsed.
+    """
+    with Timer() as t_compile:
+        out = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    reps = 0
+    while True:
+        out = jax.block_until_ready(fn(*args))
+        reps += 1
+        if time.perf_counter() - t0 >= budget_s:
+            break
+    return (time.perf_counter() - t0) / reps, t_compile.elapsed, out
+
+
+def _single_cell(k: int, t: int, traj: str, solver: str):
+    cfg = OceanConfig(
+        num_clients=k,
+        num_rounds=t,
+        radio=RadioParams(b_min=0.005),  # feasible up to K=200 clients
+        solver=solver,
+        traj=traj,
+    )
+    h2 = jax.random.exponential(jax.random.PRNGKey(k), (t, k)) * 2.5e-4
+    eta = eta_schedule("uniform", t)
+    fn = jax.jit(lambda h: simulate(cfg, h, eta, 1e-5)[1])
+    steady, t_compile, decs = _steady(fn, h2)
+    return steady, t_compile, decs
+
+
+def run() -> bool:
+    ok = True
+
+    # -- single-cell lattice -------------------------------------------------
+    cells = [(k, T_BASE) for k in KS] + [(k, T_LONG) for k in KS_LONG]
+    identical_everywhere = True
+    for k, t in cells:
+        decs_by = {}
+        for traj, solver in COMBOS:
+            if solver == "bisect" and k > BISECT_MAX_K:
+                continue
+            steady, t_compile, decs = _single_cell(k, t, traj, solver)
+            decs_by[(traj, solver)] = decs
+            tag = f"{traj}_{solver}_K{k}_T{t}"
+            emit(BENCH, f"{tag}_rounds_per_s", t / steady)
+            emit(BENCH, f"{tag}_steady_ms", steady * 1e3)
+            emit(BENCH, f"{tag}_compile_s", t_compile)
+        # trajectory backends isolated: same solver => bitwise-equal traces
+        same = all(
+            np.array_equal(
+                np.asarray(getattr(decs_by[("scan", "newton")], f)),
+                np.asarray(getattr(decs_by[("fused", "newton")], f)),
+            )
+            for f in ("a", "b", "e", "num_selected")
+        )
+        identical_everywhere &= same
+        emit(BENCH, f"fused_bitwise_equals_scan_K{k}_T{t}", same)
+    # every lattice cell gates the run: a chunking bug that only shows at
+    # large K or long T must fail the benchmark, not just flip a CSV row
+    ok &= claim(
+        BENCH,
+        "fused trajectory bit-identical to scan on every lattice cell",
+        identical_everywhere,
+    )
+
+    # -- 24-cell batched grid (the acceptance-claim configuration) ----------
+    scenarios = [
+        paper_scenario("stationary", T_=GRID_T, K_=GRID_K),
+        paper_scenario("scenario1", T_=GRID_T, K_=GRID_K, pathloss=(32.0, 45.0)),
+    ]
+    policies = [("ocean-u", PolicyParams(v=1e-5))]
+    n_cells = len(scenarios) * len(GRID_SEEDS)
+    emit(BENCH, "grid_cells", n_cells, "2 scenarios x 12 seeds, T=200 K=10")
+
+    grid_steady = {}
+    for label, kwargs in (
+        ("scan_bisect", dict()),                                  # the default
+        ("scan_newton", dict(solver="newton")),
+        ("fused_newton", dict(traj="fused", solver="newton")),
+    ):
+        engine = GridEngine(scenarios, policies, **kwargs)
+        steady, t_compile, _ = _steady(
+            lambda e=engine: jax.block_until_ready(e.run(GRID_SEEDS).a)
+        )
+        grid_steady[label] = steady
+        emit(BENCH, f"grid24_{label}_steady_s", steady)
+        emit(BENCH, f"grid24_{label}_compile_s", t_compile)
+        emit(
+            BENCH,
+            f"grid24_{label}_rounds_per_s",
+            n_cells * GRID_T / steady,
+            "cells x T / steady",
+        )
+
+    speedup = grid_steady["scan_bisect"] / max(grid_steady["fused_newton"], 1e-12)
+    emit(BENCH, "grid24_fused_newton_speedup_vs_scan", speedup)
+    emit(
+        BENCH,
+        "grid24_scan_newton_speedup_vs_scan",
+        grid_steady["scan_bisect"] / max(grid_steady["scan_newton"], 1e-12),
+        "solver share of the win",
+    )
+    ok &= claim(
+        BENCH,
+        f"fused(newton) >= {CLAIM_SPEEDUP}x scan-path rounds/sec on the "
+        f"24-cell batched grid",
+        speedup >= CLAIM_SPEEDUP,
+    )
+    return ok

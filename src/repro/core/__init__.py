@@ -10,12 +10,15 @@ from repro.core.solvers import (
     register_solver,
 )
 from repro.core.ocean import (
+    TRAJ_BACKENDS,
     OceanConfig,
     OceanState,
     RoundDecision,
+    check_traj_backend,
     init_state,
     ocean_round,
     simulate,
+    v_schedule,
 )
 from repro.core.channel import (
     ChannelModel,
@@ -68,9 +71,12 @@ __all__ = [
     "OceanConfig",
     "OceanState",
     "RoundDecision",
+    "TRAJ_BACKENDS",
+    "check_traj_backend",
     "init_state",
     "ocean_round",
     "simulate",
+    "v_schedule",
     "ChannelModel",
     "scenario1_channel",
     "scenario2_channel",

@@ -25,6 +25,20 @@ from repro.core.solvers import get_solver
 
 Array = jax.Array
 
+TRAJ_BACKENDS = ("scan", "fused")
+
+
+def check_traj_backend(name: str) -> str:
+    """Fail fast on unknown trajectory-backend names."""
+    if name not in TRAJ_BACKENDS:
+        raise ValueError(
+            f"unknown trajectory backend {name!r}; available: "
+            f"{', '.join(TRAJ_BACKENDS)} (``scan`` is the bit-stable "
+            f"lax.scan default, ``fused`` the whole-trajectory Pallas "
+            f"kernel — see repro.kernels.ocean_traj)"
+        )
+    return name
+
 
 @dataclasses.dataclass(frozen=True)
 class OceanConfig:
@@ -40,6 +54,12 @@ class OceanConfig:
       solver:      P4/OCEAN-P backend name (``repro.core.solvers``):
                    ``bisect`` (default, bit-stable reference), ``newton``
                    (fast safeguarded Newton), or ``pallas`` (fused kernel).
+      traj:        trajectory execution backend for ``simulate``:
+                   ``scan`` (default — the ``lax.scan`` over rounds,
+                   bit-stable) or ``fused`` (``repro.kernels.ocean_traj``:
+                   the whole T-round trajectory in one Pallas kernel with
+                   VMEM-resident queues; bit-identical to ``scan`` under
+                   interpret mode).
     """
 
     num_clients: int
@@ -48,9 +68,11 @@ class OceanConfig:
     energy_budget_j: float = 0.15
     frame_len: Optional[int] = None  # default: R = T
     solver: str = "bisect"
+    traj: str = "scan"
 
     def __post_init__(self):
         get_solver(self.solver)  # fail fast on unknown backend names
+        check_traj_backend(self.traj)
         self.radio.validate(self.num_clients)
         if self.frame_len is not None and self.frame_len <= 0:
             raise ValueError(
@@ -151,12 +173,24 @@ def ocean_round(
 
 
 def v_schedule(cfg: OceanConfig, v: float | Array) -> Array:
-    """Broadcast a scalar V (or per-frame (M,) sequence) to per-round (T,)."""
+    """Broadcast a scalar V (or per-frame (M,) sequence) to per-round (T,).
+
+    A 1-D ``v`` must have exactly one entry per frame: silently clipping
+    a wrong-length sequence (the old behavior) truncated or repeated
+    control parameters without complaint.
+    """
     v = jnp.asarray(v, jnp.float32)
     if v.ndim == 0:
         return jnp.full((cfg.num_rounds,), v)
+    if v.ndim != 1 or v.shape[0] != cfg.num_frames:
+        raise ValueError(
+            f"per-frame V sequence has shape {v.shape}, but this config has "
+            f"{cfg.num_frames} frames (T={cfg.num_rounds} rounds / "
+            f"R={cfg.R} per frame => M=ceil(T/R)={cfg.num_frames}); pass a "
+            f"scalar V or one entry per frame"
+        )
     frame_idx = jnp.arange(cfg.num_rounds) // cfg.R
-    return v[jnp.clip(frame_idx, 0, v.shape[0] - 1)]
+    return v[frame_idx]
 
 
 def simulate(
@@ -167,8 +201,9 @@ def simulate(
     budgets: Optional[Array] = None,     # (K,) override of cfg.budgets()
     budget_seq: Optional[Array] = None,  # (T, K) per-round budget increments
     radio_seq=None,                      # (T,)-leaf radio pytree (TracedRadio)
+    traj: Optional[str] = None,          # trajectory backend; None => cfg.traj
 ) -> Tuple[OceanState, RoundDecision]:
-    """Run T rounds as one lax.scan; returns final state + stacked decisions.
+    """Run T rounds as one program; returns final state + stacked decisions.
 
     ``budget_seq`` feeds a time-varying per-round allowance into the
     queue update (``repro.env`` budget processes); when omitted, the
@@ -177,7 +212,15 @@ def simulate(
     sharing, deadline jitter) — a pytree whose leaves carry a leading
     ``(T,)`` axis the scan slices; when omitted the static ``cfg.radio``
     is baked in, the paper's (and the legacy) program.
+
+    ``traj`` picks the trajectory backend (a compiled-program static):
+    ``scan`` runs the rounds as one ``lax.scan`` (the default, bit-stable
+    path); ``fused`` hands the entire trajectory to the
+    ``repro.kernels.ocean_traj`` Pallas kernel, which keeps the queue /
+    energy carry resident in VMEM and is bit-identical to ``scan`` under
+    interpret mode.  ``None`` resolves to ``cfg.traj``.
     """
+    traj = check_traj_backend(cfg.traj if traj is None else traj)
     v_seq = v_schedule(cfg, v)
     eta_seq = jnp.asarray(eta_seq, jnp.float32)
     if budget_seq is None:
@@ -186,6 +229,13 @@ def simulate(
             per_round, (cfg.num_rounds, cfg.num_clients)
         )
     budget_seq = jnp.asarray(budget_seq, jnp.float32)
+
+    if traj == "fused":
+        from repro.kernels.ocean_traj import ocean_trajectory_fused
+
+        return ocean_trajectory_fused(
+            cfg, h2_seq, v_seq, eta_seq, budget_seq, radio_seq
+        )
 
     if radio_seq is None:
         def step(state, inputs):

@@ -33,7 +33,7 @@ from repro.core.channel import (
     pathloss_to_gain,
 )
 from repro.core.energy import RadioParams
-from repro.core.ocean import OceanConfig
+from repro.core.ocean import OceanConfig, check_traj_backend
 from repro.core.patterns import eta_schedule
 from repro.core.solvers import get_solver
 from repro.env.channel import LowerCtx, get_channel_process, sample_channel_process
@@ -77,6 +77,11 @@ class Scenario:
                        ``bisect`` (default, bit-stable), ``newton``, or
                        ``pallas``.  A compiled-program static: all
                        scenarios of one grid must agree.
+      traj:            trajectory backend for OCEAN policies:
+                       ``scan`` (default, the bit-stable ``lax.scan``) or
+                       ``fused`` (whole-trajectory Pallas kernel,
+                       ``repro.kernels.ocean_traj``).  Also a
+                       compiled-program static.
     """
 
     name: str = "stationary"
@@ -90,9 +95,11 @@ class Scenario:
     frame_len: Optional[int] = None
     env: Optional[EnvSpec] = None
     solver: str = "bisect"
+    traj: str = "scan"
 
     def __post_init__(self):
         get_solver(self.solver)  # fail fast on unknown backend names
+        check_traj_backend(self.traj)
         if len(self.pathloss_db) != 2:
             raise ValueError(
                 f"pathloss_db must be a (start_db, end_db) pair, got "
@@ -117,6 +124,7 @@ class Scenario:
             energy_budget_j=self.energy_budget_j,  # type: ignore[arg-type]
             frame_len=self.frame_len,
             solver=self.solver,
+            traj=self.traj,
         )
 
     def channel_model(self) -> ChannelModel:
@@ -233,6 +241,8 @@ class Scenario:
             d["env"] = self.env.to_dict()
         if self.solver == "bisect":
             d.pop("solver")  # keep pre-solver payloads byte-stable
+        if self.traj == "scan":
+            d.pop("traj")  # keep pre-traj payloads byte-stable
         return d
 
     @classmethod

@@ -14,6 +14,12 @@ always selected and pinned at b_min; the remaining budget
 delta = 1 - |S0| * b_min is waterfilled over the positive-rho prefix by P4.
 Leftover bandwidth when *only* S0 is selected is spread evenly over S0
 (costless — their weighted energy is zero).
+
+``ocean_p`` is pure jnp end to end (argsort + the registry backend), so
+it traces equally well inside a ``lax.scan`` step and inside the fused
+whole-trajectory Pallas kernel (``repro.kernels.ocean_traj``), which
+re-runs this exact function per resident round — that sharing is what
+makes the ``fused`` trajectory backend bit-identical to ``scan``.
 """
 from __future__ import annotations
 

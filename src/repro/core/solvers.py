@@ -85,9 +85,34 @@ Array = jax.Array
 DEFAULT_SOLVER = "bisect"
 
 # Newton iteration budgets (cut from the 42 x 42 fixed bisection steps).
+# Quadratic convergence roughly doubles correct bits per step, so float64
+# (53-bit mantissa vs float32's 24) needs a handful of extra polish steps
+# and a denser seeding grid to hit machine precision — budgets are
+# resolved per dtype via ``newton_iteration_budgets``.  The float32
+# values are unchanged from PR 4, keeping that hot path bit-stable.
 NEWTON_OUTER_ITERS = 7
 NEWTON_INNER_ITERS = 9
 NEWTON_GRID_LEVELS = 9
+NEWTON_OUTER_ITERS_X64 = 12
+NEWTON_INNER_ITERS_X64 = 14
+NEWTON_GRID_LEVELS_X64 = 13
+
+
+def newton_iteration_budgets(dtype) -> Tuple[int, int, int]:
+    """(outer, inner, grid) Newton budgets for the given float dtype.
+
+    Wider floats need more safeguarded-Newton steps: each rejected step
+    degrades to (log-space) bisection, and the x64 tie-boundary studies
+    (argmax selections near W*(S_m) == W*(S_{m+1})) only match ``bisect``
+    when the waterfilling level is converged to the carry dtype's eps.
+    """
+    if jnp.dtype(dtype).itemsize >= 8:
+        return (
+            NEWTON_OUTER_ITERS_X64,
+            NEWTON_INNER_ITERS_X64,
+            NEWTON_GRID_LEVELS_X64,
+        )
+    return (NEWTON_OUTER_ITERS, NEWTON_INNER_ITERS, NEWTON_GRID_LEVELS)
 
 
 class PrefixSolution(NamedTuple):
@@ -192,15 +217,18 @@ def _prefix_bisect(
 # newton — safeguarded Newton waterfilling (see module docstring)
 # --------------------------------------------------------------------------
 def b_of_lam_newton(
-    lam: Array, rho: Array, beta, b_min, b_max, iters: int = NEWTON_INNER_ITERS
+    lam: Array, rho: Array, beta, b_min, b_max, iters: Optional[int] = None
 ) -> Array:
     """Solve ``rho * f'(b) = -lam`` elementwise, clamped to [b_min, b_max].
 
     Broadcasting: any (lam, rho) shapes that broadcast together work —
     the prefix solver calls this on a (levels, 1) x (1, K) lattice.
     Safeguarded Newton: bracketed, closed-form-seeded, boundary roots
-    detected analytically (never iterated toward).
+    detected analytically (never iterated toward).  ``iters=None``
+    resolves the dtype-aware inner budget (``newton_iteration_budgets``).
     """
+    if iters is None:
+        iters = newton_iteration_budgets(jnp.result_type(lam, rho))[1]
     rho_safe = jnp.maximum(rho, 1e-30)
     t = -lam / rho_safe            # want f'(b) = t  (t <= 0)
     u = lam / rho_safe             # = -t >= 0
@@ -316,16 +344,20 @@ def waterfill_newton(
     mask: Array,
     delta: Array,
     radio,
-    outer_iters: int = NEWTON_OUTER_ITERS,
-    inner_iters: int = NEWTON_INNER_ITERS,
+    outer_iters: Optional[int] = None,
+    inner_iters: Optional[int] = None,
 ) -> Tuple[Array, Array]:
     """Newton drop-in for ``solve_p4`` on one arbitrary selection mask.
 
     Same contract as ``repro.core.bandwidth.solve_p4``: returns
     ``(b, cost)`` with ``b == 0`` outside the mask and
-    ``sum(b[mask]) == delta``.
+    ``sum(b[mask]) == delta``.  ``None`` iteration budgets resolve
+    per dtype (wider under ``jax.enable_x64``).
     """
     rho = jnp.asarray(rho)
+    d_outer, d_inner, d_grid = newton_iteration_budgets(rho.dtype)
+    outer_iters = d_outer if outer_iters is None else outer_iters
+    inner_iters = d_inner if inner_iters is None else inner_iters
     mask = jnp.asarray(mask, bool)
     delta = jnp.asarray(delta, rho.dtype)
     beta = radio.beta
@@ -342,7 +374,7 @@ def waterfill_newton(
     # Log-grid seeding: exact residuals at G shared levels give a valid
     # bracket and a geometric-mean seed (same scheme as the prefix solver,
     # but with this mask's exact b_max, so both bracket ends are trusted).
-    G = NEWTON_GRID_LEVELS
+    G = d_grid
     rho_pos = jnp.where(mask & (rho > 0), rho, jnp.inf)
     rho_min = jnp.min(rho_pos)
     lam_lo_g = jnp.where(
@@ -393,6 +425,7 @@ def _prefix_newton(
     """
     del outer_iters, inner_iters
     dtype = rho_sorted.dtype
+    n_outer, n_inner, n_grid = newton_iteration_budgets(dtype)
     K = rho_sorted.shape[0]
     beta = radio.beta
     b_min = radio.b_min
@@ -413,7 +446,7 @@ def _prefix_newton(
 
     # ---- shared-grid seeding: b(lam) once per level for all K clients,
     # every prefix's residual via one masked cumulative sum  (O(G K)).
-    G = NEWTON_GRID_LEVELS
+    G = n_grid
     lam_hi_glob = jnp.max(lam_hi)
     rho_pos = jnp.where(pos & (rho_sorted > 0), rho_sorted, jnp.inf)
     rho_min_pos = jnp.min(rho_pos)
@@ -454,7 +487,7 @@ def _prefix_newton(
     rho_b = rho_sorted[None, :]
     b = _outer_newton_polish(
         lam0, jnp.zeros_like(lam0), hi0, rho_b, mask, delta, beta, b_min,
-        b_max, NEWTON_OUTER_ITERS, NEWTON_INNER_ITERS,
+        b_max, n_outer, n_inner,
     )
     b = jnp.where(mask, b, 0.0)
     b = _budget_repair(b, mask, delta, b_min, b_max[:, None])

@@ -1,0 +1,291 @@
+"""Fused whole-trajectory OCEAN kernel (Pallas) — Alg. 1 end to end on-chip.
+
+PR 4 made the per-round P3/P4 solve pluggable and fast, which moved the
+bottleneck of ``repro.core.ocean.simulate`` to the ``lax.scan`` itself:
+every round the (K,) queue / cumulative-energy carry takes an HBM round
+trip and the scan step re-dispatches the solver.  The paper's queue
+recursion
+
+    q_{k,t+1} = [ E(a_k^t, b_k^t | h_k^t) + q_{k,t} - H_k / T ]^+
+    (reset to 0 at every frame boundary t = m * R)
+
+is an inherently sequential first-order scan — the same shape as the
+selective-state-space recurrences ``kernels/mamba_scan.py`` already
+fuses.  This kernel applies the identical treatment to OCEAN:
+
+  * ``q`` and ``energy_spent`` stay **resident in VMEM scratch** for the
+    whole T-round trajectory — the carry never leaves the chip,
+  * the per-round inputs ``(h2, V, eta, budget_inc, radio)`` stream from
+    HBM in chunked tiles (``grid = (T / chunk,)``), which the Pallas
+    pipeline double-buffers against compute,
+  * every round runs the **full** Alg. 1 step *inside* the kernel:
+    frame-boundary reset, rho ranking, the K+1-prefix P4 solve, the
+    energy model, and the queue update.  The round math is literally
+    ``repro.core.ocean.ocean_round`` traced into the kernel body —
+    including the configured solver backend (``bisect`` / ``newton`` /
+    ``pallas``, see ``repro.core.solvers``) — so the fused trajectory is
+    **bit-identical** to the ``lax.scan`` path under interpret mode by
+    construction: same ops on the same shapes in the same order,
+  * batched-cell execution comes from ``jax.vmap``: the grid engine's
+    nested (scenario, seed) vmaps batch the ``pallas_call`` by
+    prepending cell grid dimensions, so many small-K cells share one
+    kernel launch and saturate the chip (see ``benchmarks/traj_bench.py``).
+
+Exposed as the ``fused`` trajectory backend of
+``repro.core.ocean.simulate(..., traj=)`` / ``OceanConfig.traj`` /
+``Scenario.traj`` / ``GridEngine(traj=)``; ``scan`` remains the
+bit-stable default.  The pure-jnp parity oracle is
+``repro.kernels.ref.ocean_traj_ref``.
+
+CAVEAT: tests and CI are CPU-only, so only the interpret path is
+continuously validated (the ``ocean_p`` kernel's caveat applies even
+more strongly here: the round body traces ``argsort`` and a vmapped
+candidate lattice, which the Mosaic TPU lowering has never compiled on
+real hardware).  Pass ``interpret=True`` to force the validated path;
+see the ROADMAP PR-5 follow-ups before relying on ``traj="fused"`` in a
+TPU production job.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ocean import (
+    OceanConfig,
+    OceanState,
+    RoundDecision,
+    ocean_round,
+)
+from repro.env.radio import TracedRadio
+
+Array = jax.Array
+
+# Rounds per grid step: one HBM tile of (chunk, K) inputs per step, small
+# enough that the double-buffered pipeline overlaps the next tile's loads
+# with the current tile's K+1-prefix solves.
+DEFAULT_CHUNK = 32
+
+_N_RADIO_LEAVES = len(TracedRadio._fields)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _traj_kernel(
+    *refs,
+    cfg: OceanConfig,
+    chunk: int,
+    num_rounds: int,
+    has_radio: bool,
+):
+    """One grid step = ``chunk`` sequential OCEAN rounds on the resident state.
+
+    Ref layout (after the closure statics):
+      inputs:  h2 (chunk, K), v (chunk,), eta (chunk,), inc (chunk, K)
+               [+ the 7 TracedRadio leaves, (chunk,) each, iff has_radio]
+      outputs: a, b, e, q_pre, rho (chunk, K); obj, nsel (chunk,);
+               q_final, es_final (1, K) — rewritten every step, so after
+               the last step they hold the end-of-trajectory state
+      scratch: q (1, K), es (1, K) — the VMEM-resident carry
+    """
+    n_in = 4 + (_N_RADIO_LEAVES if has_radio else 0)
+    h2_ref, v_ref, eta_ref, inc_ref = refs[:4]
+    radio_refs = refs[4:n_in]
+    (
+        a_ref, b_ref, e_ref, qp_ref, rho_ref, obj_ref, ns_ref,
+        qf_ref, esf_ref,
+    ) = refs[n_in : n_in + 9]
+    q_scr, es_scr = refs[n_in + 9 :]
+
+    K = cfg.num_clients
+    ic = pl.program_id(0)
+
+    @pl.when(ic == 0)
+    def _init():
+        q_scr[...] = jnp.zeros_like(q_scr)
+        es_scr[...] = jnp.zeros_like(es_scr)
+
+    fdtype = q_scr.dtype
+
+    def step(i, carry):
+        q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c = carry
+        t = ic * chunk + i
+        radio_t = (
+            TracedRadio(*(r[i] for r in radio_refs)) if has_radio else None
+        )
+        state = OceanState(q=q, t=t, energy_spent=es)
+        new_state, dec = ocean_round(
+            state,
+            h2_ref[i],
+            v_ref[i],
+            eta_ref[i],
+            cfg,
+            budget_inc=inc_ref[i],
+            radio=radio_t,
+        )
+        # Chunk-padded tail rounds (t >= T) stream edge-replicated inputs:
+        # their math runs but must not advance the resident carry.
+        valid = t < num_rounds
+        q = jnp.where(valid, new_state.q, q)
+        es = jnp.where(valid, new_state.energy_spent, es)
+        return (
+            q,
+            es,
+            a_c.at[i].set(dec.a),
+            b_c.at[i].set(dec.b),
+            e_c.at[i].set(dec.e),
+            qp_c.at[i].set(dec.q),
+            rho_c.at[i].set(dec.rho),
+            obj_c.at[i].set(dec.objective),
+            ns_c.at[i].set(dec.num_selected),
+        )
+
+    zf = jnp.zeros((chunk, K), fdtype)
+    carry0 = (
+        q_scr[0],
+        es_scr[0],
+        jnp.zeros((chunk, K), jnp.bool_),
+        zf, zf, zf, zf,
+        jnp.zeros((chunk,), fdtype),
+        jnp.zeros((chunk,), jnp.int32),
+    )
+    q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c = jax.lax.fori_loop(
+        0, chunk, step, carry0
+    )
+    q_scr[0] = q
+    es_scr[0] = es
+    a_ref[...] = a_c
+    b_ref[...] = b_c
+    e_ref[...] = e_c
+    qp_ref[...] = qp_c
+    rho_ref[...] = rho_c
+    obj_ref[...] = obj_c
+    ns_ref[...] = ns_c
+    qf_ref[0] = q
+    esf_ref[0] = es
+
+
+def _pad_rounds(x: Array, pad: int) -> Array:
+    """Edge-replicate the trailing rounds so padded tiles stay physical
+    (no NaN traps in the solver); their results are masked/sliced away."""
+    if pad == 0:
+        return x
+    widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+    return jnp.pad(x, widths, mode="edge")
+
+
+def ocean_trajectory_fused(
+    cfg: OceanConfig,
+    h2_seq: Array,        # (T, K) channel power gains
+    v_seq: Array,         # (T,)   per-round control parameter V
+    eta_seq: Array,       # (T,)   temporal weights
+    budget_seq: Array,    # (T, K) per-round budget increments
+    radio_seq: Optional[TracedRadio] = None,  # (T,)-leaf radio pytree
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: Optional[bool] = None,
+) -> Tuple[OceanState, RoundDecision]:
+    """Run the whole OCEAN trajectory as one fused kernel.
+
+    Same contract as the ``lax.scan`` body of ``repro.core.ocean.simulate``
+    (which normalizes ``v``/``budgets`` before dispatching here): returns
+    the final :class:`OceanState` and the stacked per-round
+    :class:`RoundDecision`.  ``interpret=None`` auto-selects interpret
+    mode off-TPU (the validated CPU fallback).  Batching: ``jax.vmap``
+    over this function prepends cell grid dimensions to the kernel — the
+    grid engine's (scenario, seed) axes become batched cells of one
+    launch.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    T, K = h2_seq.shape
+    if T != cfg.num_rounds:
+        raise ValueError(
+            f"h2_seq has {T} rounds but cfg.num_rounds={cfg.num_rounds}"
+        )
+    fdtype = jnp.result_type(h2_seq.dtype, jnp.float32)
+    chunk = max(1, min(chunk, T))
+    pad = (-T) % chunk
+    n_chunks = (T + pad) // chunk
+
+    has_radio = radio_seq is not None
+    inputs = [
+        _pad_rounds(jnp.asarray(h2_seq, fdtype), pad),
+        _pad_rounds(jnp.asarray(v_seq, jnp.float32), pad),
+        _pad_rounds(jnp.asarray(eta_seq, jnp.float32), pad),
+        _pad_rounds(jnp.asarray(budget_seq, jnp.float32), pad),
+    ]
+    if has_radio:
+        inputs.extend(
+            _pad_rounds(jnp.asarray(leaf, jnp.float32), pad)
+            for leaf in radio_seq
+        )
+
+    def row_spec(x):
+        if x.ndim == 2:
+            return pl.BlockSpec((chunk, K), lambda ic: (ic, 0))
+        return pl.BlockSpec((chunk,), lambda ic: (ic,))
+
+    Tp = n_chunks * chunk
+    kernel = functools.partial(
+        _traj_kernel,
+        cfg=cfg,
+        chunk=chunk,
+        num_rounds=T,
+        has_radio=has_radio,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[row_spec(x) for x in inputs],
+        out_specs=[
+            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # a
+            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # b
+            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # e
+            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # q_pre
+            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # rho
+            pl.BlockSpec((chunk,), lambda ic: (ic,)),       # objective
+            pl.BlockSpec((chunk,), lambda ic: (ic,)),       # num_selected
+            pl.BlockSpec((1, K), lambda ic: (0, 0)),        # q_final
+            pl.BlockSpec((1, K), lambda ic: (0, 0)),        # es_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp, K), jnp.bool_),
+            jax.ShapeDtypeStruct((Tp, K), fdtype),
+            jax.ShapeDtypeStruct((Tp, K), fdtype),
+            jax.ShapeDtypeStruct((Tp, K), fdtype),
+            jax.ShapeDtypeStruct((Tp, K), fdtype),
+            jax.ShapeDtypeStruct((Tp,), fdtype),
+            jax.ShapeDtypeStruct((Tp,), jnp.int32),
+            jax.ShapeDtypeStruct((1, K), fdtype),
+            jax.ShapeDtypeStruct((1, K), fdtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, K), fdtype),   # q carry
+            pltpu.VMEM((1, K), fdtype),   # energy_spent carry
+        ],
+        interpret=interpret,
+    )(*inputs)
+    a, b, e, q_pre, rho, obj, nsel, q_final, es_final = out
+
+    state = OceanState(
+        q=q_final[0],
+        t=jnp.asarray(T, jnp.int32),
+        energy_spent=es_final[0],
+    )
+    decs = RoundDecision(
+        a=a[:T],
+        b=b[:T],
+        e=e[:T],
+        q=q_pre[:T],
+        rho=rho[:T],
+        objective=obj[:T],
+        num_selected=nsel[:T],
+    )
+    return state, decs

@@ -63,6 +63,35 @@ def ocean_p_prefixes_ref(rho_sorted, n0, delta, v_eta, radio):
     return _prefix_bisect(rho_sorted, n0, delta, v_eta, radio, 42, 42)
 
 
+def ocean_traj_ref(cfg, h2_seq, v_seq, eta_seq, budget_seq, radio_seq=None):
+    """Oracle for the fused whole-trajectory OCEAN kernel: a deliberately
+    naive Python-level round loop over ``repro.core.ocean.ocean_round``
+    (no ``lax.scan``, no kernel) — the ground truth both trajectory
+    backends are pinned to in tests/test_traj.py."""
+    from repro.core.ocean import init_state, ocean_round
+
+    state = init_state(cfg)
+    decs = []
+    for t in range(cfg.num_rounds):
+        radio_t = (
+            None
+            if radio_seq is None
+            else jax.tree_util.tree_map(lambda x: x[t], radio_seq)
+        )
+        state, dec = ocean_round(
+            state,
+            h2_seq[t],
+            v_seq[t],
+            eta_seq[t],
+            cfg,
+            budget_inc=budget_seq[t],
+            radio=radio_t,
+        )
+        decs.append(dec)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *decs)
+    return state, stacked
+
+
 def mamba_scan_ref(da: jax.Array, dbu: jax.Array, c: jax.Array) -> jax.Array:
     """(B, T, Di, Ds) sequential selective scan; returns f32 (B, T, Di)."""
     b, t, di, ds = da.shape

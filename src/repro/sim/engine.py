@@ -33,10 +33,14 @@ Environment streams are keyed by ``fold_in(PRNGKey(seed), salt)`` where
 grid index — so adding, removing, or reordering scenarios cannot change
 any other cell's draws (see ``repro.env.spec``).
 
-Two execution knobs (see the README "Performance" section):
+Three execution knobs (see the README "Performance" section):
 
 * ``solver=`` picks the P3/P4 backend (``repro.core.solvers``) for the
   whole grid — a compiled-program static, so all scenarios must agree;
+* ``traj=`` picks the trajectory backend for OCEAN policies (``scan``,
+  the bit-stable ``lax.scan``, or ``fused`` — the whole-trajectory
+  Pallas kernel of ``repro.kernels.ocean_traj``; the engine's nested
+  vmaps batch its launch across all (scenario, seed) cells);
 * ``shard=`` distributes the flattened (S*N) cell axis over an
   auto-built mesh of all local devices via ``shard_map`` (padded to the
   mesh size, donated input buffers off-CPU).  Cells are independent, so
@@ -147,7 +151,9 @@ def _check_compatible(scenarios: Sequence[Scenario]) -> Scenario:
     for sc in scenarios[1:]:
         mismatches = [
             f"{field}: {getattr(base, field)!r} != {getattr(sc, field)!r}"
-            for field in ("num_rounds", "num_clients", "frame_len", "solver")
+            for field in (
+                "num_rounds", "num_clients", "frame_len", "solver", "traj",
+            )
             if getattr(base, field) != getattr(sc, field)
         ]
         if mismatches:
@@ -173,6 +179,12 @@ class GridEngine:
       solver:    P4/OCEAN-P backend override (``repro.core.solvers``);
                  None keeps the scenarios' ``solver`` field (default
                  ``bisect``, the bit-stable reference).
+      traj:      trajectory backend override for OCEAN policies
+                 (``scan`` | ``fused``, see ``repro.kernels.ocean_traj``);
+                 None keeps the scenarios' ``traj`` field (default
+                 ``scan``).  Under ``fused`` the engine's nested
+                 (scenario, seed) vmaps batch the trajectory kernel into
+                 one multi-cell launch.  Also a compiled-program static.
       shard:     multi-device execution: the flattened (S*N) cell axis is
                  ``shard_map``-ped over an auto-built mesh of all local
                  devices, with donated input buffers (off-CPU).  None =
@@ -189,6 +201,7 @@ class GridEngine:
         experiment=None,
         solver: Optional[str] = None,
         shard: Optional[bool] = None,
+        traj: Optional[str] = None,
     ):
         if not scenarios or not policies:
             raise ValueError("need at least one scenario and one policy")
@@ -198,6 +211,8 @@ class GridEngine:
         if solver is not None:
             # replace() re-runs __post_init__, failing fast on bad names.
             self.cfg = dataclasses.replace(self.cfg, solver=solver)
+        if traj is not None:
+            self.cfg = dataclasses.replace(self.cfg, traj=traj)
         self._resolved = _resolve_policy_specs(policies)
         self.policies = tuple(pol.name for pol, _ in self._resolved)
         self.experiment = experiment
@@ -509,13 +524,15 @@ def run_grid(
     experiment=None,
     solver: Optional[str] = None,
     shard: Optional[bool] = None,
+    traj: Optional[str] = None,
     base_key: Optional[Array] = None,
     learn_keys: Optional[Array] = None,
     learn_seed: int = 0,
 ) -> GridResult:
     """One-shot convenience wrapper around ``GridEngine``."""
     return GridEngine(
-        scenarios, policies, experiment=experiment, solver=solver, shard=shard
+        scenarios, policies, experiment=experiment, solver=solver, shard=shard,
+        traj=traj,
     ).run(
         seeds, base_key=base_key, learn_keys=learn_keys, learn_seed=learn_seed
     )

@@ -1,0 +1,89 @@
+"""Benchmark baseline regression gate (benchmarks/run.py --check-baseline).
+
+The committed ``benchmarks/baselines/BENCH_*.json`` files turn the CI
+perf trajectory into a gate; these tests pin the comparison semantics:
+>30% rounds/sec drops fail, new/vanished metrics only report, modules
+without a baseline pass.
+"""
+import json
+import os
+
+import pytest
+
+run_mod = pytest.importorskip(
+    "benchmarks.run",
+    reason="benchmarks package needs the repo root on sys.path "
+    "(run via `python -m pytest` from the checkout)",
+)
+
+
+@pytest.fixture
+def baseline_dir(tmp_path):
+    payload = {
+        "benchmark": "mod",
+        "rows": [
+            {"metric": "a_rounds_per_s", "value": "1000", "note": ""},
+            {"metric": "gone_rounds_per_s", "value": "5", "note": ""},
+            {"metric": "CLAIM", "value": "PASS", "note": "ignored"},
+        ],
+    }
+    (tmp_path / "BENCH_mod.json").write_text(json.dumps(payload))
+    return str(tmp_path)
+
+
+def test_within_tolerance_passes(baseline_dir, capsys):
+    rows = [{"metric": "a_rounds_per_s", "value": "800", "note": ""}]
+    assert run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    out = capsys.readouterr().out
+    assert "BASELINE_OK,a_rounds_per_s" in out
+
+
+def test_regression_fails(baseline_dir, capsys):
+    rows = [{"metric": "a_rounds_per_s", "value": "699", "note": ""}]
+    assert not run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    assert "BASELINE_REGRESSION" in capsys.readouterr().out
+
+
+def test_improvement_passes(baseline_dir):
+    rows = [{"metric": "a_rounds_per_s", "value": "5000", "note": ""}]
+    assert run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+
+
+def test_new_and_gone_metrics_report_without_failing(baseline_dir, capsys):
+    rows = [
+        {"metric": "a_rounds_per_s", "value": "1000", "note": ""},
+        {"metric": "new_rounds_per_s", "value": "1", "note": ""},
+    ]
+    assert run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    out = capsys.readouterr().out
+    assert "BASELINE_NEW,new_rounds_per_s" in out
+    assert "BASELINE_GONE,gone_rounds_per_s" in out
+
+
+def test_missing_baseline_file_passes(baseline_dir):
+    rows = [{"metric": "a_rounds_per_s", "value": "1", "note": ""}]
+    assert run_mod.check_baseline("unknown_module", rows, baseline_dir, 0.30)
+
+
+def test_non_throughput_metrics_ignored(baseline_dir):
+    # steady_ms / CLAIM rows never participate in the gate
+    rows = [
+        {"metric": "a_rounds_per_s", "value": "1000", "note": ""},
+        {"metric": "a_steady_ms", "value": "999999", "note": ""},
+    ]
+    assert run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+
+
+def test_committed_solver_bench_baseline_is_valid():
+    """The baseline the CI gate runs against must exist and carry
+    throughput metrics for every backend."""
+    path = os.path.join(
+        os.path.dirname(run_mod.__file__), "baselines", "BENCH_solver_bench.json"
+    )
+    assert os.path.exists(path), "commit benchmarks/baselines/BENCH_solver_bench.json"
+    rows = json.load(open(path))["rows"]
+    metrics = {r["metric"] for r in rows}
+    for backend in ("bisect", "newton", "pallas"):
+        assert any(
+            m.startswith(backend) and m.endswith("_rounds_per_s") for m in metrics
+        ), backend

@@ -206,3 +206,60 @@ def test_scenario_solver_serialization_roundtrip():
     # default backend omitted => pre-solver payloads stay byte-stable
     assert "solver" not in Scenario(num_clients=4, num_rounds=10).to_dict()
     assert sc.ocean_config().solver == "newton"
+
+
+# -- dtype-aware Newton budgets + float64 (PR-5 satellite) ------------------
+def test_newton_iteration_budgets_dtype_aware():
+    from repro.core import solvers
+
+    f32 = solvers.newton_iteration_budgets(np.float32)
+    f64 = solvers.newton_iteration_budgets(np.float64)
+    # float32 budgets unchanged from PR 4 => the hot path stays bit-stable
+    assert f32 == (
+        solvers.NEWTON_OUTER_ITERS,
+        solvers.NEWTON_INNER_ITERS,
+        solvers.NEWTON_GRID_LEVELS,
+    )
+    # float64 needs strictly wider budgets on every axis
+    assert all(w > n for w, n in zip(f64, f32))
+
+
+def test_x64_newton_matches_bisect_near_tie_boundaries():
+    """Under jax.enable_x64 the newton backend must reproduce bisect's
+    argmax selection set even on draws engineered to sit near W*(S_m) ==
+    W*(S_{m+1}) tie boundaries (clustered priorities that differ at the
+    ~1e-9 relative level, invisible in float32)."""
+    from jax.experimental import enable_x64
+
+    rng = np.random.default_rng(42)
+    with enable_x64():
+        for trial in range(10):
+            k = int(rng.integers(4, 12))
+            # clustered rho: pairs of nearly identical priorities
+            base = rng.uniform(0.01, 0.2, size=(k + 1) // 2)
+            q = np.repeat(base, 2)[:k] * (
+                1.0 + rng.uniform(-1e-9, 1e-9, size=k)
+            )
+            q[rng.random(k) < 0.2] = 0.0
+            h2 = np.repeat(
+                2.5e-4 * rng.exponential(size=(k + 1) // 2), 2
+            )[:k] * (1.0 + rng.uniform(-1e-9, 1e-9, size=k))
+            q64 = jnp.asarray(q, jnp.float64)
+            h64 = jnp.asarray(h2, jnp.float64)
+            assert q64.dtype == jnp.float64  # x64 actually on
+            v = jnp.asarray(10.0 ** rng.uniform(-6.0, -4.0), jnp.float64)
+            eta = jnp.asarray(rng.uniform(0.5, 1.5), jnp.float64)
+            ref = ocean_p(q64, h64, v, eta, RADIO, solver="bisect")
+            sol = ocean_p(q64, h64, v, eta, RADIO, solver="newton")
+            assert sol.b.dtype == jnp.float64
+            np.testing.assert_array_equal(
+                np.asarray(sol.a),
+                np.asarray(ref.a),
+                err_msg=f"trial={trial} k={k}",
+            )
+            assert float(jnp.sum(sol.b)) == pytest.approx(
+                float(jnp.sum(ref.b)), abs=1e-9
+            )
+            assert float(sol.objective) == pytest.approx(
+                float(ref.objective), rel=1e-6, abs=1e-12
+            )

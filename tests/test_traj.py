@@ -1,0 +1,253 @@
+"""Trajectory backends: fused whole-trajectory kernel vs the scan path.
+
+Acceptance criterion of the fused backend (``repro.kernels.ocean_traj``):
+bit-identity with the ``lax.scan`` path under interpret mode for every
+policy / radio-process / solver combination, plus registry/config
+plumbing and the ``v_schedule`` length validation.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EnvSpec,
+    OceanConfig,
+    PolicyParams,
+    RadioParams,
+    Scenario,
+)
+from repro.core.ocean import TRAJ_BACKENDS, check_traj_backend, simulate, v_schedule
+from repro.core.patterns import eta_schedule
+from repro.kernels.ocean_traj import ocean_trajectory_fused
+from repro.kernels.ref import ocean_traj_ref
+from repro.sim import GridEngine, run_grid
+
+T, K = 40, 6
+RADIO = RadioParams()
+
+ALL_POLICIES = ("ocean-a", "ocean-d", "ocean-u", "smo", "amo", "select_all")
+
+TRACE_FIELDS = ("a", "b", "e", "num_selected")
+
+
+def mixed_radio_scenarios(**overrides):
+    """Static + every registered radio process + a mixed-channel cell
+    (the test_radio.py acceptance grid), with a multi-frame horizon so
+    the fused path also exercises frame-boundary resets."""
+    base = dict(num_clients=K, num_rounds=T, frame_len=16, **overrides)
+    return [
+        Scenario(name="static", **base),
+        Scenario(name="spectrum", env=EnvSpec(radio="spectrum_sharing"), **base),
+        Scenario(
+            name="jitter",
+            env=EnvSpec(radio="deadline_jitter", radio_params={"amp": 0.4, "rho": 0.7}),
+            **base,
+        ),
+        Scenario(
+            name="gm_spectrum",
+            env=EnvSpec(
+                channel="gauss_markov",
+                channel_params={"rho": 0.8},
+                radio="spectrum_sharing",
+                radio_params={"share_min": 0.3, "share_max": 0.9},
+            ),
+            **base,
+        ),
+    ]
+
+
+def _assert_grids_equal(ref, got):
+    for f in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)), err_msg=f
+        )
+
+
+# --------------------------------------------------------------------------
+# bit-identity (the acceptance criterion)
+# --------------------------------------------------------------------------
+def test_fused_grid_bit_identical_every_policy_and_radio_process():
+    """One grid over every policy x every radio process: the fused
+    trajectory must reproduce the scan path bit for bit."""
+    scenarios = mixed_radio_scenarios()
+    policies = [(p, PolicyParams(v=1e-5)) for p in ALL_POLICIES]
+    seeds = (0, 7)
+    ref = run_grid(scenarios, policies, seeds=seeds)
+    got = run_grid(scenarios, policies, seeds=seeds, traj="fused")
+    _assert_grids_equal(ref, got)
+
+
+@pytest.mark.parametrize("solver", ("bisect", "newton", "pallas"))
+def test_fused_simulate_bit_identical_per_solver(solver):
+    """The fused kernel re-traces the configured solver inside its round
+    body, so identity must hold for every backend — including the nested
+    pallas-in-pallas case."""
+    cfg = OceanConfig(
+        num_clients=K, num_rounds=T, radio=RADIO, frame_len=13, solver=solver
+    )
+    h2 = jax.random.exponential(jax.random.PRNGKey(3), (T, K)) * 2.5e-4
+    eta = eta_schedule("uniform", T)
+    ref_state, ref_decs = jax.jit(lambda h: simulate(cfg, h, eta, 1e-5))(h2)
+    got_state, got_decs = jax.jit(
+        lambda h: simulate(cfg, h, eta, 1e-5, traj="fused")
+    )(h2)
+    for f in ref_decs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref_decs, f)),
+            np.asarray(getattr(got_decs, f)),
+            err_msg=f"decs.{f}",
+        )
+    np.testing.assert_array_equal(np.asarray(ref_state.q), np.asarray(got_state.q))
+    np.testing.assert_array_equal(
+        np.asarray(ref_state.energy_spent), np.asarray(got_state.energy_spent)
+    )
+    assert int(got_state.t) == T
+
+
+def test_fused_matches_naive_python_oracle():
+    """ref.py parity harness: the kernel vs the deliberately naive
+    Python-level round loop (no scan, no kernel)."""
+    cfg = OceanConfig(num_clients=4, num_rounds=11, radio=RADIO, frame_len=4)
+    h2 = jax.random.exponential(jax.random.PRNGKey(9), (11, 4)) * 2.5e-4
+    v_seq = jnp.full((11,), 1e-5, jnp.float32)
+    eta = eta_schedule("uniform", 11)
+    inc = jnp.broadcast_to(cfg.budgets() / 11, (11, 4))
+    ref_state, ref_decs = ocean_traj_ref(cfg, h2, v_seq, eta, inc)
+    got_state, got_decs = ocean_trajectory_fused(cfg, h2, v_seq, eta, inc)
+    for f in ref_decs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref_decs, f)),
+            np.asarray(getattr(got_decs, f)),
+            err_msg=f"decs.{f}",
+        )
+    np.testing.assert_array_equal(np.asarray(ref_state.q), np.asarray(got_state.q))
+    np.testing.assert_array_equal(
+        np.asarray(ref_state.energy_spent), np.asarray(got_state.energy_spent)
+    )
+
+
+@pytest.mark.parametrize("chunk", (1, 7, 64))
+def test_fused_chunking_invariant(chunk):
+    """Round chunking (including T % chunk != 0 edge padding and
+    chunk > T clipping) must not change a single bit."""
+    cfg = OceanConfig(num_clients=5, num_rounds=23, radio=RADIO, frame_len=9)
+    h2 = jax.random.exponential(jax.random.PRNGKey(1), (23, 5)) * 2.5e-4
+    eta = eta_schedule("uniform", 23)
+    ref_state, ref_decs = simulate(cfg, h2, eta, 1e-5)
+    v_seq = jnp.full((23,), 1e-5, jnp.float32)
+    inc = jnp.broadcast_to(cfg.budgets() / 23, (23, 5))
+    got_state, got_decs = ocean_trajectory_fused(
+        cfg, h2, v_seq, eta, inc, chunk=chunk
+    )
+    for f in ref_decs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref_decs, f)),
+            np.asarray(getattr(got_decs, f)),
+            err_msg=f"decs.{f} chunk={chunk}",
+        )
+    np.testing.assert_array_equal(np.asarray(ref_state.q), np.asarray(got_state.q))
+
+
+def test_fused_with_time_varying_budgets():
+    """budget_seq (repro.env harvesting-style increments) flows through
+    the fused queue update identically."""
+    cfg = OceanConfig(num_clients=K, num_rounds=T, radio=RADIO)
+    h2 = jax.random.exponential(jax.random.PRNGKey(5), (T, K)) * 2.5e-4
+    eta = eta_schedule("uniform", T)
+    inc = jax.random.uniform(jax.random.PRNGKey(6), (T, K)) * 2e-3
+    ref = simulate(cfg, h2, eta, 1e-5, budget_seq=inc)
+    got = simulate(cfg, h2, eta, 1e-5, budget_seq=inc, traj="fused")
+    for f in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref[1], f)), np.asarray(getattr(got[1], f))
+        )
+
+
+# --------------------------------------------------------------------------
+# registry / config plumbing
+# --------------------------------------------------------------------------
+def test_unknown_traj_rejected_everywhere():
+    assert TRAJ_BACKENDS == ("scan", "fused")
+    with pytest.raises(ValueError, match="unknown trajectory backend"):
+        check_traj_backend("loop")
+    with pytest.raises(ValueError, match="unknown trajectory backend"):
+        OceanConfig(num_clients=4, num_rounds=10, radio=RADIO, traj="loop")
+    with pytest.raises(ValueError, match="unknown trajectory backend"):
+        Scenario(num_clients=4, num_rounds=10, traj="loop")
+    with pytest.raises(ValueError, match="unknown trajectory backend"):
+        GridEngine(
+            [Scenario(num_clients=4, num_rounds=10)], ["ocean-u"], traj="loop"
+        )
+    cfg = OceanConfig(num_clients=4, num_rounds=10, radio=RADIO)
+    with pytest.raises(ValueError, match="unknown trajectory backend"):
+        simulate(
+            cfg,
+            jnp.ones((10, 4)),
+            eta_schedule("uniform", 10),
+            1e-5,
+            traj="loop",
+        )
+
+
+def test_scenario_traj_serialization_roundtrip():
+    sc = Scenario(num_clients=4, num_rounds=10, traj="fused")
+    assert Scenario.from_json(sc.to_json()).traj == "fused"
+    assert sc.ocean_config().traj == "fused"
+    # default backend omitted => pre-traj payloads stay byte-stable
+    assert "traj" not in Scenario(num_clients=4, num_rounds=10).to_dict()
+
+
+def test_grid_rejects_mixed_traj_scenarios():
+    scenarios = [
+        Scenario(name="a", num_clients=4, num_rounds=10),
+        Scenario(name="b", num_clients=4, num_rounds=10, traj="fused"),
+    ]
+    with pytest.raises(ValueError, match="grid-incompatible"):
+        GridEngine(scenarios, ["ocean-u"])
+
+
+def test_engine_traj_override_replaces_scenario_default():
+    sc = Scenario(num_clients=4, num_rounds=10)
+    engine = GridEngine([sc], ["ocean-u"], traj="fused")
+    assert engine.cfg.traj == "fused"
+    assert dataclasses.replace(engine.cfg, traj="scan").traj == "scan"
+
+
+# --------------------------------------------------------------------------
+# v_schedule validation (PR-5 satellite: no more silent truncation)
+# --------------------------------------------------------------------------
+def test_v_schedule_scalar_and_exact_per_frame():
+    cfg = OceanConfig(num_clients=4, num_rounds=12, radio=RADIO, frame_len=4)
+    np.testing.assert_array_equal(
+        np.asarray(v_schedule(cfg, 2.0)), np.full(12, 2.0, np.float32)
+    )
+    per_frame = v_schedule(cfg, jnp.asarray([1.0, 2.0, 3.0]))
+    np.testing.assert_array_equal(
+        np.asarray(per_frame), np.repeat([1.0, 2.0, 3.0], 4).astype(np.float32)
+    )
+    # ragged final frame: M = ceil(14 / 4) = 4
+    cfg_ragged = OceanConfig(
+        num_clients=4, num_rounds=14, radio=RADIO, frame_len=4
+    )
+    out = v_schedule(cfg_ragged, jnp.asarray([1.0, 2.0, 3.0, 4.0]))
+    assert out.shape == (14,)
+    np.testing.assert_array_equal(np.asarray(out[-2:]), [4.0, 4.0])
+
+
+@pytest.mark.parametrize("bad_len", (1, 2, 5, 12))
+def test_v_schedule_rejects_wrong_length(bad_len):
+    """A per-frame sequence whose length is not M used to be silently
+    clipped; it must now fail with a message naming both lengths."""
+    cfg = OceanConfig(num_clients=4, num_rounds=12, radio=RADIO, frame_len=4)
+    assert cfg.num_frames == 3
+    with pytest.raises(ValueError, match="3 frames"):
+        v_schedule(cfg, jnp.ones((bad_len,)))
+
+
+def test_v_schedule_rejects_matrix():
+    cfg = OceanConfig(num_clients=4, num_rounds=12, radio=RADIO, frame_len=4)
+    with pytest.raises(ValueError, match="per-frame"):
+        v_schedule(cfg, jnp.ones((3, 2)))
