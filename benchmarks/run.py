@@ -14,6 +14,16 @@ fails the run on a regression beyond ``--baseline-tolerance`` (default
 30%) — the recorded perf trajectory is a gate, not just an artifact.
 Refresh a baseline by re-running with ``--json-dir benchmarks/baselines``
 on the reference machine and committing the result.
+
+``--profile DIR`` wraps the run in a ``jax.profiler`` trace (viewable
+with TensorBoard / Perfetto) so hot-path regressions come with a trace,
+not just a slower CSV row.  A "step" is one benchmark module:
+``--profile-start N`` skips the first N selected modules before the
+trace starts and ``--profile-steps M`` stops it after M traced modules
+(default: trace through the end), keeping trace files small when only
+one module's regression is under investigation, e.g.::
+
+    python -m benchmarks.run --only traj_bench --profile /tmp/jtrace
 """
 from __future__ import annotations
 
@@ -153,6 +163,24 @@ def main() -> int:
         default=0.30,
         help="allowed fractional rounds/sec drop before failing (default 0.30)",
     )
+    ap.add_argument(
+        "--profile",
+        metavar="DIR",
+        default=None,
+        help="write a jax.profiler trace of the benchmark run into DIR",
+    )
+    ap.add_argument(
+        "--profile-start",
+        type=int,
+        default=0,
+        help="selected-module index at which the profiler trace starts",
+    )
+    ap.add_argument(
+        "--profile-steps",
+        type=int,
+        default=None,
+        help="number of modules to trace (default: through the end)",
+    )
     args = ap.parse_args()
 
     selected = [n for n in BENCHMARKS if not args.only or args.only in n]
@@ -164,11 +192,34 @@ def main() -> int:
         )
         return 2
 
+    profiling = False
+    traced = 0
+
+    def _profile_tick(idx: int) -> None:
+        """Start/stop the jax.profiler trace on module boundaries."""
+        nonlocal profiling, traced
+        if args.profile is None:
+            return
+        import jax
+
+        done = args.profile_steps is not None and traced >= args.profile_steps
+        if profiling and done:
+            jax.profiler.stop_trace()
+            profiling = False
+            print(f"# profiler trace written to {args.profile}", file=sys.stderr)
+        if not profiling and idx >= args.profile_start and not done:
+            os.makedirs(args.profile, exist_ok=True)
+            jax.profiler.start_trace(args.profile)
+            profiling = True
+
     print("benchmark,metric,value,note")
     failures = []
+    idx = -1
     for name, fn in BENCHMARKS.items():
         if name not in selected:
             continue
+        idx += 1
+        _profile_tick(idx)
         rows_before = len(common.ROWS)
         t0 = time.time()
         try:
@@ -180,6 +231,8 @@ def main() -> int:
             print(f"{name},ERROR,{type(e).__name__},{str(e)[:120]}")
             ok = False
         elapsed = time.time() - t0
+        if profiling:
+            traced += 1
         print(f"{name},total_runtime_s,{elapsed:.1f},")
         if args.check_baseline:
             ok &= check_baseline(
@@ -201,6 +254,11 @@ def main() -> int:
                 json.dump(payload, f, indent=2)
         if not ok:
             failures.append(name)
+    if profiling:
+        import jax
+
+        jax.profiler.stop_trace()
+        print(f"# profiler trace written to {args.profile}", file=sys.stderr)
     if failures:
         print(f"SUMMARY,failed,{len(failures)},{';'.join(failures)}")
         return 1

@@ -10,6 +10,12 @@ numbers cover the real engine path too.
 Claims:
   * ``newton`` >= 3x faster than ``bisect`` steady-state at K=20 (CPU),
   * fast backends reproduce ``bisect``'s selections on the bench draws.
+
+The K-scaling rows extend the axis to 10^4: the sort-free paths
+(``ranking="topm"`` with the ``newton`` lattice clipped to top_m
+candidates, and the ``pallas_tiled`` client-tiled kernel) are the only
+backends that stay tractable there — the argsort baseline at that scale
+lives in ``traj_bench`` (it dominates that module's runtime).
 """
 from __future__ import annotations
 
@@ -29,6 +35,9 @@ BATCH = {10: 64, 20: 64, 50: 16, 100: 8}
 CLAIM_K = 20
 CLAIM_SPEEDUP = 3.0
 
+# sort-free K-scaling axis: (K, top_m) cells, single solve per rep
+KSCALE = ((1_000, 128), (10_000, 128))
+
 
 def _draws(k: int, batch: int):
     rng = np.random.default_rng(k)
@@ -37,11 +46,17 @@ def _draws(k: int, batch: int):
     return q, h2
 
 
-def _bench_backend(backend: str, k: int, batch: int, radio: RadioParams):
+def _bench_backend(
+    backend: str, k: int, batch: int, radio: RadioParams, **ocean_kwargs
+):
     q, h2 = _draws(k, batch)
     v, eta = jnp.float32(1e-5), jnp.float32(1.0)
     fn = jax.jit(
-        jax.vmap(lambda q, h2: ocean_p(q, h2, v, eta, radio, solver=backend))
+        jax.vmap(
+            lambda q, h2: ocean_p(
+                q, h2, v, eta, radio, solver=backend, **ocean_kwargs
+            )
+        )
     )
     with Timer() as t_compile:
         sol = jax.block_until_ready(fn(q, h2))
@@ -73,7 +88,17 @@ def run() -> bool:
             emit(BENCH, f"{backend}_K{k}_rounds_per_s", batch / per_call)
             emit(BENCH, f"{backend}_K{k}_steady_ms", per_call * 1e3)
             emit(BENCH, f"{backend}_K{k}_compile_s", t_compile)
-        for backend in ("newton", "pallas"):
+        # sort-free tiled kernel on the same draws (top_m=K => exact)
+        sol_t, t_compile, per_call = _bench_backend(
+            "pallas_tiled", k, batch, radio, ranking="topm", top_m=k
+        )
+        sols["tiled"] = sol_t
+        steady[("tiled", k)] = per_call
+        emit(BENCH, f"tiled_K{k}_rounds_per_s", batch / per_call)
+        emit(BENCH, f"tiled_K{k}_steady_ms", per_call * 1e3)
+        emit(BENCH, f"tiled_K{k}_compile_s", t_compile)
+
+        for backend in ("newton", "pallas", "tiled"):
             identical = bool(
                 np.array_equal(np.asarray(sols[backend].a), np.asarray(sols["bisect"].a))
             )
@@ -95,6 +120,41 @@ def run() -> bool:
         steady[("bisect", CLAIM_K)]
         >= CLAIM_SPEEDUP * steady[("newton", CLAIM_K)],
     )
+
+    # -- sort-free K-scaling axis (10^3..10^4, single solve per rep) --------
+    # blocking reps: these solves run seconds each, so the async-dispatch
+    # loop above would enqueue far past the budget before noticing
+    import time
+
+    for k, top_m in KSCALE:
+        radio_k = RadioParams(b_min=0.1 / k)
+        q, h2 = _draws(k, 1)
+        v, eta = jnp.float32(1e-5), jnp.float32(1.0)
+        for label, backend, kwargs in (
+            ("newton_topm", "newton", dict(ranking="topm", top_m=top_m)),
+            ("tiled_topm", "pallas_tiled", dict(ranking="topm", top_m=top_m)),
+        ):
+            fn = jax.jit(
+                jax.vmap(
+                    lambda q, h2, kw=kwargs, b=backend: ocean_p(
+                        q, h2, v, eta, radio_k, solver=b, **kw
+                    )
+                )
+            )
+            with Timer() as t_compile:
+                sol = jax.block_until_ready(fn(q, h2))
+            t0 = time.perf_counter()
+            sol = jax.block_until_ready(fn(q, h2))
+            per_call = time.perf_counter() - t0
+            emit(BENCH, f"{label}_K{k}_rounds_per_s", 1 / per_call)
+            emit(BENCH, f"{label}_K{k}_steady_ms", per_call * 1e3)
+            emit(BENCH, f"{label}_K{k}_compile_s", t_compile.elapsed)
+            emit(
+                BENCH,
+                f"{label}_K{k}_num_selected",
+                int(sol.num_selected[0]),
+                f"top_m={top_m}",
+            )
 
     # -- one grid-scaling cell: the engine path, per backend ----------------
     T_, K_ = 60, 10

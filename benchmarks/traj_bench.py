@@ -23,12 +23,23 @@ scan path (``bisect``), mirroring how the backends are actually
 deployed; the scan+newton row is emitted alongside so the share of the
 win owed to the solver vs the fused trajectory stays visible.  All
 numbers are CPU interpret-mode — see the README "Performance" section.
+
+The K-scaling section is the million-client tentpole's gate: at
+K = 10^4 the sort-free client-tiled path (``solver="pallas_tiled"``,
+``ranking="topm"``) must beat the argsort-based fused path by >= 2x
+rounds/sec (the argsort baseline sweeps all K+1 prefix candidates
+sequentially, so its single cell dominates this module's runtime — set
+``TRAJ_BENCH_SKIP_SCALE=1`` to skip the section in quick local runs),
+plus a K = 10^5 smoke cell of the tiled path with bf16 decision
+streaming.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, claim, emit, paper_scenario
@@ -52,24 +63,42 @@ GRID_T, GRID_K = 200, 10
 GRID_SEEDS = tuple(range(12))
 CLAIM_SPEEDUP = 2.0
 
+# K-scaling (the million-client tentpole): tiled sort-free vs argsort at
+# K = 10^4, plus a K = 10^5 tiled-only smoke.  b_min scales down so
+# b_min * K <= 1 stays feasible (RadioParams.validate).
+KSCALE_CLAIM_K = 10_000
+KSCALE_SMOKE_K = 100_000
+KSCALE_TOP_M = 128
+KSCALE_SPEEDUP = 2.0
 
-def _steady(fn, *args, budget_s: float = 0.5):
+
+def _steady(fn, *args, budget_s: float = 0.5, best_of: int = 2):
     """Steady-state seconds per call (compile excluded, >= 1 rep).
 
     Blocks on every rep: whole-trajectory calls run for seconds, and the
     async-dispatch timing loop solver_bench uses for its ms-scale cells
     would enqueue hundreds of them before noticing the budget elapsed.
+
+    Takes the *min* over ``best_of`` independent timing windows: these
+    numbers feed the committed baseline gate, and on shared/virtualized
+    hardware a single window can land entirely inside a noisy-neighbor
+    period (observed 3x on an otherwise idle box) — the fastest window
+    is the least-contended estimate of the machine's true rate.
     """
     with Timer() as t_compile:
         out = jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    reps = 0
-    while True:
-        out = jax.block_until_ready(fn(*args))
-        reps += 1
-        if time.perf_counter() - t0 >= budget_s:
-            break
-    return (time.perf_counter() - t0) / reps, t_compile.elapsed, out
+    best = None
+    for _ in range(best_of):
+        t0 = time.perf_counter()
+        reps = 0
+        while True:
+            out = jax.block_until_ready(fn(*args))
+            reps += 1
+            if time.perf_counter() - t0 >= budget_s:
+                break
+        per_call = (time.perf_counter() - t0) / reps
+        best = per_call if best is None else min(best, per_call)
+    return best, t_compile.elapsed, out
 
 
 def _single_cell(k: int, t: int, traj: str, solver: str):
@@ -85,6 +114,121 @@ def _single_cell(k: int, t: int, traj: str, solver: str):
     fn = jax.jit(lambda h: simulate(cfg, h, eta, 1e-5)[1])
     steady, t_compile, decs = _steady(fn, h2)
     return steady, t_compile, decs
+
+
+def _kscale_cfg(k: int, t: int, solver: str, ranking: str) -> OceanConfig:
+    return OceanConfig(
+        num_clients=k,
+        num_rounds=t,
+        radio=RadioParams(b_min=0.1 / k),   # feasible at any K
+        solver=solver,
+        ranking=ranking,
+        top_m=KSCALE_TOP_M,
+        traj="fused",
+    )
+
+
+def _kscale_round_cell(k: int, solver: str, ranking: str):
+    """Time one warm OCEAN round (the body both trajectory backends trace).
+
+    The claim cells must rank *warm, heterogeneous* queues — every
+    trajectory's round 0 is the degenerate all-S0 cold start (q = 0), so
+    a T = 1 ``simulate`` would benchmark a trivial solve.  One rep only
+    (``budget_s=0``): the argsort baseline runs minutes per round and
+    the claim's margin (measured >1000x) needs no averaging.
+    """
+    from repro.core.ocean import OceanState, ocean_round
+
+    cfg = _kscale_cfg(k, 1, solver, ranking)
+    rng = np.random.default_rng(k)
+    q = rng.uniform(0.0, 0.2, k).astype(np.float32)
+    q[rng.random(k) < 0.2] = 0.0
+    h2 = jnp.asarray(rng.exponential(2.5e-4, k).astype(np.float32))
+    state = OceanState(
+        q=jnp.asarray(q),
+        t=jnp.asarray(1, jnp.int32),
+        energy_spent=jnp.zeros((k,), jnp.float32),
+    )
+    fn = jax.jit(
+        lambda s, h: ocean_round(
+            s, h, jnp.float32(1e-5), jnp.float32(1.0), cfg
+        )[1]
+    )
+    steady, t_compile, dec = _steady(fn, state, h2, budget_s=0.0)
+    return steady, t_compile, dec
+
+
+def _kscale_traj_cell(k: int, t: int, solver: str, ranking: str, **sim_kwargs):
+    """Whole-trajectory smoke at scale through the fused backend."""
+    cfg = _kscale_cfg(k, t, solver, ranking)
+    h2 = jax.random.exponential(jax.random.PRNGKey(k), (t, k)) * 2.5e-4
+    eta = eta_schedule("uniform", t)
+    fn = jax.jit(lambda h: simulate(cfg, h, eta, 1e-5, **sim_kwargs)[1])
+    steady, t_compile, decs = _steady(fn, h2, budget_s=0.0)
+    return steady, t_compile, decs
+
+
+def _run_kscale() -> bool:
+    ok = True
+
+    # -- K = 10^4: tiled sort-free vs the argsort-based fused path ----------
+    k = KSCALE_CLAIM_K
+    steady_tiled, compile_tiled, dec_tiled = _kscale_round_cell(
+        k, "pallas_tiled", "topm"
+    )
+    emit(BENCH, f"tiled_topm_K{k}_rounds_per_s", 1 / steady_tiled)
+    emit(BENCH, f"tiled_topm_K{k}_compile_s", compile_tiled)
+
+    steady_sort, compile_sort, dec_sort = _kscale_round_cell(k, "pallas", "sort")
+    emit(BENCH, f"argsort_pallas_K{k}_rounds_per_s", 1 / steady_sort)
+    emit(BENCH, f"argsort_pallas_K{k}_compile_s", compile_sort)
+
+    speedup = steady_sort / max(steady_tiled, 1e-12)
+    emit(BENCH, f"tiled_speedup_vs_argsort_K{k}", speedup)
+    ok &= claim(
+        BENCH,
+        f"tiled topm ranking >= {KSCALE_SPEEDUP}x argsort-based fused path "
+        f"rounds/sec at K={k}",
+        speedup >= KSCALE_SPEEDUP,
+    )
+    # tiled is oracle-pinned, not bitwise: selections must agree exactly,
+    # objectives to f32-kernel precision
+    sel_same = bool(np.array_equal(np.asarray(dec_tiled.a), np.asarray(dec_sort.a)))
+    obj_close = bool(
+        np.allclose(
+            float(dec_tiled.objective), float(dec_sort.objective), rtol=2e-4
+        )
+    )
+    ok &= claim(
+        BENCH,
+        f"tiled selections match argsort path exactly at K={k}",
+        sel_same and obj_close,
+    )
+
+    # fused whole-trajectory at K = 10^4 with the tiled solver: the
+    # recorded steady rate (T = 8 rounds per launch, auto-chunked)
+    t8 = 8
+    steady8, _, _ = _kscale_traj_cell(k, t8, "pallas_tiled", "topm")
+    emit(BENCH, f"tiled_topm_fused_K{k}_T{t8}_rounds_per_s", t8 / steady8)
+
+    # -- K = 10^5 smoke: tiled path + bf16 decision streaming ---------------
+    ks = KSCALE_SMOKE_K
+    steady_s, compile_s, decs_s = _kscale_traj_cell(
+        ks, 2, "pallas_tiled", "topm", stream_bf16=True
+    )
+    emit(BENCH, f"tiled_topm_fused_K{ks}_T2_rounds_per_s", 2 / steady_s)
+    emit(BENCH, f"tiled_topm_fused_K{ks}_T2_compile_s", compile_s)
+    smoke_ok = (
+        decs_s.b.dtype == jnp.bfloat16
+        and bool(np.isfinite(np.asarray(decs_s.objective, np.float32)).all())
+        and bool((np.asarray(decs_s.num_selected) >= 0).all())
+    )
+    ok &= claim(
+        BENCH,
+        f"K={ks} tiled smoke cell runs with bf16-streamed decisions",
+        smoke_ok,
+    )
+    return ok
 
 
 def run() -> bool:
@@ -165,4 +309,10 @@ def run() -> bool:
         f"24-cell batched grid",
         speedup >= CLAIM_SPEEDUP,
     )
+
+    # -- K-scaling: the sort-free tiled path (the million-client tentpole) --
+    if os.environ.get("TRAJ_BENCH_SKIP_SCALE"):
+        emit(BENCH, "kscale_skipped", True, "TRAJ_BENCH_SKIP_SCALE set")
+    else:
+        ok &= _run_kscale()
     return ok

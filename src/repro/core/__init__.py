@@ -2,7 +2,15 @@
 bandwidth allocation under long-term energy constraints."""
 from repro.core.energy import RadioParams, energy, f_shannon, f_shannon_prime
 from repro.core.bandwidth import solve_p4
-from repro.core.selection import OceanPSolution, ocean_p, p3_value, priorities
+from repro.core.selection import (
+    RANKINGS,
+    OceanPSolution,
+    check_ranking,
+    ocean_p,
+    p3_value,
+    priorities,
+    topm_extract,
+)
 from repro.core.solvers import (
     SolverBackend,
     available_solvers,
@@ -65,9 +73,12 @@ __all__ = [
     "get_solver",
     "register_solver",
     "OceanPSolution",
+    "RANKINGS",
+    "check_ranking",
     "ocean_p",
     "p3_value",
     "priorities",
+    "topm_extract",
     "OceanConfig",
     "OceanState",
     "RoundDecision",

@@ -175,7 +175,17 @@ def lookahead_dual(
 
     def rounds_for(mu):
         def per_round(h2, eta_t, radio):
-            sol = ocean_p(mu, h2, jnp.asarray(1.0), eta_t, radio, solver=cfg.solver)
+            sol = ocean_p(
+                mu,
+                h2,
+                jnp.asarray(1.0),
+                eta_t,
+                radio,
+                solver=cfg.solver,
+                ranking=cfg.ranking,
+                top_m=cfg.top_m,
+                block_k=cfg.block_k,
+            )
             e = energy(sol.b, h2, radio, sol.a)
             return sol.a, sol.b, e
 

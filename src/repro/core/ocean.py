@@ -20,7 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.energy import RadioParams, energy
-from repro.core.selection import OceanPSolution, ocean_p
+from repro.core.selection import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_TOP_M,
+    OceanPSolution,
+    check_ranking,
+    ocean_p,
+)
 from repro.core.solvers import get_solver
 
 Array = jax.Array
@@ -53,7 +59,19 @@ class OceanConfig:
       energy_budget_j: per-client long-term budget H_k (scalar or (K,)).
       solver:      P4/OCEAN-P backend name (``repro.core.solvers``):
                    ``bisect`` (default, bit-stable reference), ``newton``
-                   (fast safeguarded Newton), or ``pallas`` (fused kernel).
+                   (fast safeguarded Newton), ``pallas`` (fused kernel),
+                   or ``pallas_tiled`` (sort-free client-tiled kernel;
+                   requires ``ranking="topm"``).
+      ranking:     how the round body produces the rho prefix order
+                   (``repro.core.selection``): ``sort`` (default — the
+                   full ``argsort``, bit-stable legacy path) or ``topm``
+                   (sort-free iterative top-m extraction; O(top_m * K),
+                   Mosaic-lowerable, exact whenever the optimal prefix
+                   fits in ``top_m``).
+      top_m:       candidate-prefix length for ``ranking="topm"``
+                   (clipped to K; ignored under ``sort``).
+      block_k:     client-axis tile width for the ``pallas_tiled``
+                   kernel (ignored by the XLA top-m path and ``sort``).
       traj:        trajectory execution backend for ``simulate``:
                    ``scan`` (default — the ``lax.scan`` over rounds,
                    bit-stable) or ``fused`` (``repro.kernels.ocean_traj``:
@@ -68,11 +86,24 @@ class OceanConfig:
     energy_budget_j: float = 0.15
     frame_len: Optional[int] = None  # default: R = T
     solver: str = "bisect"
+    ranking: str = "sort"
+    top_m: int = DEFAULT_TOP_M
+    block_k: int = DEFAULT_BLOCK_K
     traj: str = "scan"
 
     def __post_init__(self):
-        get_solver(self.solver)  # fail fast on unknown backend names
+        backend = get_solver(self.solver)  # fail fast on unknown backend names
+        check_ranking(self.ranking)
         check_traj_backend(self.traj)
+        if backend.topm is not None and self.ranking != "topm":
+            raise ValueError(
+                f"solver {self.solver!r} is sort-free and only runs under "
+                f"ranking='topm' (got ranking={self.ranking!r})"
+            )
+        if self.top_m < 1:
+            raise ValueError(f"top_m={self.top_m} must be >= 1")
+        if self.block_k < 1:
+            raise ValueError(f"block_k={self.block_k} must be >= 1")
         self.radio.validate(self.num_clients)
         if self.frame_len is not None and self.frame_len <= 0:
             raise ValueError(
@@ -146,7 +177,17 @@ def ocean_round(
     at_boundary = (state.t > 0) & (jnp.mod(state.t, R) == 0)
     q = jnp.where(at_boundary, jnp.zeros_like(state.q), state.q)
 
-    sol: OceanPSolution = ocean_p(q, h2, v, eta, radio, solver=cfg.solver)
+    sol: OceanPSolution = ocean_p(
+        q,
+        h2,
+        v,
+        eta,
+        radio,
+        solver=cfg.solver,
+        ranking=cfg.ranking,
+        top_m=cfg.top_m,
+        block_k=cfg.block_k,
+    )
     e = energy(sol.b, h2, radio, sol.a)
 
     if budget_inc is None:
@@ -202,6 +243,7 @@ def simulate(
     budget_seq: Optional[Array] = None,  # (T, K) per-round budget increments
     radio_seq=None,                      # (T,)-leaf radio pytree (TracedRadio)
     traj: Optional[str] = None,          # trajectory backend; None => cfg.traj
+    stream_bf16: bool = False,           # fused only: bf16 decision traces
 ) -> Tuple[OceanState, RoundDecision]:
     """Run T rounds as one program; returns final state + stacked decisions.
 
@@ -219,8 +261,18 @@ def simulate(
     ``repro.kernels.ocean_traj`` Pallas kernel, which keeps the queue /
     energy carry resident in VMEM and is bit-identical to ``scan`` under
     interpret mode.  ``None`` resolves to ``cfg.traj``.
+
+    ``stream_bf16=True`` (fused backend only) streams the per-round
+    (T, K) float decision traces back to HBM in bfloat16; the on-chip
+    carries — and hence the trajectory and final state — are unchanged.
     """
     traj = check_traj_backend(cfg.traj if traj is None else traj)
+    if stream_bf16 and traj != "fused":
+        raise ValueError(
+            "stream_bf16=True requires the 'fused' trajectory backend "
+            "(the scan path materializes full-precision decisions by "
+            f"construction); got traj={traj!r}"
+        )
     v_seq = v_schedule(cfg, v)
     eta_seq = jnp.asarray(eta_seq, jnp.float32)
     if budget_seq is None:
@@ -234,7 +286,13 @@ def simulate(
         from repro.kernels.ocean_traj import ocean_trajectory_fused
 
         return ocean_trajectory_fused(
-            cfg, h2_seq, v_seq, eta_seq, budget_seq, radio_seq
+            cfg,
+            h2_seq,
+            v_seq,
+            eta_seq,
+            budget_seq,
+            radio_seq,
+            stream_bf16=stream_bf16,
         )
 
     if radio_seq is None:

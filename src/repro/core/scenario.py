@@ -35,6 +35,7 @@ from repro.core.channel import (
 from repro.core.energy import RadioParams
 from repro.core.ocean import OceanConfig, check_traj_backend
 from repro.core.patterns import eta_schedule
+from repro.core.selection import DEFAULT_BLOCK_K, DEFAULT_TOP_M, check_ranking
 from repro.core.solvers import get_solver
 from repro.env.channel import LowerCtx, get_channel_process, sample_channel_process
 from repro.env.energy import sample_budget_process
@@ -74,9 +75,16 @@ class Scenario:
                        ``pathloss_db``/``fading`` fields to the
                        ``iid_rayleigh``/``static`` shim.
       solver:          P4/OCEAN-P backend (``repro.core.solvers``):
-                       ``bisect`` (default, bit-stable), ``newton``, or
-                       ``pallas``.  A compiled-program static: all
-                       scenarios of one grid must agree.
+                       ``bisect`` (default, bit-stable), ``newton``,
+                       ``pallas``, or ``pallas_tiled`` (sort-free;
+                       needs ``ranking="topm"``).  A compiled-program
+                       static: all scenarios of one grid must agree.
+      ranking:         rho-prefix ranking mode (``sort`` default /
+                       ``topm`` sort-free extraction); with ``top_m``
+                       and ``block_k`` these are compiled-program
+                       statics joining the grid's must-agree set.
+      top_m:           candidate-prefix length under ``ranking="topm"``.
+      block_k:         client tile width of the ``pallas_tiled`` kernel.
       traj:            trajectory backend for OCEAN policies:
                        ``scan`` (default, the bit-stable ``lax.scan``) or
                        ``fused`` (whole-trajectory Pallas kernel,
@@ -95,11 +103,20 @@ class Scenario:
     frame_len: Optional[int] = None
     env: Optional[EnvSpec] = None
     solver: str = "bisect"
+    ranking: str = "sort"
+    top_m: int = DEFAULT_TOP_M
+    block_k: int = DEFAULT_BLOCK_K
     traj: str = "scan"
 
     def __post_init__(self):
-        get_solver(self.solver)  # fail fast on unknown backend names
+        backend = get_solver(self.solver)  # fail fast on unknown backend names
+        check_ranking(self.ranking)
         check_traj_backend(self.traj)
+        if backend.topm is not None and self.ranking != "topm":
+            raise ValueError(
+                f"solver {self.solver!r} is sort-free and only runs under "
+                f"ranking='topm' (got ranking={self.ranking!r})"
+            )
         if len(self.pathloss_db) != 2:
             raise ValueError(
                 f"pathloss_db must be a (start_db, end_db) pair, got "
@@ -124,6 +141,9 @@ class Scenario:
             energy_budget_j=self.energy_budget_j,  # type: ignore[arg-type]
             frame_len=self.frame_len,
             solver=self.solver,
+            ranking=self.ranking,
+            top_m=self.top_m,
+            block_k=self.block_k,
             traj=self.traj,
         )
 
@@ -241,6 +261,12 @@ class Scenario:
             d["env"] = self.env.to_dict()
         if self.solver == "bisect":
             d.pop("solver")  # keep pre-solver payloads byte-stable
+        if self.ranking == "sort":
+            d.pop("ranking")  # keep pre-ranking payloads byte-stable
+        if self.top_m == DEFAULT_TOP_M:
+            d.pop("top_m")
+        if self.block_k == DEFAULT_BLOCK_K:
+            d.pop("block_k")
         if self.traj == "scan":
             d.pop("traj")  # keep pre-traj payloads byte-stable
         return d

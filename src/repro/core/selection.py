@@ -35,6 +35,32 @@ Array = jax.Array
 
 _RHO_ZERO_TOL = 1e-30
 
+# Ranking strategies for the Theorem-1 prefix structure:
+#   sort — full ``argsort`` of rho, then the K+1 candidate sweep (the
+#          bit-stable legacy path; O(K log K) + O(K^2 iters) per round);
+#   topm — sort-free: only the selected prefix needs exact order, so an
+#          iterative min-extraction ranks just the ``top_m`` smallest
+#          positive-rho clients (stable ties) and the candidate sweep is
+#          clipped to m in [0, top_m].  Bit-identical to ``sort`` for
+#          every solver whenever the optimum prefix fits (m* <= top_m);
+#          when it doesn't, the selection saturates at the best
+#          top_m-prefix (a documented, deterministic approximation).
+RANKINGS = ("sort", "topm")
+DEFAULT_RANKING = "sort"
+DEFAULT_TOP_M = 128
+DEFAULT_BLOCK_K = 128
+
+
+def check_ranking(name: str) -> str:
+    """Fail fast on unknown ranking names."""
+    if name not in RANKINGS:
+        raise ValueError(
+            f"unknown ranking {name!r}; available: {', '.join(RANKINGS)} "
+            f"(``sort`` is the bit-stable argsort default, ``topm`` the "
+            f"sort-free iterative extraction — see repro.core.selection)"
+        )
+    return name
+
 
 class OceanPSolution(NamedTuple):
     a: Array          # (K,) bool  — selection decisions
@@ -47,6 +73,49 @@ class OceanPSolution(NamedTuple):
 def priorities(q: Array, h2: Array) -> Array:
     """rho_k = q_k / h_k^2 — lower is higher selection priority."""
     return jnp.asarray(q) / jnp.maximum(jnp.asarray(h2), 1e-30)
+
+
+def topm_extract(rho: Array, top_m: int) -> tuple[Array, Array]:
+    """Rank the ``top_m`` smallest *positive* priorities without sorting.
+
+    Iterative min-extraction: ``top_m`` rounds of (min, first-argmin,
+    mask-to-+inf) over the working copy — O(top_m * K) reductions, no
+    ``argsort``, no data-dependent gather.  ``jnp.argmin`` returns the
+    first occurrence of the minimum, so ties break by client index —
+    exactly the order a stable ascending ``argsort`` produces, which is
+    what makes the reconstruction downstream bit-identical to the sorted
+    path (oracle: ``repro.kernels.ref.topm_extract_ref``).
+
+    Returns ``(vals, idx)`` of shape ``(top_m,)``: ascending extracted
+    priorities and their client indices.  S0 members (rho <= 1e-30) are
+    excluded (they are always selected and never ranked); slots past the
+    number of positive-rho clients hold ``+inf`` / index 0.
+    """
+    rho = jnp.asarray(rho)
+    K = rho.shape[0]
+    dtype = rho.dtype
+    inf = jnp.asarray(jnp.inf, dtype)
+    work0 = jnp.where(rho > _RHO_ZERO_TOL, rho, inf)
+    iota = jnp.arange(K, dtype=jnp.int32)
+
+    def extract(j, carry):
+        work, vals, idx = carry
+        v = jnp.min(work)
+        i = jnp.argmin(work).astype(jnp.int32)  # first occurrence on ties
+        work = jnp.where(iota == i, inf, work)
+        return work, vals.at[j].set(v), idx.at[j].set(i)
+
+    _, vals, idx = jax.lax.fori_loop(
+        0,
+        top_m,
+        extract,
+        (
+            work0,
+            jnp.full((top_m,), inf, dtype),
+            jnp.zeros((top_m,), jnp.int32),
+        ),
+    )
+    return vals, idx
 
 
 def _promote_real(x: Array) -> Array:
@@ -71,13 +140,25 @@ def ocean_p(
     outer_iters: int = 42,
     inner_iters: int = 42,
     solver: Union[str, SolverBackend, None] = None,
+    ranking: Union[str, None] = None,
+    top_m: Union[int, None] = None,
+    block_k: Union[int, None] = None,
 ) -> OceanPSolution:
     """Solve P3 exactly.  All args jittable; shapes: q, h2 -> (K,).
 
     ``solver`` picks the P4 backend (``repro.core.solvers``): ``bisect``
     (default, bit-stable reference), ``newton`` (fast safeguarded
-    Newton), or ``pallas`` (fused kernel).  All solve the same problem
-    exactly; only ``bisect`` is byte-stable against historical figures.
+    Newton), ``pallas`` (fused kernel), or ``pallas_tiled`` (sort-free
+    client-tiled kernel; requires ``ranking="topm"``).  All solve the
+    same problem exactly; only ``bisect`` is byte-stable against
+    historical figures.
+
+    ``ranking`` picks how the Theorem-1 prefix order is produced:
+    ``sort`` (default — full argsort, bit-stable) or ``topm`` (sort-free
+    iterative extraction of the ``top_m`` best clients; bit-identical to
+    ``sort`` per solver whenever m* <= top_m, and O((top_m + G) K) per
+    round instead of O(K^2 iters)).  ``block_k`` is the client-tile width
+    of the ``pallas_tiled`` kernel (ignored elsewhere).
     """
     q = _promote_real(q)
     h2 = _promote_real(h2)
@@ -87,7 +168,28 @@ def ocean_p(
     K = q.shape[0]
     v_eta = (jnp.asarray(v, dtype) * jnp.asarray(eta, dtype)).astype(dtype)
 
+    ranking = check_ranking(DEFAULT_RANKING if ranking is None else ranking)
+    backend = get_solver(solver)
     rho = priorities(q, h2)
+
+    if ranking == "topm":
+        return _ocean_p_topm(
+            rho,
+            v_eta,
+            radio,
+            backend,
+            outer_iters,
+            inner_iters,
+            DEFAULT_TOP_M if top_m is None else top_m,
+            DEFAULT_BLOCK_K if block_k is None else block_k,
+        )
+    if backend.topm is not None:
+        raise ValueError(
+            f"solver {backend.name!r} is sort-free and has no argsort "
+            f"path; call ocean_p(..., ranking='topm') (or set the "
+            f"ranking config field)"
+        )
+
     order = jnp.argsort(rho)          # ascending priority value
     rho_sorted = rho[order]
 
@@ -97,7 +199,6 @@ def ocean_p(
 
     # Candidate m = number of positive-rho clients admitted, m in [0, K].
     # Sorted rank r belongs to candidate m's P4 iff n0 <= r < n0 + m.
-    backend = get_solver(solver)
     sol = backend.prefixes(
         rho_sorted, n0, delta, v_eta, radio, outer_iters, inner_iters
     )
@@ -117,6 +218,100 @@ def ocean_p(
     inv = jnp.argsort(order)
     a = a_sorted[inv]
     b = jnp.where(a_sorted, b_sorted_full, 0.0)[inv]
+
+    return OceanPSolution(
+        a=a,
+        b=b,
+        objective=w_star,
+        rho=rho,
+        num_selected=jnp.sum(a),
+    )
+
+
+def _ocean_p_topm(
+    rho: Array,
+    v_eta: Array,
+    radio: RadioParams,
+    backend: SolverBackend,
+    outer_iters: int,
+    inner_iters: int,
+    top_m: int,
+    block_k: int,
+) -> OceanPSolution:
+    """The sort-free P3 path: rank only the best ``top_m`` clients.
+
+    Two sub-paths:
+
+    * ``backend.topm`` set (``pallas_tiled``): the whole pipeline —
+      extraction, candidate solve, scatter — is one fused client-tiled
+      kernel on unsorted rho.
+    * otherwise (``bisect``/``newton``/``pallas``): ``topm_extract``
+      ranks the top_m positives, the extracted values are placed at
+      their exact sorted slots ``n0..n0+top_m-1`` of a K-length +inf
+      buffer, and the backend's normal prefix sweep runs clipped to
+      ``m_cands`` candidates.  Because every per-candidate reduction is
+      masked to slots the extraction filled with bitwise-equal floats —
+      and masked sums/cumsums over identical array shapes with identical
+      populated slots reduce through identical trees — the winning
+      candidate is bit-identical to the argsort path whenever
+      m* <= top_m.  Scatter back to client order is ``.at[idx]`` with
+      exact +0.0 duplicates, never a K-length data-dependent gather.
+    """
+    dtype = rho.dtype
+    K = rho.shape[0]
+    if top_m < 1:
+        raise ValueError(f"top_m={top_m} must be >= 1")
+    if block_k < 1:
+        raise ValueError(f"block_k={block_k} must be >= 1")
+    m_cands = int(min(top_m, K))
+
+    in_s0 = rho <= _RHO_ZERO_TOL
+    n0 = jnp.sum(in_s0)
+    delta = 1.0 - n0.astype(dtype) * radio.b_min
+
+    if backend.topm is not None:
+        m_star, w_star, b_pos, sel_pos = backend.topm(
+            rho, n0, delta, v_eta, radio, top_m=m_cands, block_k=block_k
+        )
+    else:
+        vals, idx = topm_extract(rho, m_cands)
+        # Reconstruct the K-length sorted view: extracted values land at
+        # their exact sorted offsets [n0, n0 + m_cands); everything else
+        # is a +inf sentinel no masked candidate reduction ever reads.
+        # The buffer is (K + m_cands) long so the traced start offset n0
+        # never clamps (dynamic_update_slice clips out-of-bounds starts).
+        buf = jnp.full((K + m_cands,), jnp.inf, dtype)
+        buf = jax.lax.dynamic_update_slice(buf, vals, (n0,))
+        rho_rank = buf[:K]
+        rho_hi = jnp.max(rho)  # order-insensitive == rho_sorted[K-1]
+        sol = backend.prefixes(
+            rho_rank,
+            n0,
+            delta,
+            v_eta,
+            radio,
+            outer_iters,
+            inner_iters,
+            m_cands=m_cands,
+            rho_hi=rho_hi,
+        )
+        m_star = sol.m_star
+        w_star = sol.w_star
+        # Winner's allocation lives at sorted slots [n0, n0 + m*); slice
+        # the candidate window and scatter through the extraction indices
+        # (exhausted slots carry idx 0 but sel_j False / +0.0 adds).
+        bpad = jnp.concatenate([sol.b_pos_sorted, jnp.zeros((m_cands,), dtype)])
+        b_cand = jax.lax.dynamic_slice(bpad, (n0,), (m_cands,))
+        sel_j = jnp.arange(m_cands) < m_star
+        b_pos = (
+            jnp.zeros((K,), dtype).at[idx].add(jnp.where(sel_j, b_cand, 0.0))
+        )
+        sel_pos = jnp.zeros((K,), bool).at[idx].max(sel_j)
+
+    leftover = jnp.where(m_star == 0, delta, 0.0)
+    b0_each = radio.b_min + leftover / jnp.maximum(n0.astype(dtype), 1.0)
+    a = in_s0 | sel_pos
+    b = jnp.where(in_s0, b0_each, jnp.where(sel_pos, b_pos, 0.0))
 
     return OceanPSolution(
         a=a,

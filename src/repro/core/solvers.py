@@ -97,22 +97,43 @@ NEWTON_OUTER_ITERS_X64 = 12
 NEWTON_INNER_ITERS_X64 = 14
 NEWTON_GRID_LEVELS_X64 = 13
 
+# Budgets autotuned per (dtype, K-bucket).  Larger prefixes span more
+# orders of magnitude in the waterfilling level (lam_hi scales with
+# max rho over a wider pool) and the shared seeding grid covers each
+# candidate less tightly, so big-K solves need a few extra safeguarded
+# steps and denser grids to stay converged.  Bucket 0 is *exactly* the
+# legacy dtype-only pair, so every K <= 128 program — all historical
+# figures and tests — resolves to bit-identical budgets.
+_NEWTON_BUDGET_TABLE: Tuple[
+    Tuple[Optional[int], Tuple[int, int, int], Tuple[int, int, int]], ...
+] = (
+    # (bucket max K, float32 (outer, inner, grid), float64 (outer, inner, grid))
+    (
+        128,
+        (NEWTON_OUTER_ITERS, NEWTON_INNER_ITERS, NEWTON_GRID_LEVELS),
+        (NEWTON_OUTER_ITERS_X64, NEWTON_INNER_ITERS_X64, NEWTON_GRID_LEVELS_X64),
+    ),
+    (4096, (8, 10, 11), (13, 15, 15)),
+    (None, (9, 11, 13), (14, 16, 17)),  # open-ended: K > 4096
+)
 
-def newton_iteration_budgets(dtype) -> Tuple[int, int, int]:
-    """(outer, inner, grid) Newton budgets for the given float dtype.
+
+def newton_iteration_budgets(dtype, k: Optional[int] = None) -> Tuple[int, int, int]:
+    """(outer, inner, grid) Newton budgets for the given float dtype and K.
 
     Wider floats need more safeguarded-Newton steps: each rejected step
     degrades to (log-space) bisection, and the x64 tie-boundary studies
     (argmax selections near W*(S_m) == W*(S_{m+1})) only match ``bisect``
     when the waterfilling level is converged to the carry dtype's eps.
+    ``k`` is the client-axis length; ``None`` (callers that don't know
+    their K) and every K <= 128 resolve to the legacy dtype-only pair —
+    bucket boundaries live in ``_NEWTON_BUDGET_TABLE``.
     """
-    if jnp.dtype(dtype).itemsize >= 8:
-        return (
-            NEWTON_OUTER_ITERS_X64,
-            NEWTON_INNER_ITERS_X64,
-            NEWTON_GRID_LEVELS_X64,
-        )
-    return (NEWTON_OUTER_ITERS, NEWTON_INNER_ITERS, NEWTON_GRID_LEVELS)
+    wide = jnp.dtype(dtype).itemsize >= 8
+    for k_max, budget_f32, budget_f64 in _NEWTON_BUDGET_TABLE:
+        if k is None or k_max is None or k <= k_max:
+            return budget_f64 if wide else budget_f32
+    raise AssertionError("unreachable: the last budget bucket is open-ended")
 
 
 class PrefixSolution(NamedTuple):
@@ -124,26 +145,41 @@ class PrefixSolution(NamedTuple):
     sel_pos_sorted: Array  # (K,) bool  — winning prefix membership
 
 
-# fn(rho_sorted, n0, delta, v_eta, radio, outer_iters, inner_iters)
+# fn(rho_sorted, n0, delta, v_eta, radio, outer_iters, inner_iters,
+#    *, m_cands=None, rho_hi=None)
+# ``m_cands``/``rho_hi`` support the sort-free ``ranking="topm"`` path of
+# ``repro.core.selection.ocean_p``: only candidates m in [0, m_cands] are
+# evaluated (the rest are provably not the argmax when the winner fits the
+# extracted prefix), on a K-length array whose slots beyond the extracted
+# top-m hold +inf sentinels; ``rho_hi`` is the order-insensitive global
+# ``max(rho)`` the newton backend needs for its shared seeding grid.
 PrefixFn = Callable[..., PrefixSolution]
 # fn(rho, mask, delta, radio, outer_iters, inner_iters) -> (b, cost)
 WaterfillFn = Callable[..., Tuple[Array, Array]]
+# fn(rho, n0, delta, v_eta, radio, *, top_m, block_k) on *client-order* rho
+# -> (m_star, w_star, b_pos, sel_pos); implemented only by sort-free
+# backends that fuse ranking + solve + scatter in one kernel.
+TopmFn = Callable[..., Tuple[Array, Array, Array, Array]]
 
 
 class SolverBackend(NamedTuple):
     name: str
     prefixes: PrefixFn
     waterfill: Optional[WaterfillFn]  # single-mask P4; None => bisect's
+    topm: Optional[TopmFn] = None     # fused sort-free path; None => rank+prefixes
 
 
 _REGISTRY: Dict[str, SolverBackend] = {}
 
 
 def register_solver(
-    name: str, prefixes: PrefixFn, waterfill: Optional[WaterfillFn] = None
+    name: str,
+    prefixes: PrefixFn,
+    waterfill: Optional[WaterfillFn] = None,
+    topm: Optional[TopmFn] = None,
 ) -> SolverBackend:
     """Add a solver backend to the registry (overwrites an existing name)."""
-    backend = SolverBackend(name, prefixes, waterfill)
+    backend = SolverBackend(name, prefixes, waterfill, topm)
     _REGISTRY[name] = backend
     return backend
 
@@ -177,13 +213,21 @@ def _prefix_bisect(
     radio,
     outer_iters: int,
     inner_iters: int,
+    *,
+    m_cands: Optional[int] = None,
+    rho_hi: Optional[Array] = None,
 ) -> PrefixSolution:
     """All K+1 prefixes via the double-bisection ``solve_p4``, vmapped.
 
     This is the original ``ocean_p`` candidate loop moved verbatim behind
     the registry — same ops in the same order, so the default backend
-    stays byte-stable.
+    stays byte-stable.  ``m_cands`` (the sort-free top-m path) clips the
+    candidate sweep to m in [0, m_cands]: every per-candidate op runs on
+    the same K-length array with identical mask slots, so each surviving
+    candidate — and hence the argmax whenever the true winner fits the
+    extracted prefix — is bit-identical to the full sweep.
     """
+    del rho_hi  # bisect brackets per candidate; no shared seeding grid
     from repro.core.bandwidth import solve_p4
 
     dtype = rho_sorted.dtype
@@ -201,7 +245,7 @@ def _prefix_bisect(
         w = jnp.where(feasible, w, -jnp.inf)
         return w, b_sorted, mask
 
-    ms = jnp.arange(K + 1)
+    ms = jnp.arange((K if m_cands is None else m_cands) + 1)
     w_all, b_all, mask_all = jax.vmap(eval_candidate)(ms)
 
     best = jnp.argmax(w_all)
@@ -228,7 +272,8 @@ def b_of_lam_newton(
     resolves the dtype-aware inner budget (``newton_iteration_budgets``).
     """
     if iters is None:
-        iters = newton_iteration_budgets(jnp.result_type(lam, rho))[1]
+        k = jnp.shape(rho)[-1] if jnp.ndim(rho) else None
+        iters = newton_iteration_budgets(jnp.result_type(lam, rho), k)[1]
     rho_safe = jnp.maximum(rho, 1e-30)
     t = -lam / rho_safe            # want f'(b) = t  (t <= 0)
     u = lam / rho_safe             # = -t >= 0
@@ -355,7 +400,7 @@ def waterfill_newton(
     per dtype (wider under ``jax.enable_x64``).
     """
     rho = jnp.asarray(rho)
-    d_outer, d_inner, d_grid = newton_iteration_budgets(rho.dtype)
+    d_outer, d_inner, d_grid = newton_iteration_budgets(rho.dtype, rho.shape[-1])
     outer_iters = d_outer if outer_iters is None else outer_iters
     inner_iters = d_inner if inner_iters is None else inner_iters
     mask = jnp.asarray(mask, bool)
@@ -416,22 +461,35 @@ def _prefix_newton(
     radio,
     outer_iters: int = 0,
     inner_iters: int = 0,
+    *,
+    m_cands: Optional[int] = None,
+    rho_hi: Optional[Array] = None,
 ) -> PrefixSolution:
     """All K+1 prefixes at once: shared-grid seeding + vectorized Newton.
 
     ``outer_iters``/``inner_iters`` are the *bisect* budgets and are
     ignored — Newton's own budgets (`NEWTON_*`) are an order of magnitude
     smaller because each step is superlinear.
+
+    ``m_cands`` clips the candidate lattice to (m_cands+1, K) for the
+    sort-free top-m path: the masked cumulative sums only read slots the
+    extraction filled exactly, and ``rho_hi`` (the order-insensitive
+    global ``max(rho)``) reproduces the full sweep's shared-grid anchor
+    ``lam_hi_glob`` bit-for-bit — weakly monotone rounding makes
+    ``max_m(rho_last_m * c + d) == max(rho) * c + d`` — so every
+    surviving candidate matches the full lattice bitwise.
     """
     del outer_iters, inner_iters
     dtype = rho_sorted.dtype
-    n_outer, n_inner, n_grid = newton_iteration_budgets(dtype)
+    n_outer, n_inner, n_grid = newton_iteration_budgets(
+        dtype, rho_sorted.shape[0]
+    )
     K = rho_sorted.shape[0]
     beta = radio.beta
     b_min = radio.b_min
 
     ranks = jnp.arange(K)
-    ms = jnp.arange(K + 1)
+    ms = jnp.arange((K if m_cands is None else m_cands) + 1)
     mf = ms.astype(dtype)
     pos = ranks >= n0                                        # positive-rho region
     mask = pos[None, :] & (ranks[None, :] < n0 + ms[:, None])  # (K+1, K)
@@ -447,7 +505,13 @@ def _prefix_newton(
     # ---- shared-grid seeding: b(lam) once per level for all K clients,
     # every prefix's residual via one masked cumulative sum  (O(G K)).
     G = n_grid
-    lam_hi_glob = jnp.max(lam_hi)
+    if rho_hi is None:
+        lam_hi_glob = jnp.max(lam_hi)
+    else:
+        # Same scalar op chain as the elementwise lam_hi above: rho >= 0 and
+        # each op is weakly monotone, so this equals max(lam_hi) of the full
+        # sweep bit-for-bit (whose max rho_last is the global max rho).
+        lam_hi_glob = rho_hi * fp_min * (1.0 + 1e-6) + 1e-30
     rho_pos = jnp.where(pos & (rho_sorted > 0), rho_sorted, jnp.inf)
     rho_min_pos = jnp.min(rho_pos)
     b_cap_glob = jnp.maximum(delta, b_min)
@@ -520,11 +584,45 @@ def _prefix_pallas(
     radio,
     outer_iters: int = 0,
     inner_iters: int = 0,
+    *,
+    m_cands: Optional[int] = None,
+    rho_hi: Optional[Array] = None,
 ) -> PrefixSolution:
-    del outer_iters, inner_iters
+    del outer_iters, inner_iters, rho_hi
     from repro.kernels.ocean_p import ocean_p_prefixes_fused
 
-    return ocean_p_prefixes_fused(rho_sorted, n0, delta, v_eta, radio)
+    return ocean_p_prefixes_fused(
+        rho_sorted, n0, delta, v_eta, radio, n_cands=m_cands
+    )
+
+
+# --------------------------------------------------------------------------
+# pallas_tiled — fully sort-free fused kernel (repro.kernels.ocean_p)
+# --------------------------------------------------------------------------
+def _prefix_pallas_tiled(*args, **kwargs) -> PrefixSolution:
+    raise ValueError(
+        "solver 'pallas_tiled' is sort-free: it fuses top-m extraction, "
+        "the candidate solve and the client-order scatter in one kernel "
+        "and never sees a rho-sorted array; run it with ranking='topm' "
+        "(OceanConfig/Scenario ranking field or ocean_p(ranking=...))"
+    )
+
+
+def _topm_pallas_tiled(
+    rho: Array,
+    n0: Array,
+    delta: Array,
+    v_eta: Array,
+    radio,
+    *,
+    top_m: int,
+    block_k: int,
+) -> Tuple[Array, Array, Array, Array]:
+    from repro.kernels.ocean_p import ocean_p_topm_fused
+
+    return ocean_p_topm_fused(
+        rho, n0, delta, v_eta, radio, top_m=top_m, block_k=block_k
+    )
 
 
 register_solver("bisect", _prefix_bisect, waterfill=None)
@@ -532,3 +630,13 @@ register_solver("newton", _prefix_newton, waterfill=waterfill_newton)
 # The fused kernel covers the prefix lattice; single-mask P4 calls reuse
 # the Newton waterfiller (same math, no candidate axis to fuse over).
 register_solver("pallas", _prefix_pallas, waterfill=waterfill_newton)
+# Client-tiled sort-free kernel: on-chip top-m extraction (BLOCK_K
+# two-stage reductions, no argsort, no K-length gather), a compact
+# (top_m,)-shaped candidate solve, and a blockwise one-hot scatter back
+# to client order.  Requires ranking="topm".
+register_solver(
+    "pallas_tiled",
+    _prefix_pallas_tiled,
+    waterfill=waterfill_newton,
+    topm=_topm_pallas_tiled,
+)

@@ -70,6 +70,12 @@ Array = jax.Array
 # with the current tile's K+1-prefix solves.
 DEFAULT_CHUNK = 32
 
+# Auto-chunk VMEM ceiling: chunk * K elements per streamed tile.  At the
+# historical K <= 2048 the default chunk of 32 is untouched; for the
+# K = 10^4..10^5 cells of benchmarks/traj_bench.py the chunk shrinks so a
+# tile (and the 9 output tiles mirroring it) still fits on-chip.
+CHUNK_ELEM_BUDGET = 1 << 16
+
 _N_RADIO_LEAVES = len(TracedRadio._fields)
 
 
@@ -84,6 +90,10 @@ def _traj_kernel(
     num_rounds: int,
     has_radio: bool,
 ):
+    # stream_bf16: the per-round (chunk, K) output refs may be bf16 — the
+    # cast happens only at the final ref store below; the resident q/es
+    # carries and all round math stay full precision, so the *trajectory*
+    # (and the final state) is bit-identical to the unstreamed run.
     """One grid step = ``chunk`` sequential OCEAN rounds on the resident state.
 
     Ref layout (after the closure statics):
@@ -161,10 +171,10 @@ def _traj_kernel(
     q_scr[0] = q
     es_scr[0] = es
     a_ref[...] = a_c
-    b_ref[...] = b_c
-    e_ref[...] = e_c
-    qp_ref[...] = qp_c
-    rho_ref[...] = rho_c
+    b_ref[...] = b_c.astype(b_ref.dtype)
+    e_ref[...] = e_c.astype(e_ref.dtype)
+    qp_ref[...] = qp_c.astype(qp_ref.dtype)
+    rho_ref[...] = rho_c.astype(rho_ref.dtype)
     obj_ref[...] = obj_c
     ns_ref[...] = ns_c
     qf_ref[0] = q
@@ -188,7 +198,8 @@ def ocean_trajectory_fused(
     budget_seq: Array,    # (T, K) per-round budget increments
     radio_seq: Optional[TracedRadio] = None,  # (T,)-leaf radio pytree
     *,
-    chunk: int = DEFAULT_CHUNK,
+    chunk: Optional[int] = None,
+    stream_bf16: bool = False,
     interpret: Optional[bool] = None,
 ) -> Tuple[OceanState, RoundDecision]:
     """Run the whole OCEAN trajectory as one fused kernel.
@@ -201,6 +212,16 @@ def ocean_trajectory_fused(
     over this function prepends cell grid dimensions to the kernel — the
     grid engine's (scenario, seed) axes become batched cells of one
     launch.
+
+    ``chunk=None`` auto-sizes the per-step tile: ``DEFAULT_CHUNK`` (32)
+    for the historical K <= 2048 regime, shrinking as
+    ``CHUNK_ELEM_BUDGET // K`` for large-K cells so the streamed tiles
+    stay within VMEM.  ``stream_bf16=True`` streams the per-round (T, K)
+    float decisions (``b``, ``e``, ``q``, ``rho``) back to HBM in
+    bfloat16 — a 2x cut in decision-trace bandwidth/footprint for
+    K >= 10^5 sweeps.  The VMEM-resident carries stay full precision, so
+    the trajectory itself (selection masks, queue evolution, final
+    state) is unchanged; only the *stored* float traces are quantized.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -210,6 +231,8 @@ def ocean_trajectory_fused(
             f"h2_seq has {T} rounds but cfg.num_rounds={cfg.num_rounds}"
         )
     fdtype = jnp.result_type(h2_seq.dtype, jnp.float32)
+    if chunk is None:
+        chunk = min(DEFAULT_CHUNK, max(1, CHUNK_ELEM_BUDGET // max(K, 1)))
     chunk = max(1, min(chunk, T))
     pad = (-T) % chunk
     n_chunks = (T + pad) // chunk
@@ -233,6 +256,7 @@ def ocean_trajectory_fused(
         return pl.BlockSpec((chunk,), lambda ic: (ic,))
 
     Tp = n_chunks * chunk
+    sdtype = jnp.bfloat16 if stream_bf16 else fdtype
     kernel = functools.partial(
         _traj_kernel,
         cfg=cfg,
@@ -257,10 +281,10 @@ def ocean_trajectory_fused(
         ],
         out_shape=[
             jax.ShapeDtypeStruct((Tp, K), jnp.bool_),
-            jax.ShapeDtypeStruct((Tp, K), fdtype),
-            jax.ShapeDtypeStruct((Tp, K), fdtype),
-            jax.ShapeDtypeStruct((Tp, K), fdtype),
-            jax.ShapeDtypeStruct((Tp, K), fdtype),
+            jax.ShapeDtypeStruct((Tp, K), sdtype),
+            jax.ShapeDtypeStruct((Tp, K), sdtype),
+            jax.ShapeDtypeStruct((Tp, K), sdtype),
+            jax.ShapeDtypeStruct((Tp, K), sdtype),
             jax.ShapeDtypeStruct((Tp,), fdtype),
             jax.ShapeDtypeStruct((Tp,), jnp.int32),
             jax.ShapeDtypeStruct((1, K), fdtype),

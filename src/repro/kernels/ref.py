@@ -63,6 +63,40 @@ def ocean_p_prefixes_ref(rho_sorted, n0, delta, v_eta, radio):
     return _prefix_bisect(rho_sorted, n0, delta, v_eta, radio, 42, 42)
 
 
+def topm_extract_ref(rho, top_m):
+    """Oracle for ``repro.core.selection.topm_extract``: stable argsort.
+
+    The iterative min-extraction must reproduce, bit for bit, the first
+    ``top_m`` entries of a *stable* ascending sort of the positive-rho
+    clients (S0 clients — rho <= the zero tolerance — excluded, exactly
+    as the sort-ranking path partitions them out).  Exhausted slots
+    (fewer than ``top_m`` positive clients) hold ``+inf`` values and
+    index 0, matching the kernel's initialization.
+    """
+    from repro.core.selection import _RHO_ZERO_TOL
+
+    rho = jnp.asarray(rho)
+    k = rho.shape[0]
+    work = jnp.where(rho > _RHO_ZERO_TOL, rho, jnp.inf)
+    order = jnp.argsort(work, stable=True)[:top_m]
+    vals = work[order]
+    alive = jnp.isfinite(vals)
+    return (
+        jnp.where(alive, vals, jnp.inf),
+        jnp.where(alive, order.astype(jnp.int32), 0),
+    )
+
+
+def ocean_p_topm_ref(q, h2, v, eta, radio):
+    """Oracle for the sort-free ranking paths (XLA ``ranking="topm"`` and
+    the ``pallas_tiled`` kernel): the legacy full-argsort ``ocean_p``
+    with the bit-stable bisect backend — itself pinned to brute-force
+    2^K enumeration in tests/test_selection.py."""
+    from repro.core.selection import ocean_p
+
+    return ocean_p(q, h2, v, eta, radio, solver="bisect")
+
+
 def ocean_traj_ref(cfg, h2_seq, v_seq, eta_seq, budget_seq, radio_seq=None):
     """Oracle for the fused whole-trajectory OCEAN kernel: a deliberately
     naive Python-level round loop over ``repro.core.ocean.ocean_round``

@@ -152,7 +152,8 @@ def _check_compatible(scenarios: Sequence[Scenario]) -> Scenario:
         mismatches = [
             f"{field}: {getattr(base, field)!r} != {getattr(sc, field)!r}"
             for field in (
-                "num_rounds", "num_clients", "frame_len", "solver", "traj",
+                "num_rounds", "num_clients", "frame_len", "solver",
+                "ranking", "top_m", "block_k", "traj",
             )
             if getattr(base, field) != getattr(sc, field)
         ]
@@ -179,6 +180,12 @@ class GridEngine:
       solver:    P4/OCEAN-P backend override (``repro.core.solvers``);
                  None keeps the scenarios' ``solver`` field (default
                  ``bisect``, the bit-stable reference).
+      ranking:   rho-ranking override (``sort`` | ``topm``, see
+                 ``repro.core.selection``); with ``top_m``/``block_k``
+                 these join the grid's must-agree compiled-program
+                 statics.  None keeps the scenarios' fields.
+      top_m:     candidate-prefix length override for ``ranking="topm"``.
+      block_k:   client-tile width override for ``solver="pallas_tiled"``.
       traj:      trajectory backend override for OCEAN policies
                  (``scan`` | ``fused``, see ``repro.kernels.ocean_traj``);
                  None keeps the scenarios' ``traj`` field (default
@@ -201,6 +208,9 @@ class GridEngine:
         experiment=None,
         solver: Optional[str] = None,
         shard: Optional[bool] = None,
+        ranking: Optional[str] = None,
+        top_m: Optional[int] = None,
+        block_k: Optional[int] = None,
         traj: Optional[str] = None,
     ):
         if not scenarios or not policies:
@@ -208,11 +218,20 @@ class GridEngine:
         self.scenarios = tuple(scenarios)
         base = _check_compatible(self.scenarios)
         self.cfg: OceanConfig = base.ocean_config()
-        if solver is not None:
+        overrides = {
+            k: v
+            for k, v in (
+                ("solver", solver),
+                ("ranking", ranking),
+                ("top_m", top_m),
+                ("block_k", block_k),
+                ("traj", traj),
+            )
+            if v is not None
+        }
+        if overrides:
             # replace() re-runs __post_init__, failing fast on bad names.
-            self.cfg = dataclasses.replace(self.cfg, solver=solver)
-        if traj is not None:
-            self.cfg = dataclasses.replace(self.cfg, traj=traj)
+            self.cfg = dataclasses.replace(self.cfg, **overrides)
         self._resolved = _resolve_policy_specs(policies)
         self.policies = tuple(pol.name for pol, _ in self._resolved)
         self.experiment = experiment
@@ -524,6 +543,9 @@ def run_grid(
     experiment=None,
     solver: Optional[str] = None,
     shard: Optional[bool] = None,
+    ranking: Optional[str] = None,
+    top_m: Optional[int] = None,
+    block_k: Optional[int] = None,
     traj: Optional[str] = None,
     base_key: Optional[Array] = None,
     learn_keys: Optional[Array] = None,
@@ -532,7 +554,7 @@ def run_grid(
     """One-shot convenience wrapper around ``GridEngine``."""
     return GridEngine(
         scenarios, policies, experiment=experiment, solver=solver, shard=shard,
-        traj=traj,
+        ranking=ranking, top_m=top_m, block_k=block_k, traj=traj,
     ).run(
         seeds, base_key=base_key, learn_keys=learn_keys, learn_seed=learn_seed
     )

@@ -1,0 +1,470 @@
+"""Sort-free top-m ranking: bit-identity with the argsort prefix.
+
+The tentpole contract of the ``ranking="topm"`` path
+(``repro.core.selection``): Theorem 1 only needs the *selected prefix*
+in exact order, so iterative min-extraction over rho must reproduce the
+stable-argsort prefix bit for bit — including adversarial tie clusters
+(the 1e-9 tie-boundary idiom of tests/test_solvers.py) — for every
+registered solver backend.  The ``pallas_tiled`` kernel is oracle-pinned
+(selection-equal, allocation-allclose) against the bisect ground truth,
+plus registry/config/engine plumbing, the per-(dtype, K-bucket) Newton
+budget table, and the bf16 decision-streaming round trip.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    OceanConfig,
+    PolicyParams,
+    RadioParams,
+    Scenario,
+)
+from repro.core.ocean import simulate
+from repro.core.patterns import eta_schedule
+from repro.core.selection import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_TOP_M,
+    RANKINGS,
+    check_ranking,
+    ocean_p,
+    priorities,
+    topm_extract,
+)
+from repro.core.solvers import (
+    NEWTON_GRID_LEVELS,
+    NEWTON_GRID_LEVELS_X64,
+    NEWTON_INNER_ITERS,
+    NEWTON_INNER_ITERS_X64,
+    NEWTON_OUTER_ITERS,
+    NEWTON_OUTER_ITERS_X64,
+    newton_iteration_budgets,
+)
+from repro.kernels.ref import ocean_p_topm_ref, topm_extract_ref
+from repro.sim import GridEngine, run_grid
+
+RADIO = RadioParams()
+SORT_BACKENDS = ("bisect", "newton", "pallas")
+
+SOL_FIELDS = ("a", "b", "objective", "rho", "num_selected")
+
+
+def _tied_inputs(rng, k, tie_eps=1e-9, zero_frac=0.2):
+    """The tests/test_solvers.py tie-boundary idiom: clustered rho values
+    split by +-1e-9 relative jitter, with a random zero fraction (S0)."""
+    base_q = rng.uniform(0.01, 0.2, size=(k + 1) // 2)
+    q = np.repeat(base_q, 2)[:k] * (1.0 + rng.uniform(-tie_eps, tie_eps, size=k))
+    q[rng.random(k) < zero_frac] = 0.0
+    base_h = rng.uniform(0.5, 2.0, size=(k + 1) // 2) * 2.5e-4
+    h2 = np.repeat(base_h, 2)[:k] * (1.0 + rng.uniform(-tie_eps, tie_eps, size=k))
+    return q.astype(np.float32), h2.astype(np.float32)
+
+
+def _assert_solutions_equal(ref, got, msg=""):
+    for f in SOL_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)),
+            err_msg=f"{msg}{f}",
+        )
+
+
+# --------------------------------------------------------------------------
+# topm_extract vs the stable-argsort oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("k,top_m", ((1, 1), (6, 3), (17, 17), (40, 9)))
+def test_topm_extract_matches_stable_argsort(k, top_m):
+    rng = np.random.default_rng(k * 31 + top_m)
+    q, h2 = _tied_inputs(rng, k)
+    rho = priorities(jnp.asarray(q), jnp.asarray(h2))
+    vals, idx = topm_extract(rho, top_m)
+    vals_ref, idx_ref = topm_extract_ref(rho, top_m)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(vals_ref))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
+
+
+def test_topm_extract_exact_duplicates_first_occurrence():
+    """Bit-equal duplicates must extract in index order (the stable-sort
+    tie rule) — jnp.argmin's first-occurrence guarantee."""
+    rho = jnp.asarray([3.0, 1.0, 1.0, 2.0, 1.0, 0.0], jnp.float32)
+    vals, idx = topm_extract(rho, 5)
+    np.testing.assert_array_equal(np.asarray(idx), [1, 2, 4, 3, 0])
+    np.testing.assert_array_equal(np.asarray(vals), [1.0, 1.0, 1.0, 2.0, 3.0])
+
+
+def test_topm_extract_exhausted_slots():
+    """Fewer positive clients than top_m: trailing slots are +inf / index 0."""
+    rho = jnp.asarray([0.0, 5.0, 0.0], jnp.float32)
+    vals, idx = topm_extract(rho, 3)
+    np.testing.assert_array_equal(np.asarray(vals), [5.0, np.inf, np.inf])
+    np.testing.assert_array_equal(np.asarray(idx), [1, 0, 0])
+
+
+def test_topm_extract_property_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        st.lists(
+            st.floats(0.0, 1e6, allow_nan=False, width=32),
+            min_size=1,
+            max_size=48,
+        ),
+        st.integers(1, 48),
+        st.randoms(use_true_random=False),
+    )
+    def check(values, top_m, pyrand):
+        # force tie clusters: duplicate a random subset of entries
+        values = list(values)
+        for _ in range(len(values) // 2):
+            values.append(pyrand.choice(values))
+        rho = jnp.asarray(np.asarray(values, np.float32))
+        top_m = min(top_m, rho.shape[0])
+        vals, idx = topm_extract(rho, top_m)
+        vals_ref, idx_ref = topm_extract_ref(rho, top_m)
+        np.testing.assert_array_equal(np.asarray(vals), np.asarray(vals_ref))
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
+
+    check()
+
+
+# --------------------------------------------------------------------------
+# ranking="topm" is bit-identical to the argsort path (the tentpole claim)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("solver", SORT_BACKENDS)
+@pytest.mark.parametrize("seed", (0, 3))
+def test_topm_full_prefix_bitwise_vs_sort(solver, seed):
+    """top_m >= K: the sort-free path must reproduce the argsort solution
+    bit for bit per backend, including under adversarial rho ties."""
+    rng = np.random.default_rng(seed)
+    for k in (1, 2, 11, 40):
+        q, h2 = _tied_inputs(rng, k)
+        radio = RadioParams(b_min=min(0.005, 0.9 / k))
+        ref = ocean_p(
+            jnp.asarray(q), jnp.asarray(h2), 1e-5, 1.0, radio, solver=solver
+        )
+        got = ocean_p(
+            jnp.asarray(q), jnp.asarray(h2), 1e-5, 1.0, radio,
+            solver=solver, ranking="topm", top_m=k,
+        )
+        _assert_solutions_equal(ref, got, msg=f"{solver} k={k} ")
+
+
+@pytest.mark.parametrize("solver", SORT_BACKENDS)
+def test_topm_exact_when_prefix_fits(solver):
+    """top_m < K but top_m >= m*: still bit-identical — only the selected
+    prefix needs exact order."""
+    rng = np.random.default_rng(7)
+    k = 40
+    q, h2 = _tied_inputs(rng, k)
+    ref = ocean_p(jnp.asarray(q), jnp.asarray(h2), 1e-5, 1.0, RADIO, solver=solver)
+    m_star = int(ref.num_selected)
+    top_m = max(m_star + 2, 1)
+    assert top_m < k
+    got = ocean_p(
+        jnp.asarray(q), jnp.asarray(h2), 1e-5, 1.0, RADIO,
+        solver=solver, ranking="topm", top_m=top_m,
+    )
+    _assert_solutions_equal(ref, got, msg=f"{solver} top_m={top_m} ")
+
+
+def test_topm_saturation_is_deterministic_and_feasible():
+    """top_m < m*: the truncated sweep saturates at the best candidate it
+    can see — deterministic, budget-feasible, never better than the
+    unrestricted optimum."""
+    rng = np.random.default_rng(11)
+    k = 30
+    q = rng.uniform(0.01, 0.05, k).astype(np.float32)
+    h2 = rng.exponential(2.5e-4, k).astype(np.float32)
+    ref = ocean_p(jnp.asarray(q), jnp.asarray(h2), 1e-3, 1.0, RADIO)
+    assert int(ref.num_selected) > 4  # the cap below really binds
+    got = ocean_p(
+        jnp.asarray(q), jnp.asarray(h2), 1e-3, 1.0, RADIO,
+        ranking="topm", top_m=4,
+    )
+    again = ocean_p(
+        jnp.asarray(q), jnp.asarray(h2), 1e-3, 1.0, RADIO,
+        ranking="topm", top_m=4,
+    )
+    _assert_solutions_equal(got, again)
+    assert int(got.num_selected) <= 4
+    assert float(got.objective) <= float(ref.objective)
+    assert float(jnp.sum(got.b)) <= 1.0 + 1e-6
+
+
+# --------------------------------------------------------------------------
+# pallas_tiled — oracle-pinned (compact on-chip solve, not bitwise)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("k,block_k", ((3, 8), (17, 8), (64, 16), (130, 128)))
+def test_pallas_tiled_matches_oracle(k, block_k):
+    rng = np.random.default_rng(k)
+    q, h2 = _tied_inputs(rng, k, tie_eps=1e-4)  # ties beyond f32-kernel eps
+    radio = RadioParams(b_min=min(0.005, 0.9 / k))
+    ref = ocean_p_topm_ref(jnp.asarray(q), jnp.asarray(h2), 1e-5, 1.0, radio)
+    got = ocean_p(
+        jnp.asarray(q), jnp.asarray(h2), 1e-5, 1.0, radio,
+        solver="pallas_tiled", ranking="topm", top_m=k, block_k=block_k,
+    )
+    np.testing.assert_array_equal(np.asarray(ref.a), np.asarray(got.a))
+    np.testing.assert_array_equal(
+        np.asarray(ref.num_selected), np.asarray(got.num_selected)
+    )
+    np.testing.assert_allclose(
+        np.asarray(ref.b), np.asarray(got.b), rtol=2e-4, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        float(ref.objective), float(got.objective), rtol=2e-4
+    )
+
+
+def test_pallas_tiled_requires_topm_ranking():
+    q = jnp.zeros((4,))
+    h2 = jnp.ones((4,))
+    with pytest.raises(ValueError, match="sort-free"):
+        ocean_p(q, h2, 1e-5, 1.0, RADIO, solver="pallas_tiled")
+    with pytest.raises(ValueError, match="sort-free"):
+        OceanConfig(num_clients=4, num_rounds=10, radio=RADIO, solver="pallas_tiled")
+    with pytest.raises(ValueError, match="sort-free"):
+        Scenario(num_clients=4, num_rounds=10, solver="pallas_tiled")
+    # and the combination that *is* allowed constructs fine
+    OceanConfig(
+        num_clients=4, num_rounds=10, radio=RADIO,
+        solver="pallas_tiled", ranking="topm",
+    )
+
+
+# --------------------------------------------------------------------------
+# trajectory-level bit-identity: every policy x radio x solver (+ ties)
+# --------------------------------------------------------------------------
+def test_topm_grid_bit_identical_every_policy_and_radio():
+    from test_traj import (
+        ALL_POLICIES,
+        TRACE_FIELDS,
+        K,
+        mixed_radio_scenarios,
+    )
+
+    scenarios = mixed_radio_scenarios()
+    policies = [(p, PolicyParams(v=1e-5)) for p in ALL_POLICIES]
+    seeds = (0, 7)
+    ref = run_grid(scenarios, policies, seeds=seeds)
+    got = run_grid(scenarios, policies, seeds=seeds, ranking="topm", top_m=K)
+    for f in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)), err_msg=f
+        )
+
+
+@pytest.mark.parametrize("solver", SORT_BACKENDS)
+@pytest.mark.parametrize("traj", ("scan", "fused"))
+def test_topm_simulate_bit_identical_per_solver_and_traj(solver, traj):
+    """ranking="topm" through simulate(): bit-identical to the sort path
+    for every solver backend on both trajectory backends, with tie-heavy
+    channels (duplicated client columns => tied rho every round)."""
+    T, k = 20, 8
+    h2_half = jax.random.exponential(jax.random.PRNGKey(3), (T, k // 2)) * 2.5e-4
+    h2 = jnp.repeat(h2_half, 2, axis=1)  # adversarial: every column tied
+    eta = eta_schedule("uniform", T)
+    cfg_sort = OceanConfig(
+        num_clients=k, num_rounds=T, radio=RADIO, frame_len=7,
+        solver=solver, traj=traj,
+    )
+    cfg_topm = dataclasses.replace(cfg_sort, ranking="topm", top_m=k)
+    ref_state, ref_decs = simulate(cfg_sort, h2, eta, 1e-5)
+    got_state, got_decs = simulate(cfg_topm, h2, eta, 1e-5)
+    for f in ref_decs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref_decs, f)),
+            np.asarray(getattr(got_decs, f)),
+            err_msg=f"decs.{f}",
+        )
+    np.testing.assert_array_equal(np.asarray(ref_state.q), np.asarray(got_state.q))
+
+
+def test_pallas_tiled_scan_vs_fused_bitwise():
+    """The fused trajectory re-traces the round body, so scan vs fused is
+    bit-identical *even for* the oracle-pinned pallas_tiled solver."""
+    T, k = 12, 9
+    cfg = OceanConfig(
+        num_clients=k, num_rounds=T, radio=RADIO, frame_len=5,
+        solver="pallas_tiled", ranking="topm", top_m=k, block_k=8,
+    )
+    h2 = jax.random.exponential(jax.random.PRNGKey(5), (T, k)) * 2.5e-4
+    eta = eta_schedule("uniform", T)
+    ref_state, ref_decs = simulate(cfg, h2, eta, 1e-5)
+    got_state, got_decs = simulate(cfg, h2, eta, 1e-5, traj="fused")
+    for f in ref_decs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref_decs, f)),
+            np.asarray(getattr(got_decs, f)),
+            err_msg=f"decs.{f}",
+        )
+    np.testing.assert_array_equal(np.asarray(ref_state.q), np.asarray(got_state.q))
+
+
+# --------------------------------------------------------------------------
+# bf16 decision streaming (fused backend)
+# --------------------------------------------------------------------------
+def test_stream_bf16_roundtrip():
+    """bf16 streaming quantizes only the stored float traces: the boolean
+    selections, int counts, and the final state (the VMEM carries) stay
+    bit-identical; float traces round-trip within bf16 precision."""
+    T, k = 20, 6
+    cfg = OceanConfig(num_clients=k, num_rounds=T, radio=RADIO, frame_len=8)
+    h2 = jax.random.exponential(jax.random.PRNGKey(2), (T, k)) * 2.5e-4
+    eta = eta_schedule("uniform", T)
+    ref_state, ref_decs = simulate(cfg, h2, eta, 1e-5, traj="fused")
+    got_state, got_decs = simulate(
+        cfg, h2, eta, 1e-5, traj="fused", stream_bf16=True
+    )
+    np.testing.assert_array_equal(np.asarray(ref_decs.a), np.asarray(got_decs.a))
+    np.testing.assert_array_equal(
+        np.asarray(ref_decs.num_selected), np.asarray(got_decs.num_selected)
+    )
+    np.testing.assert_array_equal(np.asarray(ref_state.q), np.asarray(got_state.q))
+    np.testing.assert_array_equal(
+        np.asarray(ref_state.energy_spent), np.asarray(got_state.energy_spent)
+    )
+    for f in ("b", "e", "q", "rho"):
+        got = getattr(got_decs, f)
+        assert got.dtype == jnp.bfloat16, f
+        # bf16 has an 8-bit mantissa => exact round-trip within 2^-8
+        np.testing.assert_allclose(
+            np.asarray(getattr(ref_decs, f), np.float32),
+            np.asarray(got, np.float32),
+            rtol=2.0 ** -8,
+            atol=1e-9,
+            err_msg=f,
+        )
+
+
+def test_stream_bf16_rejected_on_scan():
+    cfg = OceanConfig(num_clients=4, num_rounds=10, radio=RADIO)
+    with pytest.raises(ValueError, match="fused"):
+        simulate(
+            cfg,
+            jnp.ones((10, 4)),
+            eta_schedule("uniform", 10),
+            1e-5,
+            stream_bf16=True,
+        )
+
+
+# --------------------------------------------------------------------------
+# registry / config / engine plumbing
+# --------------------------------------------------------------------------
+def test_unknown_ranking_rejected_everywhere():
+    assert RANKINGS == ("sort", "topm")
+    with pytest.raises(ValueError, match="unknown ranking"):
+        check_ranking("heap")
+    with pytest.raises(ValueError, match="unknown ranking"):
+        OceanConfig(num_clients=4, num_rounds=10, radio=RADIO, ranking="heap")
+    with pytest.raises(ValueError, match="unknown ranking"):
+        Scenario(num_clients=4, num_rounds=10, ranking="heap")
+    with pytest.raises(ValueError, match="unknown ranking"):
+        GridEngine(
+            [Scenario(num_clients=4, num_rounds=10)], ["ocean-u"], ranking="heap"
+        )
+    with pytest.raises(ValueError, match="unknown ranking"):
+        ocean_p(jnp.zeros((4,)), jnp.ones((4,)), 1e-5, 1.0, RADIO, ranking="heap")
+    with pytest.raises(ValueError, match="top_m"):
+        OceanConfig(num_clients=4, num_rounds=10, radio=RADIO, top_m=0)
+    with pytest.raises(ValueError, match="block_k"):
+        OceanConfig(num_clients=4, num_rounds=10, radio=RADIO, block_k=-1)
+
+
+def test_scenario_ranking_serialization_roundtrip():
+    sc = Scenario(
+        num_clients=4, num_rounds=10, ranking="topm", top_m=32, block_k=64
+    )
+    back = Scenario.from_json(sc.to_json())
+    assert back.ranking == "topm"
+    assert back.top_m == 32
+    assert back.block_k == 64
+    cfg = sc.ocean_config()
+    assert (cfg.ranking, cfg.top_m, cfg.block_k) == ("topm", 32, 64)
+    # defaults omitted => pre-ranking payloads stay byte-stable
+    d = Scenario(num_clients=4, num_rounds=10).to_dict()
+    assert "ranking" not in d and "top_m" not in d and "block_k" not in d
+    assert Scenario(num_clients=4, num_rounds=10).top_m == DEFAULT_TOP_M
+    assert Scenario(num_clients=4, num_rounds=10).block_k == DEFAULT_BLOCK_K
+
+
+def test_grid_rejects_mixed_ranking_scenarios():
+    scenarios = [
+        Scenario(name="a", num_clients=4, num_rounds=10),
+        Scenario(name="b", num_clients=4, num_rounds=10, ranking="topm"),
+    ]
+    with pytest.raises(ValueError, match="grid-incompatible"):
+        GridEngine(scenarios, ["ocean-u"])
+    mixed_m = [
+        Scenario(name="a", num_clients=4, num_rounds=10, ranking="topm", top_m=8),
+        Scenario(name="b", num_clients=4, num_rounds=10, ranking="topm", top_m=16),
+    ]
+    with pytest.raises(ValueError, match="grid-incompatible"):
+        GridEngine(mixed_m, ["ocean-u"])
+
+
+def test_engine_ranking_override_replaces_scenario_default():
+    sc = Scenario(num_clients=4, num_rounds=10)
+    engine = GridEngine(
+        [sc], ["ocean-u"],
+        solver="pallas_tiled", ranking="topm", top_m=4, block_k=8,
+    )
+    assert engine.cfg.solver == "pallas_tiled"
+    assert engine.cfg.ranking == "topm"
+    assert (engine.cfg.top_m, engine.cfg.block_k) == (4, 8)
+
+
+# --------------------------------------------------------------------------
+# Newton budgets per (dtype, K-bucket) — the small-fix satellite
+# --------------------------------------------------------------------------
+def test_newton_budget_table_regression():
+    """K <= 128 (and K=None callers) must resolve to the legacy dtype-only
+    pair — the guarantee that keeps every historical K <= 100 selection
+    bit-identical."""
+    legacy_f32 = (NEWTON_OUTER_ITERS, NEWTON_INNER_ITERS, NEWTON_GRID_LEVELS)
+    legacy_f64 = (
+        NEWTON_OUTER_ITERS_X64, NEWTON_INNER_ITERS_X64, NEWTON_GRID_LEVELS_X64
+    )
+    for k in (None, 1, 42, 100, 128):
+        assert newton_iteration_budgets(jnp.float32, k) == legacy_f32, k
+        assert newton_iteration_budgets(jnp.float64, k) == legacy_f64, k
+    # bigger buckets only ever add iterations, monotonically
+    prev32, prev64 = legacy_f32, legacy_f64
+    for k in (129, 4096, 4097, 10**6):
+        b32 = newton_iteration_budgets(jnp.float32, k)
+        b64 = newton_iteration_budgets(jnp.float64, k)
+        assert all(a >= b for a, b in zip(b32, prev32)), k
+        assert all(a >= b for a, b in zip(b64, prev64)), k
+        assert all(a > b for a, b in zip(b64, b32)), k
+        prev32, prev64 = b32, b64
+
+
+def test_newton_k100_selection_bit_identical_to_legacy_budgets():
+    """Calling newton through ocean_p at K=100 must produce the same
+    bits as an explicit legacy-budget invocation of the prefix solver."""
+    from repro.core.selection import _RHO_ZERO_TOL
+    from repro.core.solvers import _prefix_newton
+
+    rng = np.random.default_rng(13)
+    q, h2 = _tied_inputs(rng, 100)
+    radio = RadioParams(b_min=0.005)
+    got = ocean_p(
+        jnp.asarray(q), jnp.asarray(h2), 1e-5, 1.0, radio, solver="newton"
+    )
+    rho = priorities(jnp.asarray(q), jnp.asarray(h2))
+    order = jnp.argsort(rho)
+    rho_sorted = rho[order]
+    n0 = jnp.sum(rho_sorted <= _RHO_ZERO_TOL)
+    delta = 1.0 - n0.astype(rho.dtype) * radio.b_min
+    sol = _prefix_newton(rho_sorted, n0, delta, jnp.asarray(1e-5), radio, 0, 0)
+    np.testing.assert_array_equal(
+        np.asarray(got.num_selected) - np.asarray(n0), np.asarray(sol.m_star)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.objective), np.asarray(sol.w_star)
+    )
