@@ -16,6 +16,7 @@ import numpy as np
 from repro.core import OceanConfig, RadioParams, Scenario
 from repro.fed import synthetic_image_classification
 from repro.fed.loop import WflnExperiment, make_classification_task
+from repro.obs.spans import wall_span
 
 # Paper §VI: B=10 MHz, N0=1e-12 W, tau=300 ms, L=3.4e5 bits, b_min=0.02,
 # H_k=0.15 J, T=300 rounds, K=10 clients, 100 samples each.
@@ -83,12 +84,28 @@ def image_experiment(seed=0, dim=32):
 
 
 class Timer:
+    """Wall-clock timer.  ``Timer("phase")`` additionally records the
+    elapsed time as a named span (``repro.obs.spans.SPANS`` — surfaced in
+    the run manifest) and opens a profiler ``TraceAnnotation`` so
+    ``--profile`` traces show the phase as a named region instead of one
+    anonymous blob.  Bare ``Timer()`` behaves exactly as before."""
+
+    def __init__(self, name=None):
+        self.name = name
+        self._cm = None
+
     def __enter__(self):
+        if self.name is not None:
+            self._cm = wall_span(self.name)
+            self._cm.__enter__()
         self.t0 = time.time()
         return self
 
     def __exit__(self, *a):
         self.elapsed = time.time() - self.t0
+        if self._cm is not None:
+            self._cm.__exit__(*a)
+            self._cm = None
 
 
 # Every emit() row is also collected here so the driver can dump

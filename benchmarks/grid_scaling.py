@@ -52,22 +52,28 @@ def run() -> bool:
     grid_cells = len(POLICIES) * len(scenarios) * len(SEEDS)
     emit("grid_scaling", "grid_cells", grid_cells, "3 policies x 2 scenarios x 4 seeds")
 
-    with Timer() as t_legacy:
+    with Timer("grid_scaling/legacy_loop") as t_legacy:
         legacy = _legacy_loop(scenarios)
     emit("grid_scaling", "legacy_loop_s", t_legacy.elapsed, "per-cell tracing")
 
     engine = GridEngine(
         scenarios, [(n, PolicyParams(v=1e-5)) for n in POLICIES]
     )
-    with Timer() as t_first:
+    with Timer("grid_scaling/engine_first_call") as t_first:
         res = engine.run(SEEDS)
         jax.block_until_ready(res.a)
     emit("grid_scaling", "engine_first_call_s", t_first.elapsed, "includes compile")
 
-    with Timer() as t_steady:
+    with Timer("grid_scaling/engine_steady") as t_steady:
         res2 = engine.run(SEEDS)
         jax.block_until_ready(res2.a)
     emit("grid_scaling", "engine_steady_s", t_steady.elapsed, "executable reuse")
+    emit(
+        "grid_scaling",
+        "engine_steady_rounds_per_s",
+        grid_cells * T_ / max(t_steady.elapsed, 1e-9),
+        "cells x T / steady (baseline-gated)",
+    )
 
     speedup_first = t_legacy.elapsed / max(t_first.elapsed, 1e-9)
     speedup_steady = t_legacy.elapsed / max(t_steady.elapsed, 1e-9)

@@ -56,14 +56,25 @@ def _scenarios():
 def run() -> bool:
     ok = True
     scenarios = _scenarios()
-    with Timer() as t:
+    with Timer("radio_sweep/first_call") as t:
         eng = GridEngine(
             scenarios, [(n, PolicyParams(v=V_DEFAULT)) for n in POLICIES]
         )
         res = eng.run(SEEDS)
         res.a.block_until_ready()
-    emit("radio_sweep", "grid_cells", len(POLICIES) * len(scenarios) * len(SEEDS))
+    n_cells = len(POLICIES) * len(scenarios) * len(SEEDS)
+    emit("radio_sweep", "grid_cells", n_cells)
     emit("radio_sweep", "grid_runtime_s", t.elapsed, "compile + run, one program")
+
+    with Timer("radio_sweep/steady") as t_steady:
+        res_steady = eng.run(SEEDS)
+        res_steady.a.block_until_ready()
+    emit(
+        "radio_sweep",
+        "grid_steady_rounds_per_s",
+        n_cells * T_ / max(t_steady.elapsed, 1e-9),
+        "cells x T / steady (baseline-gated)",
+    )
 
     cache_one = not hasattr(eng._fn, "_cache_size") or eng._fn._cache_size() == 1
     ok &= claim(

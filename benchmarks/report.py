@@ -1,0 +1,371 @@
+"""Render run manifests and metrics-on grid results as markdown.
+
+Two renderers behind one CLI:
+
+* ``render_manifest`` — the JSONL run manifests that ``benchmarks/run.py``
+  appends (``repro.obs.manifest``): per-run module tables, claim
+  outcomes, baseline comparisons, and drained wall-clock spans.
+* ``render_grid`` — a metrics-on ``GridResult`` (``repro.sim.run_grid``
+  with a ``repro.obs.MetricsSpec``): budget-violation tables, per-metric
+  sparklines, and client-by-round selection matrices.
+
+    PYTHONPATH=src python -m benchmarks.report --manifest results/manifest.jsonl
+    PYTHONPATH=src python -m benchmarks.report --demo -o REPORT.md
+
+Pure stdlib + numpy; the grid renderer only touches host arrays, so it
+works on any ``GridResult`` regardless of backend.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+SPARK_CHARS = "▁▂▃▄▅▆▇█"
+
+# selection-matrix shades: fraction of the time bucket the client was in
+SHADE_CHARS = " ░▒▓█"
+
+
+def _fmt(x: float) -> str:
+    """Compact numeric formatting for table cells."""
+    if not np.isfinite(x):
+        return str(x)
+    if x == 0:
+        return "0"
+    if abs(x) >= 1000 or abs(x) < 0.01:
+        return f"{x:.3g}"
+    return f"{x:.3f}".rstrip("0").rstrip(".")
+
+
+def sparkline(values: Sequence[float], width: int = 60) -> str:
+    """Unicode sparkline of a 1-D series, downsampled to ``width`` buckets.
+
+    Non-finite values render as spaces; a constant series renders at the
+    mid level so it is visibly "flat" rather than empty.
+    """
+    v = np.asarray(values, dtype=np.float64).ravel()
+    if v.size == 0:
+        return ""
+    if v.size > width:
+        # bucket means (last bucket may be shorter)
+        edges = np.linspace(0, v.size, width + 1).astype(int)
+        v = np.array([
+            v[a:b].mean() if b > a else np.nan for a, b in zip(edges, edges[1:])
+        ])
+    finite = np.isfinite(v)
+    if not finite.any():
+        return " " * v.size
+    lo, hi = v[finite].min(), v[finite].max()
+    span = hi - lo
+    out = []
+    for x in v:
+        if not np.isfinite(x):
+            out.append(" ")
+        elif span == 0:
+            out.append(SPARK_CHARS[len(SPARK_CHARS) // 2])
+        else:
+            idx = int((x - lo) / span * (len(SPARK_CHARS) - 1))
+            out.append(SPARK_CHARS[idx])
+    return "".join(out)
+
+
+def selection_matrix(
+    a: np.ndarray, max_clients: int = 24, width: int = 60
+) -> List[str]:
+    """Client-by-round selection matrix for one (T, K) boolean trace.
+
+    One row per client (clipped to ``max_clients``), time downsampled to
+    ``width`` buckets; each cell's shade is the fraction of the bucket's
+    rounds the client was selected.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    T, K = a.shape
+    edges = np.linspace(0, T, width + 1).astype(int) if T > width else None
+    lines = []
+    for k in range(min(K, max_clients)):
+        if edges is None:
+            frac = a[:, k]
+        else:
+            frac = np.array([
+                a[s:e, k].mean() if e > s else 0.0
+                for s, e in zip(edges, edges[1:])
+            ])
+        cells = "".join(
+            SHADE_CHARS[min(int(f * (len(SHADE_CHARS) - 1) + 0.999),
+                            len(SHADE_CHARS) - 1)]
+            for f in frac
+        )
+        lines.append(f"client {k:3d} |{cells}| {_fmt(a[:, k].mean())}")
+    if K > max_clients:
+        lines.append(f"... {K - max_clients} more clients elided ...")
+    return lines
+
+
+def metric_lines(metrics: Dict[str, Any], width: int = 60) -> List[str]:
+    """Summarize one telemetry dict ("<collector>/<reduction>" -> array).
+
+    Leading grid axes (anything before the metric's own shape) should
+    already be reduced or indexed away by the caller; this renders
+    whatever remains: full traces and histograms as sparklines, vectors
+    and scalars as min/mean/max stats.
+    """
+    lines = []
+    for key in sorted(metrics):
+        v = np.asarray(metrics[key], dtype=np.float64)
+        if v.ndim == 0:
+            lines.append(f"{key:32s} {_fmt(float(v))}")
+            continue
+        if v.ndim == 2:  # e.g. a (T, K) full trace: per-round mean series
+            v = v.mean(axis=-1)
+        if key.endswith("/full_trace") or key.endswith("/histogram"):
+            stats = (
+                f"min={_fmt(v.min())} mean={_fmt(v.mean())} "
+                f"max={_fmt(v.max())} last={_fmt(v[-1])}"
+            )
+            lines.append(f"{key:32s} {sparkline(v, width)}  {stats}")
+        else:
+            lines.append(
+                f"{key:32s} min={_fmt(v.min())} mean={_fmt(v.mean())} "
+                f"max={_fmt(v.max())}"
+            )
+    return lines
+
+
+def violation_table(result) -> List[str]:
+    """Energy-budget violation table for a ``GridResult``.
+
+    One row per (policy, scenario): mean selected clients per round, mean
+    per-client energy spent vs realized budget, and the fraction of
+    (seed, client) cells that overspent their budget by > 1%.
+    """
+    ns = np.asarray(result.num_selected, dtype=np.float64)  # (P, S, N, T)
+    spent = np.asarray(result.energy_spent, dtype=np.float64)  # (P, S, N, K)
+    total = (
+        np.asarray(result.budget_total, dtype=np.float64)
+        if result.budget_total is not None
+        else None
+    )
+    lines = [
+        "| policy | scenario | mean #sel | energy mean (J) | budget mean (J)"
+        " | violations |",
+        "|---|---|---|---|---|---|",
+    ]
+    for p, pol in enumerate(result.policies):
+        for s, sc in enumerate(result.scenarios):
+            if total is None:
+                bud, viol = "n/a", "n/a"
+            else:
+                bud = _fmt(total[s].mean())
+                viol_frac = (spent[p, s] > total[s] * 1.01).mean()
+                viol = f"{100 * viol_frac:.1f}%"
+            lines.append(
+                f"| {pol} | {sc} | {_fmt(ns[p, s].mean())} "
+                f"| {_fmt(spent[p, s].mean())} | {bud} | {viol} |"
+            )
+    return lines
+
+
+def render_grid(result, title: str = "Grid report", width: int = 60) -> str:
+    """Markdown report for one ``GridResult`` (metrics optional).
+
+    Renders the violation table for every (policy, scenario) pair, then —
+    when the grid ran with a ``MetricsSpec`` — each policy's telemetry
+    (grid axes mean-reduced) and the first cell's selection matrix.
+    """
+    P = len(result.policies)
+    lines = [f"# {title}", ""]
+    lines += [
+        f"- policies: {', '.join(result.policies)}",
+        f"- scenarios: {', '.join(result.scenarios)}",
+        f"- seeds: {', '.join(str(s) for s in result.seeds)}",
+        "",
+        "## Energy budgets",
+        "",
+    ]
+    lines += violation_table(result)
+    mets = result.metrics if result.metrics is not None else (None,) * P
+    for p, pol in enumerate(result.policies):
+        lines += ["", f"## {pol}", ""]
+        if mets[p] is not None:
+            # mean over the (S, N) grid axes -> the metric's own shape
+            reduced = {
+                k: np.asarray(v, dtype=np.float64).mean(axis=(0, 1))
+                for k, v in mets[p].items()
+            }
+            lines += ["```"] + metric_lines(reduced, width) + ["```", ""]
+        lines += [
+            f"selection matrix ({result.scenarios[0]}, seed "
+            f"{result.seeds[0]}; right column = mean selection rate):",
+            "",
+            "```",
+            *selection_matrix(np.asarray(result.a[p, 0, 0]), width=width),
+            "```",
+        ]
+    return "\n".join(lines) + "\n"
+
+
+def render_manifest(records: Sequence[Dict[str, Any]]) -> str:
+    """Markdown report for a JSONL run manifest (possibly many runs)."""
+    from repro.obs.manifest import runs_in_manifest
+
+    lines = ["# Benchmark run report", ""]
+    for run_id, recs in runs_in_manifest(records).items():
+        head = next((r for r in recs if r.get("record") == "run"), {})
+        summary = next((r for r in recs if r.get("record") == "summary"), {})
+        modules = [r for r in recs if r.get("record") == "module"]
+        lines += [
+            f"## run `{run_id}`",
+            "",
+            f"- argv: `{' '.join(head.get('argv', [])) or '(none)'}`",
+            f"- config hash: `{head.get('config_hash', '?')}` — jax "
+            f"{head.get('jax_version', '?')} on {head.get('backend', '?')} "
+            f"({head.get('device_count', '?')}x "
+            f"{head.get('device_kind', '?')})",
+        ]
+        if head.get("profile_dir"):
+            lines.append(f"- profiler trace: `{head['profile_dir']}`")
+        if summary:
+            status = "PASS" if summary.get("ok") else "FAIL"
+            lines.append(
+                f"- outcome: **{status}** — {len(modules)} modules in "
+                f"{_fmt(float(summary.get('total_runtime_s', 0.0)))}s"
+                + (
+                    f"; failed: {', '.join(summary['failed'])}"
+                    if summary.get("failed")
+                    else ""
+                )
+            )
+        lines += [
+            "",
+            "| module | ok | runtime (s) | claims | baseline | rows |",
+            "|---|---|---|---|---|---|",
+        ]
+        for m in modules:
+            claims = m.get("claims", [])
+            n_pass = sum(1 for c in claims if c.get("ok"))
+            base = m.get("baseline", [])
+            regressions = [
+                b["metric"] for b in base if b.get("status") == "REGRESSION"
+            ]
+            base_cell = (
+                "n/a"
+                if not base
+                else (
+                    f"{len(base)} ok"
+                    if not regressions
+                    else f"REGRESSION: {', '.join(regressions)}"
+                )
+            )
+            lines.append(
+                f"| {m['name']} | {'✓' if m.get('ok') else '✗'} "
+                f"| {_fmt(float(m.get('runtime_s', 0.0)))} "
+                f"| {n_pass}/{len(claims)} | {base_cell} "
+                f"| {m.get('num_rows', 0)} |"
+            )
+        failed_claims = [
+            (m["name"], c.get("description"))
+            for m in modules
+            for c in m.get("claims", [])
+            if not c.get("ok")
+        ]
+        if failed_claims:
+            lines += ["", "failed claims:", ""]
+            lines += [f"- `{n}`: {d}" for n, d in failed_claims]
+        spans = [
+            (m["name"], s)
+            for m in modules
+            for s in m.get("spans", [])
+        ]
+        if spans:
+            lines += [
+                "",
+                "| span | count | total (s) | mean (s) |",
+                "|---|---|---|---|",
+            ]
+            for mod, s in spans:
+                lines.append(
+                    f"| {mod}:{s['name']} | {s['count']} "
+                    f"| {_fmt(float(s['total_s']))} "
+                    f"| {_fmt(float(s['mean_s']))} |"
+                )
+        lines.append("")
+    return "\n".join(lines)
+
+
+def _demo_report() -> str:
+    """A small metrics-on grid rendered end to end (CLI ``--demo``)."""
+    from repro.core import EnvSpec, PolicyParams, Scenario
+    from repro.obs import MetricsSpec
+    from repro.sim import run_grid
+
+    spec = MetricsSpec.of(
+        "queue:full_trace",
+        "lyapunov:full_trace",
+        "num_selected:full_trace",
+        "energy_headroom:last",
+        "queue:histogram",
+        "selection_count:last",
+    )
+    scenarios = [
+        Scenario(name="stationary", num_rounds=60, num_clients=8),
+        Scenario(
+            name="gauss_markov",
+            num_rounds=60,
+            num_clients=8,
+            env=EnvSpec(channel="gauss_markov", channel_params={"rho": 0.8}),
+        ),
+    ]
+    res = run_grid(
+        scenarios,
+        [("ocean-a", PolicyParams(v=1e-5)), "amo"],
+        seeds=[0, 1],
+        metrics=spec,
+    )
+    return render_grid(res, title="Demo grid (metrics-on)")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--manifest",
+        metavar="PATH",
+        default=None,
+        help="render a JSONL run manifest written by benchmarks/run.py",
+    )
+    ap.add_argument(
+        "--demo",
+        action="store_true",
+        help="run a small metrics-on grid and render it (no manifest needed)",
+    )
+    ap.add_argument(
+        "-o",
+        "--output",
+        default=None,
+        help="write the markdown here instead of stdout",
+    )
+    args = ap.parse_args(argv)
+    if not args.manifest and not args.demo:
+        ap.error("nothing to render: pass --manifest PATH and/or --demo")
+
+    parts = []
+    if args.manifest:
+        from repro.obs.manifest import read_manifest
+
+        parts.append(render_manifest(read_manifest(args.manifest)))
+    if args.demo:
+        parts.append(_demo_report())
+    doc = "\n".join(parts)
+    if args.output:
+        with open(args.output, "w") as f:
+            f.write(doc)
+        print(f"# report written to {args.output}", file=sys.stderr)
+    else:
+        print(doc)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

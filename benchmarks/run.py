@@ -24,6 +24,20 @@ trace starts and ``--profile-steps M`` stops it after M traced modules
 one module's regression is under investigation, e.g.::
 
     python -m benchmarks.run --only traj_bench --profile /tmp/jtrace
+
+Every module runs under a named ``TraceAnnotation`` (``bench/<module>``)
+and the in-graph ops carry ``jax.named_scope`` labels (``ocean/rank``,
+``ocean/p4_solve/<backend>``, ``traj/chunk_io``, ...), so the trace shows
+named regions per module and per algorithm phase instead of one
+anonymous blob.
+
+Every invocation also appends a structured *run manifest* — JSONL records
+with the config hash, jax/device info, per-module claim outcomes,
+baseline comparisons, drained wall-clock spans, and emitted BENCH files
+(schema: ``repro.obs.manifest``).  Default path is
+``<json-dir>/manifest.jsonl`` (or ``./manifest.jsonl`` without
+``--json-dir``); override with ``--manifest PATH``, disable with
+``--no-manifest``.  Render one with ``python -m benchmarks.report``.
 """
 from __future__ import annotations
 
@@ -55,7 +69,7 @@ BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 BASELINE_METRIC_SUFFIX = "_rounds_per_s"
 
 
-def check_baseline(name: str, rows, baseline_dir: str, tolerance: float) -> bool:
+def check_baseline(name: str, rows, baseline_dir: str, tolerance: float):
     """Gate this run's throughput rows against the committed baseline.
 
     Compares every ``*_rounds_per_s`` metric to the same metric in
@@ -64,10 +78,14 @@ def check_baseline(name: str, rows, baseline_dir: str, tolerance: float) -> bool
     Metrics missing on either side are reported but don't fail (the
     lattice may legitimately grow/shrink across PRs).  No baseline file
     => silently passes (modules opt in by committing one).
+
+    Returns ``(ok, records)`` where ``records`` is a manifest-ready list
+    of ``{"metric", "status", "note"}`` dicts mirroring the printed rows.
     """
     path = os.path.join(baseline_dir, f"BENCH_{name}.json")
+    records: list = []
     if not os.path.exists(path):
-        return True
+        return True, records
     with open(path) as f:
         base_rows = json.load(f)["rows"]
     base = {
@@ -82,14 +100,16 @@ def check_baseline(name: str, rows, baseline_dir: str, tolerance: float) -> bool
             continue
         if metric not in base:
             print(f"{name},BASELINE_NEW,{metric},no recorded baseline yet")
+            records.append(
+                {"metric": metric, "status": "NEW", "note": "no baseline"}
+            )
             continue
         cur, ref = float(r["value"]), base[metric]
         ratio = cur / max(ref, 1e-12)
         status = "OK" if ratio >= 1.0 - tolerance else "REGRESSION"
-        print(
-            f"{name},BASELINE_{status},{metric},"
-            f"{cur:.6g} vs {ref:.6g} ({ratio:.2f}x)"
-        )
+        note = f"{cur:.6g} vs {ref:.6g} ({ratio:.2f}x)"
+        print(f"{name},BASELINE_{status},{metric},{note}")
+        records.append({"metric": metric, "status": status, "note": note})
         if status == "REGRESSION":
             ok = False
     missing = sorted(
@@ -97,7 +117,10 @@ def check_baseline(name: str, rows, baseline_dir: str, tolerance: float) -> bool
     )
     for m in missing:
         print(f"{name},BASELINE_GONE,{m},metric no longer emitted")
-    return ok
+        records.append(
+            {"metric": m, "status": "GONE", "note": "metric no longer emitted"}
+        )
+    return ok, records
 
 
 def _enable_compilation_cache() -> None:
@@ -181,6 +204,17 @@ def main() -> int:
         default=None,
         help="number of modules to trace (default: through the end)",
     )
+    ap.add_argument(
+        "--manifest",
+        metavar="PATH",
+        default=None,
+        help="JSONL run-manifest path (default: <json-dir>/manifest.jsonl)",
+    )
+    ap.add_argument(
+        "--no-manifest",
+        action="store_true",
+        help="skip writing the JSONL run manifest",
+    )
     args = ap.parse_args()
 
     selected = [n for n in BENCHMARKS if not args.only or args.only in n]
@@ -212,6 +246,22 @@ def main() -> int:
             jax.profiler.start_trace(args.profile)
             profiling = True
 
+    manifest = None
+    if not args.no_manifest:
+        from repro.obs.manifest import ManifestWriter
+
+        manifest_path = args.manifest
+        if manifest_path is None:
+            manifest_path = os.path.join(
+                args.json_dir or ".", "manifest.jsonl"
+            )
+        manifest = ManifestWriter(
+            manifest_path, argv=sys.argv[1:], config=vars(args)
+        )
+        manifest.start(profile_dir=args.profile)
+
+    from repro.obs.spans import SPANS, wall_span
+
     print("benchmark,metric,value,note")
     failures = []
     idx = -1
@@ -221,9 +271,11 @@ def main() -> int:
         idx += 1
         _profile_tick(idx)
         rows_before = len(common.ROWS)
+        SPANS.drain()  # a clean slate: spans below belong to this module
         t0 = time.time()
         try:
-            ok = fn()
+            with wall_span(f"bench/{name}"):
+                ok = fn()
         except Exception as e:  # pragma: no cover
             import traceback
 
@@ -231,16 +283,20 @@ def main() -> int:
             print(f"{name},ERROR,{type(e).__name__},{str(e)[:120]}")
             ok = False
         elapsed = time.time() - t0
+        spans = SPANS.drain()
         if profiling:
             traced += 1
         print(f"{name},total_runtime_s,{elapsed:.1f},")
+        baseline_records = []
         if args.check_baseline:
-            ok &= check_baseline(
+            base_ok, baseline_records = check_baseline(
                 name,
                 common.ROWS[rows_before:],
                 args.baseline_dir,
                 args.baseline_tolerance,
             )
+            ok &= base_ok
+        bench_path = None
         if args.json_dir:
             os.makedirs(args.json_dir, exist_ok=True)
             payload = {
@@ -249,9 +305,19 @@ def main() -> int:
                 "runtime_s": elapsed,
                 "rows": common.ROWS[rows_before:],
             }
-            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
-            with open(path, "w") as f:
+            bench_path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(bench_path, "w") as f:
                 json.dump(payload, f, indent=2)
+        if manifest is not None:
+            manifest.module(
+                name,
+                ok=bool(ok),
+                runtime_s=elapsed,
+                rows=common.ROWS[rows_before:],
+                baseline=baseline_records,
+                bench_json=bench_path,
+                spans=spans,
+            )
         if not ok:
             failures.append(name)
     if profiling:
@@ -259,6 +325,9 @@ def main() -> int:
 
         jax.profiler.stop_trace()
         print(f"# profiler trace written to {args.profile}", file=sys.stderr)
+    if manifest is not None:
+        manifest.summary(ok=not failures, failed=failures)
+        print(f"# run manifest appended to {manifest.path}", file=sys.stderr)
     if failures:
         print(f"SUMMARY,failed,{len(failures)},{';'.join(failures)}")
         return 1

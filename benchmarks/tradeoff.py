@@ -9,9 +9,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import SCENARIO_STATIONARY, claim, emit
+import jax
+
+from benchmarks.common import SCENARIO_STATIONARY, Timer, claim, emit
 from repro.core import PolicyParams
-from repro.sim import run_grid
+from repro.sim import GridEngine
 
 # V below ~1e-5 is degenerate: only zero-queue clients get selected and
 # their weighted energy term is 0 in P3, so selection ignores the channel
@@ -21,10 +23,20 @@ VS = (1e-5, 3e-5, 1e-4, 3e-4, 1e-3)
 
 
 def run() -> bool:
-    res = run_grid(
+    engine = GridEngine(
         [SCENARIO_STATIONARY],
         [("ocean", PolicyParams(v=v)) for v in VS],
-        seeds=[2],
+    )
+    res = engine.run([2])
+    jax.block_until_ready(res.a)
+    with Timer("fig16/steady") as t_steady:
+        res_steady = engine.run([2])
+        jax.block_until_ready(res_steady.a)
+    emit(
+        "fig16_tradeoff",
+        "grid_steady_rounds_per_s",
+        len(VS) * SCENARIO_STATIONARY.num_rounds / max(t_steady.elapsed, 1e-9),
+        "V-sweep cells x T / steady (baseline-gated)",
     )
     sel, viol = [], []
     for i, v in enumerate(VS):

@@ -295,6 +295,42 @@ def run() -> bool:
             "cells x T / steady",
         )
 
+    # -- in-graph telemetry overhead on the same 24-cell grid ---------------
+    # The collectors only *read* each round's outputs, so metrics-on must
+    # stay within noise of metrics-off; the 1.3x claim is the CI gate for
+    # that (scan+newton: the fast config where fixed overhead shows most).
+    from repro.obs import MetricsSpec
+
+    overhead_spec = MetricsSpec.of(
+        "queue:last",
+        "lyapunov:mean",
+        "num_selected:full_trace",
+        "energy_headroom:last",
+        "queue:histogram",
+        "solver_residual:mean",
+    )
+    eng_metrics = GridEngine(
+        scenarios, policies, solver="newton", metrics=overhead_spec
+    )
+    steady_m, compile_m, _ = _steady(
+        lambda e=eng_metrics: jax.block_until_ready(e.run(GRID_SEEDS).a)
+    )
+    emit(BENCH, "grid24_scan_newton_metrics_steady_s", steady_m)
+    emit(BENCH, "grid24_scan_newton_metrics_compile_s", compile_m)
+    overhead = steady_m / max(grid_steady["scan_newton"], 1e-12)
+    emit(
+        BENCH,
+        "grid24_metrics_overhead_x",
+        overhead,
+        "metrics-on / metrics-off steady, scan+newton",
+    )
+    ok &= claim(
+        BENCH,
+        "metrics-on grid <= 1.3x metrics-off steady time (6-collector "
+        "spec, 24-cell grid)",
+        overhead <= 1.3,
+    )
+
     speedup = grid_steady["scan_bisect"] / max(grid_steady["fused_newton"], 1e-12)
     emit(BENCH, "grid24_fused_newton_speedup_vs_scan", speedup)
     emit(

@@ -1,0 +1,100 @@
+"""Diagnose Figs 10-13 with in-graph telemetry: WHY does AMO starve?
+
+The paper's drift scenarios (Figs 10-13) show the *outcome* — AMO's
+selection count collapsing while OCEAN keeps admitting clients.  This
+example turns on ``repro.obs`` telemetry to show the *mechanism*: the
+virtual energy-deficit queues q_k(t) and the per-client energy headroom
+recorded round by round inside the same compiled grid program, rendered
+as sparklines and selection matrices.
+
+    PYTHONPATH=src python examples/diagnose_fig10_13.py
+"""
+import numpy as np
+
+from benchmarks.report import metric_lines, selection_matrix, sparkline
+from repro.core import PolicyParams, RadioParams, Scenario
+from repro.obs import MetricsSpec
+from repro.sim import run_grid
+
+# Paper §VI constants (see benchmarks/common.py) with the Fig 10-13
+# drifting path losses: scenario1 drifts away (32 -> 45 dB), scenario2
+# drifts toward the base station (45 -> 32 dB).
+RADIO = RadioParams(
+    bandwidth_hz=10e6,
+    noise_w=1e-12,
+    deadline_s=0.3,
+    model_bits=3.4e5,
+    b_min=0.02,
+)
+T, K, V = 300, 10, 1e-5
+
+
+def drift_scenario(name, pathloss):
+    return Scenario(
+        name=name,
+        num_clients=K,
+        num_rounds=T,
+        pathloss_db=pathloss,
+        radio=RADIO,
+        energy_budget_j=0.15,
+    )
+
+
+SCENARIOS = [
+    drift_scenario("scenario1", (32.0, 45.0)),
+    drift_scenario("scenario2", (45.0, 32.0)),
+]
+
+# The Lyapunov diagnostics: full queue/headroom traces are what localize
+# a starvation to specific rounds; the rest summarizes the solve.
+SPEC = MetricsSpec.of(
+    "queue:full_trace",
+    "lyapunov:full_trace",
+    "num_selected:full_trace",
+    "energy_headroom:full_trace",
+    "dpp_penalty:mean",
+    "dpp_drift:mean",
+    "selection_count:last",
+    "selection_gap:last",
+)
+
+res = run_grid(
+    SCENARIOS,
+    [("ocean-a", PolicyParams(v=V)), "amo"],
+    seeds=[21],
+    metrics=SPEC,
+)
+
+for s, sc in enumerate(SCENARIOS):
+    print(f"\n=== {sc.name}: path loss {sc.pathloss_db[0]:.0f} -> "
+          f"{sc.pathloss_db[1]:.0f} dB over {T} rounds ===")
+    for p, pol in enumerate(res.policies):
+        ns = np.asarray(res.num_selected[p, s, 0], dtype=np.float64)
+        print(f"\n  {pol}: clients/round "
+              f"(thirds: {ns[:T//3].mean():.2f} / "
+              f"{ns[T//3:2*T//3].mean():.2f} / {ns[2*T//3:].mean():.2f})")
+        print(f"    |S^t|  {sparkline(ns)}")
+        if res.metrics[p] is not None:
+            mets = {k: v[s, 0] for k, v in res.metrics[p].items()}
+            for line in metric_lines(mets):
+                print(f"    {line}")
+        print("    selection matrix (rows = clients, time left to right):")
+        for line in selection_matrix(np.asarray(res.a[p, s, 0])):
+            print(f"      {line}")
+
+print("""
+Reading the diagnosis:
+
+* scenario1 (away): AMO front-loads under good channels, then its hard
+  per-round budget (H_k - spent)/(T - t) collapses as energy per round
+  explodes — the selection matrix empties in the middle third.  OCEAN's
+  queues (queue/full_trace) grow instead, pricing energy debt without
+  forbidding selection, so |S^t| degrades gracefully.
+* scenario2 (toward): AMO under-spends early (channels are bad, the
+  per-round cap binds) and only recovers late; OCEAN's headroom trace
+  (energy_headroom/full_trace) shows the budget being banked and then
+  drawn down as channels improve.
+* dpp_penalty/mean vs dpp_drift/mean decomposes OCEAN's per-round
+  objective: the V-weighted utility term vs the queue-drift term the
+  Lyapunov machinery trades it against.
+""")

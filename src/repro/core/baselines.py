@@ -16,7 +16,7 @@
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,10 @@ class PolicyTrace(NamedTuple):
     b: Array   # (T, K) bandwidth ratios
     e: Array   # (T, K) per-round energy
     num_selected: Array  # (T,)
+    # in-graph telemetry ("<collector>/<reduction>" -> array) recorded when
+    # the config carries a repro.obs.MetricsSpec; None (the default) for
+    # metrics-off runs and for policies without Lyapunov machinery.
+    metrics: Optional[Dict[str, Array]] = None
 
 
 def _trace(a, b, e):

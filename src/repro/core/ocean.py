@@ -28,6 +28,13 @@ from repro.core.selection import (
     ocean_p,
 )
 from repro.core.solvers import get_solver
+from repro.obs.metrics import (
+    MetricsSpec,
+    finalize_metrics,
+    init_metrics,
+    metrics_round,
+    round_context,
+)
 
 Array = jax.Array
 
@@ -78,6 +85,11 @@ class OceanConfig:
                    the whole T-round trajectory in one Pallas kernel with
                    VMEM-resident queues; bit-identical to ``scan`` under
                    interpret mode).
+      metrics:     optional ``repro.obs.MetricsSpec`` selecting in-graph
+                   telemetry collectors; ``simulate`` then returns a
+                   third ``metrics`` dict.  ``None`` (default) keeps
+                   every legacy code path byte-identical.  A
+                   compiled-program static (grid must-agree).
     """
 
     num_clients: int
@@ -90,6 +102,7 @@ class OceanConfig:
     top_m: int = DEFAULT_TOP_M
     block_k: int = DEFAULT_BLOCK_K
     traj: str = "scan"
+    metrics: Optional[MetricsSpec] = None
 
     def __post_init__(self):
         backend = get_solver(self.solver)  # fail fast on unknown backend names
@@ -105,6 +118,10 @@ class OceanConfig:
         if self.block_k < 1:
             raise ValueError(f"block_k={self.block_k} must be >= 1")
         self.radio.validate(self.num_clients)
+        if self.metrics is not None:
+            # eager lowering-time validation (unknown collectors raised at
+            # MetricsSpec construction; the full_trace memory cap needs T/K)
+            self.metrics.validate(self.num_rounds, self.num_clients)
         if self.frame_len is not None and self.frame_len <= 0:
             raise ValueError(
                 f"frame_len={self.frame_len} must be a positive number of "
@@ -244,8 +261,14 @@ def simulate(
     radio_seq=None,                      # (T,)-leaf radio pytree (TracedRadio)
     traj: Optional[str] = None,          # trajectory backend; None => cfg.traj
     stream_bf16: bool = False,           # fused only: bf16 decision traces
-) -> Tuple[OceanState, RoundDecision]:
+):
     """Run T rounds as one program; returns final state + stacked decisions.
+
+    With ``cfg.metrics`` set (a ``repro.obs.MetricsSpec``), returns the
+    3-tuple ``(state, decisions, metrics)`` where ``metrics`` maps
+    ``"<collector>/<reduction>"`` keys to recorded telemetry — collected
+    *inside* the same compiled program, on both trajectory backends.
+    ``cfg.metrics=None`` returns the legacy 2-tuple, byte-identical.
 
     ``budget_seq`` feeds a time-varying per-round allowance into the
     queue update (``repro.env`` budget processes); when omitted, the
@@ -295,21 +318,57 @@ def simulate(
             stream_bf16=stream_bf16,
         )
 
-    if radio_seq is None:
+    if cfg.metrics is None:
+        if radio_seq is None:
+            def step(state, inputs):
+                h2, v_t, eta_t, inc_t = inputs
+                return ocean_round(
+                    state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t
+                )
+
+            return jax.lax.scan(
+                step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq)
+            )
+
         def step(state, inputs):
-            h2, v_t, eta_t, inc_t = inputs
-            return ocean_round(state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t)
+            h2, v_t, eta_t, inc_t, radio_t = inputs
+            return ocean_round(
+                state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t,
+                radio=radio_t,
+            )
 
         return jax.lax.scan(
-            step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq)
+            step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq, radio_seq)
         )
 
-    def step(state, inputs):
-        h2, v_t, eta_t, inc_t, radio_t = inputs
-        return ocean_round(
-            state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t, radio=radio_t
-        )
+    # Metrics-enabled scan: the round math is the untouched ocean_round —
+    # collectors only *read* its outputs (repro.obs.metrics.round_context),
+    # so decisions stay bitwise identical to the metrics-off program; the
+    # MetricsState dicts ride the carry, full traces stream as scan ys.
+    spec = cfg.metrics
 
-    return jax.lax.scan(
-        step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq, radio_seq)
+    def step_m(carry, inputs):
+        state, mstate = carry
+        if radio_seq is None:
+            h2, v_t, eta_t, inc_t = inputs
+            radio_t = cfg.radio
+            new_state, dec = ocean_round(
+                state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t
+            )
+        else:
+            h2, v_t, eta_t, inc_t, radio_t = inputs
+            new_state, dec = ocean_round(
+                state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t,
+                radio=radio_t,
+            )
+        ctx = round_context(state.t, dec, new_state, v_t, eta_t, inc_t, radio_t)
+        mstate, traces = metrics_round(spec, cfg, ctx, mstate)
+        return (new_state, mstate), (dec, traces)
+
+    xs = (h2_seq, v_seq, eta_seq, budget_seq)
+    if radio_seq is not None:
+        xs = xs + (radio_seq,)
+    (state, mstate), (decs, traces) = jax.lax.scan(
+        step_m, (init_state(cfg), init_metrics(spec, cfg)), xs
     )
+    return state, decs, finalize_metrics(spec, cfg, mstate, traces)

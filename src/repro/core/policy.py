@@ -192,7 +192,7 @@ def _amo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
 
 
 def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
-    _, decs = simulate(
+    out = simulate(
         cfg,
         h2_seq,
         params.eta,
@@ -201,7 +201,19 @@ def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
         budget_seq=params.budget_seq,
         radio_seq=params.radio_seq,
     )
-    return PolicyTrace(a=decs.a, b=decs.b, e=decs.e, num_selected=decs.num_selected)
+    # cfg.metrics is a static, so the result arity is too: the 3rd element
+    # (the in-graph telemetry dict) exists iff a MetricsSpec is configured.
+    if cfg.metrics is not None:
+        _, decs, metrics = out
+    else:
+        (_, decs), metrics = out, None
+    return PolicyTrace(
+        a=decs.a,
+        b=decs.b,
+        e=decs.e,
+        num_selected=decs.num_selected,
+        metrics=metrics,
+    )
 
 
 def pattern_trace(key: Array, counts: Array, num_clients: int) -> PolicyTrace:

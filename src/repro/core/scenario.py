@@ -37,6 +37,7 @@ from repro.core.ocean import OceanConfig, check_traj_backend
 from repro.core.patterns import eta_schedule
 from repro.core.selection import DEFAULT_BLOCK_K, DEFAULT_TOP_M, check_ranking
 from repro.core.solvers import get_solver
+from repro.obs.metrics import MetricsSpec
 from repro.env.channel import LowerCtx, get_channel_process, sample_channel_process
 from repro.env.energy import sample_budget_process
 from repro.env.radio import TracedRadio, sample_radio_process
@@ -90,6 +91,12 @@ class Scenario:
                        ``fused`` (whole-trajectory Pallas kernel,
                        ``repro.kernels.ocean_traj``).  Also a
                        compiled-program static.
+      metrics:         optional ``repro.obs.MetricsSpec`` selecting
+                       in-graph telemetry for OCEAN policies; the grid
+                       then returns per-cell metrics dicts.  ``None``
+                       (default) keeps the legacy programs and payloads
+                       byte-identical.  Also a compiled-program static
+                       joining the grid's must-agree set.
     """
 
     name: str = "stationary"
@@ -107,6 +114,7 @@ class Scenario:
     top_m: int = DEFAULT_TOP_M
     block_k: int = DEFAULT_BLOCK_K
     traj: str = "scan"
+    metrics: Optional[MetricsSpec] = None
 
     def __post_init__(self):
         backend = get_solver(self.solver)  # fail fast on unknown backend names
@@ -131,6 +139,10 @@ class Scenario:
         eta_schedule(self.eta, 1)  # fail fast on unknown schedule names
         if self.env is not None:
             self.env.validate()  # fail fast on unknown process names
+        if self.metrics is not None:
+            # eager at spec time: unknown collectors raised by MetricsSpec
+            # itself; the full_trace memory cap needs this scenario's (T, K)
+            self.metrics.validate(self.num_rounds, self.num_clients)
 
     # -- derived objects ----------------------------------------------------
     def ocean_config(self) -> OceanConfig:
@@ -145,6 +157,7 @@ class Scenario:
             top_m=self.top_m,
             block_k=self.block_k,
             traj=self.traj,
+            metrics=self.metrics,
         )
 
     def channel_model(self) -> ChannelModel:
@@ -269,6 +282,10 @@ class Scenario:
             d.pop("block_k")
         if self.traj == "scan":
             d.pop("traj")  # keep pre-traj payloads byte-stable
+        if self.metrics is None:
+            d.pop("metrics")  # keep pre-metrics payloads byte-stable
+        else:
+            d["metrics"] = self.metrics.to_dict()
         return d
 
     @classmethod
@@ -291,6 +308,8 @@ class Scenario:
             d["energy_budget_j"] = tuple(d["energy_budget_j"])
         if isinstance(d.get("env"), dict):
             d["env"] = EnvSpec.from_dict(d["env"])
+        if isinstance(d.get("metrics"), dict):
+            d["metrics"] = MetricsSpec.from_dict(d["metrics"])
         return cls(**d)
 
     def to_json(self) -> str:

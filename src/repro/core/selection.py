@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.energy import RadioParams, f_shannon
 from repro.core.solvers import SolverBackend, get_solver
+from repro.obs.spans import trace_span
 
 Array = jax.Array
 
@@ -190,8 +191,9 @@ def ocean_p(
             f"ranking config field)"
         )
 
-    order = jnp.argsort(rho)          # ascending priority value
-    rho_sorted = rho[order]
+    with trace_span("ocean/rank"):
+        order = jnp.argsort(rho)      # ascending priority value
+        rho_sorted = rho[order]
 
     in_s0 = rho_sorted <= _RHO_ZERO_TOL      # S0 members (always selected)
     n0 = jnp.sum(in_s0)
@@ -199,9 +201,10 @@ def ocean_p(
 
     # Candidate m = number of positive-rho clients admitted, m in [0, K].
     # Sorted rank r belongs to candidate m's P4 iff n0 <= r < n0 + m.
-    sol = backend.prefixes(
-        rho_sorted, n0, delta, v_eta, radio, outer_iters, inner_iters
-    )
+    with trace_span(f"ocean/p4_solve/{backend.name}"):
+        sol = backend.prefixes(
+            rho_sorted, n0, delta, v_eta, radio, outer_iters, inner_iters
+        )
     m_star = sol.m_star
     w_star = sol.w_star
     b_pos_sorted = sol.b_pos_sorted     # positive-rho members' allocation
@@ -270,31 +273,35 @@ def _ocean_p_topm(
     delta = 1.0 - n0.astype(dtype) * radio.b_min
 
     if backend.topm is not None:
-        m_star, w_star, b_pos, sel_pos = backend.topm(
-            rho, n0, delta, v_eta, radio, top_m=m_cands, block_k=block_k
-        )
+        with trace_span(f"ocean/p4_solve/{backend.name}"):
+            m_star, w_star, b_pos, sel_pos = backend.topm(
+                rho, n0, delta, v_eta, radio, top_m=m_cands, block_k=block_k
+            )
     else:
-        vals, idx = topm_extract(rho, m_cands)
-        # Reconstruct the K-length sorted view: extracted values land at
-        # their exact sorted offsets [n0, n0 + m_cands); everything else
-        # is a +inf sentinel no masked candidate reduction ever reads.
-        # The buffer is (K + m_cands) long so the traced start offset n0
-        # never clamps (dynamic_update_slice clips out-of-bounds starts).
-        buf = jnp.full((K + m_cands,), jnp.inf, dtype)
-        buf = jax.lax.dynamic_update_slice(buf, vals, (n0,))
-        rho_rank = buf[:K]
+        with trace_span("ocean/rank"):
+            vals, idx = topm_extract(rho, m_cands)
+            # Reconstruct the K-length sorted view: extracted values land
+            # at their exact sorted offsets [n0, n0 + m_cands); everything
+            # else is a +inf sentinel no masked candidate reduction ever
+            # reads.  The buffer is (K + m_cands) long so the traced start
+            # offset n0 never clamps (dynamic_update_slice clips
+            # out-of-bounds starts).
+            buf = jnp.full((K + m_cands,), jnp.inf, dtype)
+            buf = jax.lax.dynamic_update_slice(buf, vals, (n0,))
+            rho_rank = buf[:K]
         rho_hi = jnp.max(rho)  # order-insensitive == rho_sorted[K-1]
-        sol = backend.prefixes(
-            rho_rank,
-            n0,
-            delta,
-            v_eta,
-            radio,
-            outer_iters,
-            inner_iters,
-            m_cands=m_cands,
-            rho_hi=rho_hi,
-        )
+        with trace_span(f"ocean/p4_solve/{backend.name}"):
+            sol = backend.prefixes(
+                rho_rank,
+                n0,
+                delta,
+                v_eta,
+                radio,
+                outer_iters,
+                inner_iters,
+                m_cands=m_cands,
+                rho_hi=rho_hi,
+            )
         m_star = sol.m_star
         w_star = sol.w_star
         # Winner's allocation lives at sorted slots [n0, n0 + m*); slice

@@ -79,6 +79,7 @@ from repro.core.energy import (
     f_shannon_prime,
     f_shannon_second,
 )
+from repro.obs.spans import trace_span
 
 Array = jax.Array
 
@@ -246,7 +247,8 @@ def _prefix_bisect(
         return w, b_sorted, mask
 
     ms = jnp.arange((K if m_cands is None else m_cands) + 1)
-    w_all, b_all, mask_all = jax.vmap(eval_candidate)(ms)
+    with trace_span("p4/bisect/candidate_sweep"):
+        w_all, b_all, mask_all = jax.vmap(eval_candidate)(ms)
 
     best = jnp.argmax(w_all)
     return PrefixSolution(
@@ -525,9 +527,10 @@ def _prefix_newton(
     lam_grid = jnp.exp(
         jnp.log(lam_lo_glob) * (1.0 - frac) + jnp.log(jnp.maximum(lam_hi_glob, 1e-30)) * frac
     )                                                        # (G,) ascending
-    bg = b_of_lam_newton(
-        lam_grid[:, None], rho_sorted[None, :], beta, b_min, b_cap_glob
-    )                                                        # (G, K) shared
+    with trace_span("p4/newton/grid_seed"):
+        bg = b_of_lam_newton(
+            lam_grid[:, None], rho_sorted[None, :], beta, b_min, b_cap_glob
+        )                                                    # (G, K) shared
     csum = jnp.cumsum(jnp.where(pos[None, :], bg, 0.0), axis=1)
     csum0 = jnp.concatenate([jnp.zeros((G, 1), dtype), csum], axis=1)  # (G, K+1)
     prefix_sums = jnp.take(csum0, jnp.clip(n0 + ms, 0, K), axis=1) - jnp.take(
@@ -549,10 +552,11 @@ def _prefix_newton(
 
     # ---- vectorized safeguarded Newton polish over the (K+1, K) lattice.
     rho_b = rho_sorted[None, :]
-    b = _outer_newton_polish(
-        lam0, jnp.zeros_like(lam0), hi0, rho_b, mask, delta, beta, b_min,
-        b_max, n_outer, n_inner,
-    )
+    with trace_span("p4/newton/polish"):
+        b = _outer_newton_polish(
+            lam0, jnp.zeros_like(lam0), hi0, rho_b, mask, delta, beta, b_min,
+            b_max, n_outer, n_inner,
+        )
     b = jnp.where(mask, b, 0.0)
     b = _budget_repair(b, mask, delta, b_min, b_max[:, None])
     cost = jnp.sum(

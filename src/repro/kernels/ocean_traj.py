@@ -62,6 +62,15 @@ from repro.core.ocean import (
     ocean_round,
 )
 from repro.env.radio import TracedRadio
+from repro.obs.metrics import (
+    finalize_metrics,
+    get_collector,
+    init_metrics,
+    metric_key,
+    metrics_round,
+    round_context,
+)
+from repro.obs.spans import trace_span
 
 Array = jax.Array
 
@@ -101,9 +110,16 @@ def _traj_kernel(
                [+ the 7 TracedRadio leaves, (chunk,) each, iff has_radio]
       outputs: a, b, e, q_pre, rho (chunk, K); obj, nsel (chunk,);
                q_final, es_final (1, K) — rewritten every step, so after
-               the last step they hold the end-of-trajectory state
+               the last step they hold the end-of-trajectory state;
+               [+ one (chunk, ...) streamed tile per full_trace metrics
+               entry, + one (1, ...) final leaf per MetricsState leaf —
+               rewritten like q_final — iff cfg.metrics is set]
       scratch: q (1, K), es (1, K) — the VMEM-resident carry
+               [+ one (1, ...) VMEM leaf per MetricsState leaf: the
+               metrics accumulators/state stay chip-resident across
+               chunks exactly like the queues]
     """
+    spec = cfg.metrics
     n_in = 4 + (_N_RADIO_LEAVES if has_radio else 0)
     h2_ref, v_ref, eta_ref, inc_ref = refs[:4]
     radio_refs = refs[4:n_in]
@@ -111,7 +127,21 @@ def _traj_kernel(
         a_ref, b_ref, e_ref, qp_ref, rho_ref, obj_ref, ns_ref,
         qf_ref, esf_ref,
     ) = refs[n_in : n_in + 9]
-    q_scr, es_scr = refs[n_in + 9 :]
+    if spec is None:
+        n_traces = n_mleaves = 0
+        m_treedef = None
+        m_init_leaves = []
+    else:
+        m_init_leaves, m_treedef = jax.tree_util.tree_flatten(
+            init_metrics(spec, cfg)
+        )
+        n_traces = len(spec.full_trace_entries)
+        n_mleaves = len(m_init_leaves)
+    trace_refs = refs[n_in + 9 : n_in + 9 + n_traces]
+    mfinal_refs = refs[n_in + 9 + n_traces : n_in + 9 + n_traces + n_mleaves]
+    scratch = refs[n_in + 9 + n_traces + n_mleaves :]
+    q_scr, es_scr = scratch[:2]
+    m_scrs = scratch[2:]
 
     K = cfg.num_clients
     ic = pl.program_id(0)
@@ -120,11 +150,13 @@ def _traj_kernel(
     def _init():
         q_scr[...] = jnp.zeros_like(q_scr)
         es_scr[...] = jnp.zeros_like(es_scr)
+        for ref, leaf in zip(m_scrs, m_init_leaves):
+            ref[0] = leaf
 
     fdtype = q_scr.dtype
 
     def step(i, carry):
-        q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c = carry
+        q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c, m_leaves, t_bufs = carry
         t = ic * chunk + i
         radio_t = (
             TracedRadio(*(r[i] for r in radio_refs)) if has_radio else None
@@ -142,6 +174,20 @@ def _traj_kernel(
         # Chunk-padded tail rounds (t >= T) stream edge-replicated inputs:
         # their math runs but must not advance the resident carry.
         valid = t < num_rounds
+        if spec is not None:
+            ctx = round_context(
+                t, dec, new_state, v_ref[i], eta_ref[i], inc_ref[i],
+                radio_t if has_radio else cfg.radio,
+            )
+            mstate, traces = metrics_round(
+                spec, cfg, ctx, jax.tree_util.tree_unflatten(m_treedef, m_leaves),
+                valid=valid,
+            )
+            m_leaves = tuple(jax.tree_util.tree_leaves(mstate))
+            t_bufs = tuple(
+                buf.at[i].set(traces[metric_key(name, "full_trace")])
+                for buf, name in zip(t_bufs, spec.full_trace_entries)
+            )
         q = jnp.where(valid, new_state.q, q)
         es = jnp.where(valid, new_state.energy_spent, es)
         return (
@@ -154,6 +200,8 @@ def _traj_kernel(
             rho_c.at[i].set(dec.rho),
             obj_c.at[i].set(dec.objective),
             ns_c.at[i].set(dec.num_selected),
+            m_leaves,
+            t_bufs,
         )
 
     zf = jnp.zeros((chunk, K), fdtype)
@@ -164,21 +212,29 @@ def _traj_kernel(
         zf, zf, zf, zf,
         jnp.zeros((chunk,), fdtype),
         jnp.zeros((chunk,), jnp.int32),
+        tuple(ref[0] for ref in m_scrs),
+        tuple(jnp.zeros(ref.shape, ref.dtype) for ref in trace_refs),
     )
-    q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c = jax.lax.fori_loop(
-        0, chunk, step, carry0
-    )
-    q_scr[0] = q
-    es_scr[0] = es
-    a_ref[...] = a_c
-    b_ref[...] = b_c.astype(b_ref.dtype)
-    e_ref[...] = e_c.astype(e_ref.dtype)
-    qp_ref[...] = qp_c.astype(qp_ref.dtype)
-    rho_ref[...] = rho_c.astype(rho_ref.dtype)
-    obj_ref[...] = obj_c
-    ns_ref[...] = ns_c
-    qf_ref[0] = q
-    esf_ref[0] = es
+    (
+        q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c, m_leaves, t_bufs,
+    ) = jax.lax.fori_loop(0, chunk, step, carry0)
+    with trace_span("traj/chunk_io"):
+        q_scr[0] = q
+        es_scr[0] = es
+        a_ref[...] = a_c
+        b_ref[...] = b_c.astype(b_ref.dtype)
+        e_ref[...] = e_c.astype(e_ref.dtype)
+        qp_ref[...] = qp_c.astype(qp_ref.dtype)
+        rho_ref[...] = rho_c.astype(rho_ref.dtype)
+        obj_ref[...] = obj_c
+        ns_ref[...] = ns_c
+        qf_ref[0] = q
+        esf_ref[0] = es
+        for ref, buf in zip(trace_refs, t_bufs):
+            ref[...] = buf
+        for scr, ref, leaf in zip(m_scrs, mfinal_refs, m_leaves):
+            scr[0] = leaf
+            ref[0] = leaf
 
 
 def _pad_rounds(x: Array, pad: int) -> Array:
@@ -201,8 +257,13 @@ def ocean_trajectory_fused(
     chunk: Optional[int] = None,
     stream_bf16: bool = False,
     interpret: Optional[bool] = None,
-) -> Tuple[OceanState, RoundDecision]:
+):
     """Run the whole OCEAN trajectory as one fused kernel.
+
+    With ``cfg.metrics`` set, returns ``(state, decisions, metrics)`` —
+    the metrics carry lives in VMEM scratch across chunks, full traces
+    stream out per chunk, and the telemetry is bit-identical to the
+    metrics-enabled ``scan`` path under interpret mode.
 
     Same contract as the ``lax.scan`` body of ``repro.core.ocean.simulate``
     (which normalizes ``v``/``budgets`` before dispatching here): returns
@@ -255,6 +316,14 @@ def ocean_trajectory_fused(
             return pl.BlockSpec((chunk, K), lambda ic: (ic, 0))
         return pl.BlockSpec((chunk,), lambda ic: (ic,))
 
+    def _chunked_spec(shape):
+        block = (chunk,) + shape
+        return pl.BlockSpec(block, lambda ic, _n=len(shape): (ic,) + (0,) * _n)
+
+    def _final_spec(shape):
+        block = (1,) + shape
+        return pl.BlockSpec(block, lambda ic, _n=len(shape): (0,) * (1 + _n))
+
     Tp = n_chunks * chunk
     sdtype = jnp.bfloat16 if stream_bf16 else fdtype
     kernel = functools.partial(
@@ -264,39 +333,62 @@ def ocean_trajectory_fused(
         num_rounds=T,
         has_radio=has_radio,
     )
+    out_specs = [
+        pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # a
+        pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # b
+        pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # e
+        pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # q_pre
+        pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # rho
+        pl.BlockSpec((chunk,), lambda ic: (ic,)),       # objective
+        pl.BlockSpec((chunk,), lambda ic: (ic,)),       # num_selected
+        pl.BlockSpec((1, K), lambda ic: (0, 0)),        # q_final
+        pl.BlockSpec((1, K), lambda ic: (0, 0)),        # es_final
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Tp, K), jnp.bool_),
+        jax.ShapeDtypeStruct((Tp, K), sdtype),
+        jax.ShapeDtypeStruct((Tp, K), sdtype),
+        jax.ShapeDtypeStruct((Tp, K), sdtype),
+        jax.ShapeDtypeStruct((Tp, K), sdtype),
+        jax.ShapeDtypeStruct((Tp,), fdtype),
+        jax.ShapeDtypeStruct((Tp,), jnp.int32),
+        jax.ShapeDtypeStruct((1, K), fdtype),
+        jax.ShapeDtypeStruct((1, K), fdtype),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((1, K), fdtype),   # q carry
+        pltpu.VMEM((1, K), fdtype),   # energy_spent carry
+    ]
+    spec = cfg.metrics
+    if spec is not None:
+        # Streamed full-trace tiles mirror the decision outputs; the
+        # MetricsState leaves get (1, ...) "final" outputs rewritten every
+        # chunk (like q_final) plus matching VMEM-resident scratch.
+        trace_shapes = [
+            get_collector(name).shape(K) for name in spec.full_trace_entries
+        ]
+        for shape in trace_shapes:
+            out_specs.append(_chunked_spec(shape))
+            out_shape.append(jax.ShapeDtypeStruct((Tp,) + shape, jnp.float32))
+        m_leaves, m_treedef = jax.tree_util.tree_flatten(
+            init_metrics(spec, cfg)
+        )
+        for leaf in m_leaves:
+            out_specs.append(_final_spec(leaf.shape))
+            out_shape.append(
+                jax.ShapeDtypeStruct((1,) + leaf.shape, leaf.dtype)
+            )
+            scratch_shapes.append(pltpu.VMEM((1,) + leaf.shape, leaf.dtype))
     out = pl.pallas_call(
         kernel,
         grid=(n_chunks,),
         in_specs=[row_spec(x) for x in inputs],
-        out_specs=[
-            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # a
-            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # b
-            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # e
-            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # q_pre
-            pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # rho
-            pl.BlockSpec((chunk,), lambda ic: (ic,)),       # objective
-            pl.BlockSpec((chunk,), lambda ic: (ic,)),       # num_selected
-            pl.BlockSpec((1, K), lambda ic: (0, 0)),        # q_final
-            pl.BlockSpec((1, K), lambda ic: (0, 0)),        # es_final
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Tp, K), jnp.bool_),
-            jax.ShapeDtypeStruct((Tp, K), sdtype),
-            jax.ShapeDtypeStruct((Tp, K), sdtype),
-            jax.ShapeDtypeStruct((Tp, K), sdtype),
-            jax.ShapeDtypeStruct((Tp, K), sdtype),
-            jax.ShapeDtypeStruct((Tp,), fdtype),
-            jax.ShapeDtypeStruct((Tp,), jnp.int32),
-            jax.ShapeDtypeStruct((1, K), fdtype),
-            jax.ShapeDtypeStruct((1, K), fdtype),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((1, K), fdtype),   # q carry
-            pltpu.VMEM((1, K), fdtype),   # energy_spent carry
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(*inputs)
-    a, b, e, q_pre, rho, obj, nsel, q_final, es_final = out
+    a, b, e, q_pre, rho, obj, nsel, q_final, es_final = out[:9]
 
     state = OceanState(
         q=q_final[0],
@@ -312,4 +404,14 @@ def ocean_trajectory_fused(
         objective=obj[:T],
         num_selected=nsel[:T],
     )
-    return state, decs
+    if spec is None:
+        return state, decs
+    n_traces = len(spec.full_trace_entries)
+    traces = {
+        metric_key(name, "full_trace"): tr[:T]
+        for name, tr in zip(spec.full_trace_entries, out[9 : 9 + n_traces])
+    }
+    mstate = jax.tree_util.tree_unflatten(
+        m_treedef, [x[0] for x in out[9 + n_traces :]]
+    )
+    return state, decs, finalize_metrics(spec, cfg, mstate, traces)

@@ -70,6 +70,8 @@ from repro.env.channel import sample_channel_process
 from repro.env.energy import sample_budget_process
 from repro.env.radio import TracedRadio, sample_radio_process
 from repro.env.spec import env_cell_keys, radio_cell_key
+from repro.obs.metrics import MetricsSpec
+from repro.obs.spans import trace_span
 
 Array = jax.Array
 
@@ -96,6 +98,13 @@ class GridResult(NamedTuple):
     budget_inc: Optional[Array] = None    # (S, N, T, K) per-round increments
     budget_total: Optional[Array] = None  # (S, N, K) realized totals H_k
     radio_seq: Optional[TracedRadio] = None  # pytree of (S, N, T) radio leaves
+    # per-policy in-graph telemetry: one entry per policy-axis index (None
+    # for policies without the Lyapunov machinery), each a dict of
+    # "<collector>/<reduction>" -> (S, N, ...) arrays.  A tuple — not a
+    # name-keyed dict — because the policy axis may repeat a name (e.g.
+    # fig16's V sweep registers "ocean" once per V).  None when the grid
+    # ran without a MetricsSpec.
+    metrics: Optional[Tuple[Optional[Dict[str, Array]], ...]] = None
 
     def cell(self, policy: str, scenario: str, seed: int) -> PolicyTrace:
         """Extract one (policy, scenario, seed) cell as a PolicyTrace."""
@@ -123,11 +132,15 @@ class GridResult(NamedTuple):
         p = self.policies.index(policy)
         s = self.scenarios.index(scenario)
         n = self.seeds.index(seed)
+        mets = None
+        if self.metrics is not None and self.metrics[p] is not None:
+            mets = {k: v[s, n] for k, v in self.metrics[p].items()}
         return PolicyTrace(
             a=self.a[p, s, n],
             b=self.b[p, s, n],
             e=self.e[p, s, n],
             num_selected=self.num_selected[p, s, n],
+            metrics=mets,
         )
 
 
@@ -153,7 +166,7 @@ def _check_compatible(scenarios: Sequence[Scenario]) -> Scenario:
             f"{field}: {getattr(base, field)!r} != {getattr(sc, field)!r}"
             for field in (
                 "num_rounds", "num_clients", "frame_len", "solver",
-                "ranking", "top_m", "block_k", "traj",
+                "ranking", "top_m", "block_k", "traj", "metrics",
             )
             if getattr(base, field) != getattr(sc, field)
         ]
@@ -192,6 +205,12 @@ class GridEngine:
                  ``scan``).  Under ``fused`` the engine's nested
                  (scenario, seed) vmaps batch the trajectory kernel into
                  one multi-cell launch.  Also a compiled-program static.
+      metrics:   in-graph telemetry override (a ``repro.obs.MetricsSpec``);
+                 None keeps the scenarios' ``metrics`` field (default no
+                 metrics).  When set, ``GridResult.metrics`` carries one
+                 telemetry dict per policy-axis entry — recorded inside
+                 the same single compiled program.  Also a
+                 compiled-program static joining the must-agree set.
       shard:     multi-device execution: the flattened (S*N) cell axis is
                  ``shard_map``-ped over an auto-built mesh of all local
                  devices, with donated input buffers (off-CPU).  None =
@@ -212,6 +231,7 @@ class GridEngine:
         top_m: Optional[int] = None,
         block_k: Optional[int] = None,
         traj: Optional[str] = None,
+        metrics: Optional[MetricsSpec] = None,
     ):
         if not scenarios or not policies:
             raise ValueError("need at least one scenario and one policy")
@@ -226,6 +246,7 @@ class GridEngine:
                 ("top_m", top_m),
                 ("block_k", block_k),
                 ("traj", traj),
+                ("metrics", metrics),
             )
             if v is not None
         }
@@ -298,10 +319,13 @@ class GridEngine:
             radio_seq = sample_radio_process(rp, k_radio, T)
             return h2, dh, total, radio_seq
 
-        over_seeds = jax.vmap(sample_cell, in_axes=(None, None, None, None, 0))
-        h2, budget_inc, budget_total, radio_seq = jax.vmap(
-            over_seeds, in_axes=(0, 0, 0, 0, None)
-        )(chan_params, budget_params, radio_params, env_salts, seed_arr)
+        with trace_span("grid/sample_env"):
+            over_seeds = jax.vmap(
+                sample_cell, in_axes=(None, None, None, None, 0)
+            )
+            h2, budget_inc, budget_total, radio_seq = jax.vmap(
+                over_seeds, in_axes=(0, 0, 0, 0, None)
+            )(chan_params, budget_params, radio_params, env_salts, seed_arr)
         # h2/budget_inc: (S, N, T, K); budget_total: (S, N, K);
         # radio_seq: TracedRadio of (S, N, T) leaves
 
@@ -332,10 +356,11 @@ class GridEngine:
                 )
                 return pol.trace_fn(cfg, h2_cell, params)
 
-            over_seeds = jax.vmap(cell, in_axes=(0, None, 0, 0, 0, 0))
-            tr = jax.vmap(over_seeds)(
-                h2, etas, budget_total, budget_inc, radio_seq, keys
-            )                                                     # (S, N, ...)
+            with trace_span(f"grid/policy/{pol.name}"):
+                over_seeds = jax.vmap(cell, in_axes=(0, None, 0, 0, 0, 0))
+                tr = jax.vmap(over_seeds)(
+                    h2, etas, budget_total, budget_inc, radio_seq, keys
+                )                                                 # (S, N, ...)
             traces.append(tr)
             if self.experiment is not None:
                 run = self.experiment.run
@@ -345,12 +370,16 @@ class GridEngine:
         b = jnp.stack([t.b for t in traces])
         e = jnp.stack([t.e for t in traces])
         ns = jnp.stack([t.num_selected for t in traces])
+        metrics = tuple(t.metrics for t in traces)
         history = (
             {k: jnp.stack([h[k] for h in histories]) for k in histories[0]}
             if histories
             else None
         )
-        return a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history
+        return (
+            a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
+            metrics,
+        )
 
     # -- the sharded program: one vmap over the flattened (S*N) cell axis ----
     def _build_flat(
@@ -390,7 +419,8 @@ class GridEngine:
                     scenario_budget_seq=dh,
                     scenario_radio_seq=radio_seq,
                 )
-                tr = pol.trace_fn(cfg, h2, params)
+                with trace_span(f"grid/policy/{pol.name}"):
+                    tr = pol.trace_fn(cfg, h2, params)
                 traces.append(tr)
                 if self.experiment is not None:
                     hists.append(self.experiment.run(lkey, tr))
@@ -398,12 +428,13 @@ class GridEngine:
             b = jnp.stack([t.b for t in traces])
             e = jnp.stack([t.e for t in traces])
             ns = jnp.stack([t.num_selected for t in traces])
+            metrics = tuple(t.metrics for t in traces)
             history = (
                 {k: jnp.stack([h[k] for h in hists]) for k in hists[0]}
                 if hists
                 else {}
             )
-            return a, b, e, ns, h2, dh, total, radio_seq, history
+            return a, b, e, ns, h2, dh, total, radio_seq, history, metrics
 
         return jax.vmap(cell)(
             seed_flat, sidx_flat, chan_params, budget_params, radio_params,
@@ -447,7 +478,10 @@ class GridEngine:
                 lambda x: x[:C].reshape((S, N) + x.shape[1:]), tree
             )
 
-        a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history = outs
+        (
+            a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
+            metrics,
+        ) = outs
         # per-cell policy stacks sit on axis 2 after to_grid; lead with P.
         a, b, e, ns = (jnp.moveaxis(to_grid(x), 2, 0) for x in (a, b, e, ns))
         history = (
@@ -455,10 +489,12 @@ class GridEngine:
             if history
             else None
         )
+        # metrics' policy axis is the Python tuple itself — each entry's
+        # leaves just go (C_pad, ...) -> (S, N, ...).
         return (
             a, b, e, ns,
             to_grid(h2), to_grid(budget_inc), to_grid(budget_total),
-            to_grid(radio_seq), history,
+            to_grid(radio_seq), history, to_grid(metrics),
         )
 
     # -- public API ----------------------------------------------------------
@@ -504,10 +540,12 @@ class GridEngine:
         if self._shard:
             (
                 a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
+                metrics,
             ) = self._run_sharded(seed_arr, base_key, learn_keys)
         else:
             (
                 a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
+                metrics,
             ) = self._fn(
                 seed_arr,
                 self._chan_params,
@@ -518,6 +556,8 @@ class GridEngine:
                 base_key,
                 learn_keys,
             )
+        if all(m is None for m in metrics):
+            metrics = None  # metrics-off grid: keep the legacy None field
         return GridResult(
             a=a,
             b=b,
@@ -532,6 +572,7 @@ class GridEngine:
             budget_inc=budget_inc,
             budget_total=budget_total,
             radio_seq=radio_seq,
+            metrics=metrics,
         )
 
 
@@ -547,6 +588,7 @@ def run_grid(
     top_m: Optional[int] = None,
     block_k: Optional[int] = None,
     traj: Optional[str] = None,
+    metrics: Optional[MetricsSpec] = None,
     base_key: Optional[Array] = None,
     learn_keys: Optional[Array] = None,
     learn_seed: int = 0,
@@ -555,6 +597,7 @@ def run_grid(
     return GridEngine(
         scenarios, policies, experiment=experiment, solver=solver, shard=shard,
         ranking=ranking, top_m=top_m, block_k=block_k, traj=traj,
+        metrics=metrics,
     ).run(
         seeds, base_key=base_key, learn_keys=learn_keys, learn_seed=learn_seed
     )

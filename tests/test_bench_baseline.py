@@ -33,20 +33,29 @@ def baseline_dir(tmp_path):
 
 def test_within_tolerance_passes(baseline_dir, capsys):
     rows = [{"metric": "a_rounds_per_s", "value": "800", "note": ""}]
-    assert run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    ok, records = run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    assert ok
     out = capsys.readouterr().out
     assert "BASELINE_OK,a_rounds_per_s" in out
+    # records mirror the printed rows (they land in the run manifest)
+    assert {r["status"] for r in records} == {"OK", "GONE"}
 
 
 def test_regression_fails(baseline_dir, capsys):
     rows = [{"metric": "a_rounds_per_s", "value": "699", "note": ""}]
-    assert not run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    ok, records = run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    assert not ok
     assert "BASELINE_REGRESSION" in capsys.readouterr().out
+    assert any(
+        r["metric"] == "a_rounds_per_s" and r["status"] == "REGRESSION"
+        for r in records
+    )
 
 
 def test_improvement_passes(baseline_dir):
     rows = [{"metric": "a_rounds_per_s", "value": "5000", "note": ""}]
-    assert run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    ok, _ = run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    assert ok
 
 
 def test_new_and_gone_metrics_report_without_failing(baseline_dir, capsys):
@@ -54,15 +63,22 @@ def test_new_and_gone_metrics_report_without_failing(baseline_dir, capsys):
         {"metric": "a_rounds_per_s", "value": "1000", "note": ""},
         {"metric": "new_rounds_per_s", "value": "1", "note": ""},
     ]
-    assert run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    ok, records = run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    assert ok
     out = capsys.readouterr().out
     assert "BASELINE_NEW,new_rounds_per_s" in out
     assert "BASELINE_GONE,gone_rounds_per_s" in out
+    statuses = {r["metric"]: r["status"] for r in records}
+    assert statuses["new_rounds_per_s"] == "NEW"
+    assert statuses["gone_rounds_per_s"] == "GONE"
 
 
 def test_missing_baseline_file_passes(baseline_dir):
     rows = [{"metric": "a_rounds_per_s", "value": "1", "note": ""}]
-    assert run_mod.check_baseline("unknown_module", rows, baseline_dir, 0.30)
+    ok, records = run_mod.check_baseline(
+        "unknown_module", rows, baseline_dir, 0.30
+    )
+    assert ok and records == []
 
 
 def test_non_throughput_metrics_ignored(baseline_dir):
@@ -71,7 +87,8 @@ def test_non_throughput_metrics_ignored(baseline_dir):
         {"metric": "a_rounds_per_s", "value": "1000", "note": ""},
         {"metric": "a_steady_ms", "value": "999999", "note": ""},
     ]
-    assert run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    ok, _ = run_mod.check_baseline("mod", rows, baseline_dir, 0.30)
+    assert ok
 
 
 def test_committed_solver_bench_baseline_is_valid():
@@ -87,3 +104,31 @@ def test_committed_solver_bench_baseline_is_valid():
         assert any(
             m.startswith(backend) and m.endswith("_rounds_per_s") for m in metrics
         ), backend
+
+
+@pytest.mark.parametrize(
+    "module, metric",
+    [
+        ("fig16_tradeoff", "grid_steady_rounds_per_s"),
+        ("grid_scaling", "engine_steady_rounds_per_s"),
+        ("radio_sweep", "grid_steady_rounds_per_s"),
+        ("traj_bench", None),  # any throughput row (lattice varies)
+    ],
+)
+def test_committed_baselines_carry_gated_throughput(module, metric):
+    """Every CI --check-baseline module has a committed baseline whose
+    gated throughput metric is present and positive."""
+    path = os.path.join(
+        os.path.dirname(run_mod.__file__), "baselines", f"BENCH_{module}.json"
+    )
+    assert os.path.exists(path), f"commit benchmarks/baselines/BENCH_{module}.json"
+    rows = json.load(open(path))["rows"]
+    throughput = {
+        r["metric"]: float(r["value"])
+        for r in rows
+        if r["metric"].endswith(run_mod.BASELINE_METRIC_SUFFIX)
+    }
+    assert throughput, f"{module} baseline carries no *_rounds_per_s rows"
+    if metric is not None:
+        assert metric in throughput
+    assert all(v > 0 for v in throughput.values())

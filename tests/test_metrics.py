@@ -1,0 +1,348 @@
+"""In-graph telemetry (``repro.obs.metrics``): oracles + bit-identity.
+
+Acceptance criteria of the metrics machinery:
+
+* metrics-on traces satisfy the paper's accounting identities — the
+  queue update q(t+1) = [q(t) + e(t) - inc(t)]^+ (with frame resets) and
+  the energy-headroom identity — on BOTH trajectory backends,
+* ``spec=None`` and metrics-on leave the decision traces bitwise
+  unchanged for every policy x radio process x solver,
+* a metrics-on grid still compiles ONE program, and heterogeneous specs
+  are rejected by the engine's must-agree check,
+* ``MetricsSpec`` validates eagerly (unknown collectors, bad reductions,
+  the full-trace memory cap) and rides ``Scenario`` serialization
+  without disturbing legacy payloads.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import OceanConfig, PolicyParams, RadioParams, Scenario
+from repro.core.ocean import simulate
+from repro.core.patterns import eta_schedule
+from repro.obs import (
+    FULL_TRACE_ELEM_CAP,
+    MetricsSpec,
+    available_collectors,
+    collector_table,
+    metric_key,
+    solver_effort,
+)
+from repro.sim import GridEngine, run_grid
+
+from tests.test_traj import ALL_POLICIES, TRACE_FIELDS, mixed_radio_scenarios
+
+T, K = 40, 6
+RADIO = RadioParams()
+
+ORACLE_SPEC = MetricsSpec.of(
+    "queue:full_trace",
+    "queue_next:full_trace",
+    "energy_headroom:full_trace",
+    "num_selected:full_trace",
+    "num_selected:mean",
+    "num_selected:last",
+    "num_selected:histogram",
+    "lyapunov:full_trace",
+    "selection_count:last",
+    "queue:histogram",
+)
+
+
+def _simulate_with_metrics(traj, frame_len=16):
+    cfg = OceanConfig(
+        num_clients=K,
+        num_rounds=T,
+        radio=RADIO,
+        frame_len=frame_len,
+        metrics=ORACLE_SPEC,
+    )
+    h2 = jax.random.exponential(jax.random.PRNGKey(7), (T, K)) * 2.5e-4
+    eta = eta_schedule("uniform", T)
+    state, decs, mets = jax.jit(
+        lambda h: simulate(cfg, h, eta, 1e-5, traj=traj)
+    )(h2)
+    return cfg, state, decs, jax.tree_util.tree_map(np.asarray, mets)
+
+
+# --------------------------------------------------------------------------
+# oracle identities (scan AND fused)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("traj", ("scan", "fused"))
+def test_queue_update_identity(traj):
+    """q_next(t) = [q(t) + e(t) - inc(t)]^+ exactly, in float32 — and the
+    recorded q(t) is the post-frame-reset queue the P3 solve consumed."""
+    cfg, state, decs, mets = _simulate_with_metrics(traj)
+    q = mets["queue/full_trace"]          # (T, K)
+    qn = mets["queue_next/full_trace"]    # (T, K)
+    e = np.asarray(decs.e, np.float32)
+    inc = (np.asarray(cfg.budgets(), np.float32) / np.float32(T))[None, :]
+
+    expect = np.maximum((q + e) - inc, np.float32(0.0))
+    np.testing.assert_array_equal(qn, expect)
+
+    # frame resets: q(t) is zeroed at t = R, 2R, ... and chains otherwise
+    R = cfg.R
+    np.testing.assert_array_equal(q[0], np.zeros((K,), np.float32))
+    for t in range(1, T):
+        if t % R == 0:
+            np.testing.assert_array_equal(q[t], np.zeros((K,), np.float32))
+        else:
+            np.testing.assert_array_equal(q[t], qn[t - 1], err_msg=f"t={t}")
+    assert T > 2 * R, "horizon must span multiple frames to test resets"
+
+    # the final carried queue is the last update
+    np.testing.assert_array_equal(np.asarray(state.q), qn[-1])
+
+
+@pytest.mark.parametrize("traj", ("scan", "fused"))
+def test_energy_accounting_identity(traj):
+    """headroom(t) = sum_{s<=t} inc(s) - sum_{s<=t} e(s) exactly: both
+    sides accumulate sequentially in float32, so ``np.cumsum`` on float32
+    reproduces the traced adds bit for bit."""
+    cfg, state, decs, mets = _simulate_with_metrics(traj)
+    head = mets["energy_headroom/full_trace"]  # (T, K)
+    e = np.asarray(decs.e, np.float32)
+    inc = np.broadcast_to(
+        np.asarray(cfg.budgets(), np.float32) / np.float32(T), (T, K)
+    )
+    cum_inc = np.cumsum(inc, axis=0, dtype=np.float32)
+    cum_spent = np.cumsum(e, axis=0, dtype=np.float32)
+    np.testing.assert_array_equal(head, cum_inc - cum_spent)
+    np.testing.assert_array_equal(np.asarray(state.energy_spent), cum_spent[-1])
+
+
+@pytest.mark.parametrize("traj", ("scan", "fused"))
+def test_reductions_agree_with_full_trace(traj):
+    """last / mean / histogram are pure reductions of the full trace."""
+    cfg, state, decs, mets = _simulate_with_metrics(traj)
+    ns = mets["num_selected/full_trace"]  # (T,)
+    np.testing.assert_array_equal(
+        ns, np.asarray(decs.num_selected, np.float32)
+    )
+    np.testing.assert_array_equal(mets["num_selected/last"], ns[-1])
+
+    # the mean accumulator adds sequentially in float32, then divides by T
+    acc = np.float32(0.0)
+    for v in ns:
+        acc = np.float32(acc + v)
+    np.testing.assert_array_equal(
+        mets["num_selected/mean"], np.float32(acc / np.float32(T))
+    )
+
+    # histograms count every recorded value: T for scalars, T*K for (K,)
+    assert mets["num_selected/histogram"].sum() == T
+    assert mets["queue/histogram"].sum() == T * K
+
+    # selection_count's final state is the per-client selection total
+    np.testing.assert_array_equal(
+        mets["selection_count/last"],
+        np.asarray(decs.a, np.float32).sum(axis=0),
+    )
+
+    lyap = mets["lyapunov/full_trace"]
+    q = mets["queue/full_trace"].astype(np.float64)
+    np.testing.assert_allclose(lyap, 0.5 * (q * q).sum(axis=1), rtol=2e-6)
+
+
+# --------------------------------------------------------------------------
+# bit-identity: metrics-on never changes the decisions
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("solver", ("bisect", "newton"))
+def test_metrics_on_grid_bit_identical(solver):
+    """Every policy x every radio process x solver: turning telemetry on
+    leaves the decision traces bitwise unchanged (collectors only READ
+    ``ocean_round`` outputs)."""
+    scenarios = mixed_radio_scenarios(solver=solver)
+    policies = [(p, PolicyParams(v=1e-5)) for p in ALL_POLICIES]
+    spec = MetricsSpec.of(
+        "queue:last", "lyapunov:mean", "num_selected:full_trace",
+        "energy_headroom:last", "queue:histogram", "solver_residual:mean",
+    )
+    ref = run_grid(scenarios, policies, seeds=(0,))
+    got = run_grid(scenarios, policies, seeds=(0,), metrics=spec)
+    assert ref.metrics is None
+    for f in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)), err_msg=f
+        )
+
+
+def test_metrics_fused_grid_matches_scan_bitwise():
+    """The fused kernel's VMEM-resident accumulators reproduce the scan
+    path's telemetry bit for bit (and the traces too)."""
+    scenarios = mixed_radio_scenarios()
+    policies = [("ocean-a", PolicyParams(v=1e-5)), ("ocean-u", PolicyParams(v=1e-5))]
+    spec = ORACLE_SPEC
+    ref = run_grid(scenarios, policies, seeds=(0, 3), metrics=spec)
+    got = run_grid(scenarios, policies, seeds=(0, 3), metrics=spec, traj="fused")
+    for f in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)), err_msg=f
+        )
+    for p in range(len(policies)):
+        assert set(ref.metrics[p]) == set(got.metrics[p])
+        for key in ref.metrics[p]:
+            np.testing.assert_array_equal(
+                np.asarray(ref.metrics[p][key]),
+                np.asarray(got.metrics[p][key]),
+                err_msg=f"policy {p} metric {key}",
+            )
+
+
+# --------------------------------------------------------------------------
+# engine plumbing
+# --------------------------------------------------------------------------
+def test_metrics_grid_compiles_one_program_and_slices_cells():
+    spec = MetricsSpec.of("queue:full_trace", "num_selected:mean")
+    scenarios = mixed_radio_scenarios()
+    eng = GridEngine(
+        scenarios,
+        [("ocean-a", PolicyParams(v=1e-5)), "amo"],
+        metrics=spec,
+    )
+    res = eng.run((0, 1))
+    jax.block_until_ready(res.a)
+    assert eng._fn._cache_size() == 1
+
+    S, N = len(scenarios), 2
+    assert res.metrics is not None and len(res.metrics) == 2
+    ocean, amo = res.metrics
+    assert amo is None  # no Lyapunov machinery => no telemetry
+    assert ocean[metric_key("queue", "full_trace")].shape == (S, N, T, K)
+    assert ocean[metric_key("num_selected", "mean")].shape == (S, N)
+
+    cell = res.cell("ocean-a", "spectrum", 1)
+    s = scenarios.index(next(sc for sc in scenarios if sc.name == "spectrum"))
+    np.testing.assert_array_equal(
+        np.asarray(cell.metrics["queue/full_trace"]),
+        np.asarray(ocean["queue/full_trace"][s, 1]),
+    )
+    assert res.cell("amo", "static", 0).metrics is None
+
+
+def test_metrics_off_grid_keeps_none_field():
+    res = run_grid(
+        mixed_radio_scenarios()[:1], ["ocean-a", "amo"], seeds=(0,)
+    )
+    assert res.metrics is None
+
+
+def test_heterogeneous_metrics_specs_rejected():
+    spec = MetricsSpec.of("queue:last")
+    base = dict(num_clients=K, num_rounds=T)
+    scenarios = [
+        Scenario(name="a", metrics=spec, **base),
+        Scenario(name="b", **base),
+    ]
+    with pytest.raises(ValueError, match="grid-incompatible"):
+        GridEngine(scenarios, ["ocean-a"])
+
+
+# --------------------------------------------------------------------------
+# eager validation + serialization
+# --------------------------------------------------------------------------
+def test_unknown_collector_rejected_eagerly():
+    with pytest.raises(ValueError, match="unknown metrics collector"):
+        MetricsSpec.of("qeue:last")
+
+
+def test_unknown_reduction_rejected_eagerly():
+    with pytest.raises(ValueError, match="unknown metrics reduction"):
+        MetricsSpec.of("queue:median")
+
+
+def test_malformed_entry_rejected():
+    with pytest.raises(ValueError, match="collector:reduction"):
+        MetricsSpec.of("queue")
+
+
+def test_duplicate_entry_rejected():
+    with pytest.raises(ValueError, match="duplicate metrics entry"):
+        MetricsSpec.of("queue:last", "queue:last")
+
+
+def test_full_trace_memory_cap():
+    spec = MetricsSpec.of("queue:full_trace")
+    num_rounds = FULL_TRACE_ELEM_CAP // 10 + 1
+    with pytest.raises(ValueError, match="FULL_TRACE_ELEM_CAP"):
+        spec.validate(num_rounds=num_rounds, num_clients=10)
+    # the cap is applied at config/scenario construction, eagerly
+    with pytest.raises(ValueError, match="FULL_TRACE_ELEM_CAP"):
+        Scenario(
+            name="big",
+            num_rounds=num_rounds,
+            num_clients=10,
+            metrics=spec,
+        )
+    # scalar collectors at the paper's scales stay comfortably inside
+    MetricsSpec.of("lyapunov:full_trace").validate(
+        num_rounds=300, num_clients=100_000
+    )
+
+
+def test_scenario_serialization_roundtrip():
+    spec = MetricsSpec.of("queue:full_trace", "lyapunov:mean", hist_bins=16)
+    base = dict(num_clients=K, num_rounds=T)
+    plain = Scenario(name="plain", **base)
+    with_spec = Scenario(name="telemetry", metrics=spec, **base)
+
+    # spec=None payloads stay byte-stable (no new key)
+    assert "metrics" not in plain.to_dict()
+    json.dumps(plain.to_dict())
+
+    d = with_spec.to_dict()
+    assert d["metrics"] == {
+        "collect": [["queue", "full_trace"], ["lyapunov", "mean"]],
+        "hist_bins": 16,
+    }
+    restored = Scenario.from_dict(json.loads(json.dumps(d)))
+    assert restored.metrics == spec
+    # default hist_bins is omitted from the payload
+    assert "hist_bins" not in MetricsSpec.of("queue:last").to_dict()
+    assert MetricsSpec.from_dict(MetricsSpec.of("queue:last").to_dict()) == (
+        MetricsSpec.of("queue:last")
+    )
+
+
+def test_spec_is_hashable_static():
+    spec = MetricsSpec.of("queue:last")
+    assert hash(spec) == hash(MetricsSpec.of("queue:last"))
+    assert spec == MetricsSpec.of("queue:last")
+    assert spec != MetricsSpec.of("queue:mean")
+
+
+# --------------------------------------------------------------------------
+# registry + static solver effort
+# --------------------------------------------------------------------------
+def test_registry_table_covers_every_collector():
+    names = available_collectors()
+    assert set(n for n, _, _ in collector_table()) == set(names)
+    for expected in (
+        "queue", "queue_next", "lyapunov", "lyapunov_drift", "dpp_penalty",
+        "dpp_drift", "energy_headroom", "num_selected", "selection_count",
+        "selection_gap", "solver_residual", "bmin_active", "topm_saturated",
+    ):
+        assert expected in names
+
+
+def test_rho_zero_tol_mirrors_selection():
+    """metrics keeps a local copy of the S0 membership threshold to avoid
+    an import cycle; it must track ``repro.core.selection``'s."""
+    from repro.core.selection import _RHO_ZERO_TOL as sel_tol
+    from repro.obs.metrics import _RHO_ZERO_TOL as obs_tol
+
+    assert obs_tol == sel_tol
+
+
+def test_solver_effort_reports_static_budgets():
+    cfg = OceanConfig(num_clients=K, num_rounds=T, radio=RADIO)
+    eff = solver_effort(cfg)
+    assert eff["solver"] == cfg.solver
+    assert eff["outer_iters"] > 0 and eff["inner_iters"] > 0
+    newton_cfg = dataclasses.replace(cfg, solver="newton")
+    eff_n = solver_effort(newton_cfg)
+    assert {"outer_iters", "inner_iters", "seed_grid"} <= set(eff_n)

@@ -1,0 +1,296 @@
+"""Spans, manifests, and report rendering (``repro.obs`` host side).
+
+Pins the JSONL run-manifest schema (``benchmarks/run.py`` writes it, CI
+uploads it), the span recorder the manifests drain, and the markdown
+renderers of ``benchmarks/report.py``.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.obs.manifest import (
+    MODULE_RECORD_KEYS,
+    RUN_RECORD_KEYS,
+    SCHEMA_VERSION,
+    SUMMARY_RECORD_KEYS,
+    ManifestWriter,
+    config_hash,
+    read_manifest,
+    runs_in_manifest,
+)
+from repro.obs.spans import SPANS, SpanRecorder, record_span, trace_span, wall_span
+
+
+# --------------------------------------------------------------------------
+# spans
+# --------------------------------------------------------------------------
+def test_trace_span_is_a_numeric_noop_under_jit():
+    def f(x):
+        with trace_span("obs_test/double"):
+            return x * 2.0
+
+    assert float(jax.jit(f)(3.0)) == 6.0
+
+
+def test_span_recorder_drain_and_snapshot():
+    rec = SpanRecorder()
+    rec.record("a", 0.25)
+    rec.record("a", 0.75)
+    rec.record("b", 1.0)
+    snap = rec.snapshot()
+    assert snap == {"a": (0.25, 0.75), "b": (1.0,)}
+
+    rows = {r["name"]: r for r in rec.drain()}
+    assert rows["a"]["count"] == 2
+    assert rows["a"]["total_s"] == pytest.approx(1.0)
+    assert rows["a"]["mean_s"] == pytest.approx(0.5)
+    assert rows["b"]["count"] == 1
+    assert rec.drain() == []  # drain clears
+
+
+def test_wall_span_records_into_recorder():
+    rec = SpanRecorder()
+    with wall_span("phase/x", recorder=rec):
+        pass
+    (row,) = rec.drain()
+    assert row["name"] == "phase/x"
+    assert row["count"] == 1
+    assert row["total_s"] >= 0.0
+
+
+def test_wall_span_records_on_exception():
+    rec = SpanRecorder()
+    with pytest.raises(RuntimeError):
+        with wall_span("phase/err", recorder=rec):
+            raise RuntimeError("boom")
+    (row,) = rec.drain()
+    assert row["name"] == "phase/err"
+
+
+def test_global_recorder_and_named_timer():
+    SPANS.drain()  # isolate from other tests
+    record_span("global/x", 0.5)
+    from benchmarks.common import Timer
+
+    with Timer("global/timer") as t:
+        pass
+    assert t.elapsed >= 0.0
+    names = {r["name"] for r in SPANS.drain()}
+    assert {"global/x", "global/timer"} <= names
+    # a bare Timer() records nothing
+    with Timer():
+        pass
+    assert SPANS.drain() == []
+
+
+# --------------------------------------------------------------------------
+# manifests
+# --------------------------------------------------------------------------
+def _claim_row(description, ok):
+    # shape of benchmarks.common.emit() rows for claim():
+    return {
+        "benchmark": "mod",
+        "metric": "CLAIM",
+        "value": "PASS" if ok else "FAIL",
+        "note": description,
+    }
+
+
+def _write_run(path, *, ok=True):
+    mw = ManifestWriter(
+        str(path), argv=["--only", "fig16_tradeoff"], config={"seed": 0}
+    )
+    mw.start(profile_dir=None)
+    mw.module(
+        "fig16_tradeoff",
+        ok=ok,
+        runtime_s=1.5,
+        rows=[
+            {"benchmark": "mod", "metric": "x_rounds_per_s", "value": "10", "note": ""},
+            _claim_row("monotone in V", True),
+            _claim_row("violation stays small", ok),
+        ],
+        baseline=[{"metric": "x_rounds_per_s", "status": "OK", "note": "+2%"}],
+        bench_json="results/BENCH_fig16_tradeoff.json",
+        spans=[{"name": "bench/fig16", "count": 1, "total_s": 1.5, "mean_s": 1.5}],
+    )
+    mw.summary(ok=ok, failed=[] if ok else ["fig16_tradeoff"])
+    return mw
+
+
+def test_manifest_schema_roundtrip(tmp_path):
+    path = tmp_path / "manifest.jsonl"
+    mw = _write_run(path)
+    records = read_manifest(str(path))
+    assert [r["record"] for r in records] == ["run", "module", "summary"]
+    run, module, summary = records
+
+    # the pinned schema: exact key sets, every record stamped
+    assert set(run) == set(RUN_RECORD_KEYS)
+    assert set(module) == set(MODULE_RECORD_KEYS)
+    assert set(summary) == set(SUMMARY_RECORD_KEYS)
+    for r in records:
+        assert r["schema"] == SCHEMA_VERSION
+        assert r["run_id"] == mw.run_id
+
+    assert run["argv"] == ["--only", "fig16_tradeoff"]
+    assert run["config_hash"] == config_hash({"seed": 0})
+    assert module["name"] == "fig16_tradeoff"
+    assert module["ok"] is True
+    assert module["num_rows"] == 3
+    # CLAIM rows: description from ``note``, outcome from ``value``
+    assert module["claims"] == [
+        {"description": "monotone in V", "ok": True},
+        {"description": "violation stays small", "ok": True},
+    ]
+    assert module["baseline"][0]["status"] == "OK"
+    assert summary["ok"] is True
+    assert summary["modules"] == ["fig16_tradeoff"]
+    assert summary["failed"] == []
+
+
+def test_manifest_appends_across_invocations(tmp_path):
+    path = tmp_path / "manifest.jsonl"
+    a = _write_run(path, ok=True)
+    b = _write_run(path, ok=False)
+    runs = runs_in_manifest(read_manifest(str(path)))
+    assert list(runs) == [a.run_id, b.run_id]
+    assert len(runs[a.run_id]) == 3 and len(runs[b.run_id]) == 3
+    summary_b = runs[b.run_id][-1]
+    assert summary_b["ok"] is False and summary_b["failed"] == ["fig16_tradeoff"]
+    # failed claims carry ok=False
+    module_b = runs[b.run_id][1]
+    assert module_b["claims"][1] == {
+        "description": "violation stays small", "ok": False,
+    }
+
+
+def test_config_hash_is_stable_and_sensitive():
+    h = config_hash({"a": 1, "b": [2, 3]})
+    assert h == config_hash({"b": [2, 3], "a": 1})  # key order irrelevant
+    assert h != config_hash({"a": 2, "b": [2, 3]})
+    assert len(h) == 16 and int(h, 16) >= 0
+
+
+# --------------------------------------------------------------------------
+# report rendering
+# --------------------------------------------------------------------------
+def test_sparkline_edges():
+    from benchmarks.report import sparkline
+
+    assert sparkline([]) == ""
+    flat = sparkline([1.0, 1.0, 1.0])
+    assert len(flat) == 3 and len(set(flat)) == 1  # constant => flat mid level
+    s = sparkline(np.arange(1000.0), width=40)
+    assert len(s) == 40
+    assert s[0] != s[-1]  # rising series spans levels
+    assert sparkline([np.nan, 1.0, np.nan])[0] == " "
+    assert sparkline([np.nan]) == " "
+
+
+def test_selection_matrix_shapes_and_elision():
+    from benchmarks.report import selection_matrix
+
+    a = np.zeros((30, 5), bool)
+    a[:, 2] = True
+    lines = selection_matrix(a, width=10)
+    assert len(lines) == 5
+    assert "client   2" in lines[2] and lines[2].endswith(" 1")
+    big = selection_matrix(np.zeros((10, 30), bool), max_clients=4)
+    assert len(big) == 5 and "26 more clients elided" in big[-1]
+
+
+def test_metric_lines_render_all_shapes():
+    from benchmarks.report import metric_lines
+
+    lines = metric_lines(
+        {
+            "lyapunov/full_trace": np.arange(100.0),
+            "queue/full_trace": np.ones((50, 4)),
+            "num_selected/mean": np.float32(3.5),
+            "selection_count/last": np.arange(4.0),
+            "queue/histogram": np.ones(32),
+        }
+    )
+    assert len(lines) == 5
+    rendered = "\n".join(lines)
+    for key in ("lyapunov/full_trace", "num_selected/mean", "queue/histogram"):
+        assert key in rendered
+    assert "3.5" in rendered
+
+
+def test_render_manifest_markdown(tmp_path):
+    from benchmarks.report import render_manifest
+
+    path = tmp_path / "manifest.jsonl"
+    _write_run(path, ok=True)
+    _write_run(path, ok=False)
+    doc = render_manifest(read_manifest(str(path)))
+    assert "# Benchmark run report" in doc
+    assert doc.count("## run `") == 2
+    assert "fig16_tradeoff" in doc
+    assert "**PASS**" in doc and "**FAIL**" in doc
+    assert "failed claims:" in doc and "violation stays small" in doc
+    assert "bench/fig16" in doc  # span table
+
+
+def test_render_manifest_flags_regressions(tmp_path):
+    from benchmarks.report import render_manifest
+
+    path = tmp_path / "manifest.jsonl"
+    mw = ManifestWriter(str(path))
+    mw.start()
+    mw.module(
+        "grid_scaling",
+        ok=False,
+        runtime_s=2.0,
+        baseline=[
+            {"metric": "engine_steady_rounds_per_s", "status": "REGRESSION",
+             "note": "-60%"},
+        ],
+    )
+    mw.summary(ok=False, failed=["grid_scaling"])
+    doc = render_manifest(read_manifest(str(path)))
+    assert "REGRESSION: engine_steady_rounds_per_s" in doc
+
+
+def test_render_grid_with_metrics():
+    from benchmarks.report import render_grid
+    from repro.core import PolicyParams, Scenario
+    from repro.obs import MetricsSpec
+    from repro.sim import run_grid
+
+    spec = MetricsSpec.of("queue:full_trace", "num_selected:mean")
+    res = run_grid(
+        [Scenario(name="tiny", num_rounds=16, num_clients=4)],
+        [("ocean-a", PolicyParams(v=1e-5)), "amo"],
+        seeds=[0],
+        metrics=spec,
+    )
+    doc = render_grid(res, title="Test grid")
+    assert "# Test grid" in doc
+    assert "## Energy budgets" in doc
+    assert "## ocean-a" in doc and "## amo" in doc
+    assert "queue/full_trace" in doc  # telemetry rendered for OCEAN
+    assert "client   0" in doc  # selection matrix rows
+    # amo has no telemetry: its section must not render metric keys twice
+    assert doc.count("queue/full_trace") == 1
+
+
+def test_report_cli_writes_output(tmp_path):
+    from benchmarks.report import main
+
+    path = tmp_path / "manifest.jsonl"
+    _write_run(path)
+    out = tmp_path / "REPORT.md"
+    assert main(["--manifest", str(path), "-o", str(out)]) == 0
+    assert "# Benchmark run report" in out.read_text()
+
+
+def test_report_cli_requires_an_input():
+    from benchmarks.report import main
+
+    with pytest.raises(SystemExit):
+        main([])
