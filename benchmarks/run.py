@@ -8,6 +8,13 @@ validates the paper's claims (CLAIM rows), and returns overall success.
 ``--json-dir`` additionally writes one machine-readable
 ``BENCH_<module>.json`` per module (the same rows as the CSV stream).
 
+``--resume`` makes an interrupted sweep preemption-safe at module
+granularity: modules already recorded as ``ok`` in the run manifest are
+skipped, so a killed invocation re-run with the same arguments picks up
+where it left off.  Trajectory-level snapshot save/restore events
+(``repro.checkpoint``) drained during each module land on its manifest
+record under ``"checkpoints"``.
+
 ``--check-baseline`` compares every throughput metric (``*_rounds_per_s``)
 against the committed ``benchmarks/baselines/BENCH_<module>.json`` and
 fails the run on a regression beyond ``--baseline-tolerance`` (default
@@ -215,6 +222,12 @@ def main() -> int:
         action="store_true",
         help="skip writing the JSONL run manifest",
     )
+    ap.add_argument(
+        "--resume",
+        action="store_true",
+        help="skip modules already recorded ok in the run manifest "
+        "(preemption-safe re-run; requires the manifest)",
+    )
     args = ap.parse_args()
 
     selected = [n for n in BENCHMARKS if not args.only or args.only in n]
@@ -247,19 +260,40 @@ def main() -> int:
             profiling = True
 
     manifest = None
+    manifest_path = args.manifest
+    if manifest_path is None:
+        manifest_path = os.path.join(args.json_dir or ".", "manifest.jsonl")
+
+    done_modules: set = set()
+    if args.resume:
+        if args.no_manifest:
+            print("--resume requires the run manifest", file=sys.stderr)
+            return 2
+        if os.path.exists(manifest_path):
+            from repro.obs.manifest import read_manifest
+
+            done_modules = {
+                rec["name"]
+                for rec in read_manifest(manifest_path)
+                if rec.get("record") == "module" and rec.get("ok")
+            }
+            for name in selected:
+                if name in done_modules:
+                    print(
+                        f"# --resume: skipping {name} (already ok in "
+                        f"{manifest_path})",
+                        file=sys.stderr,
+                    )
+
     if not args.no_manifest:
         from repro.obs.manifest import ManifestWriter
 
-        manifest_path = args.manifest
-        if manifest_path is None:
-            manifest_path = os.path.join(
-                args.json_dir or ".", "manifest.jsonl"
-            )
         manifest = ManifestWriter(
             manifest_path, argv=sys.argv[1:], config=vars(args)
         )
         manifest.start(profile_dir=args.profile)
 
+    from repro.checkpoint.trajectory import drain_events
     from repro.obs.spans import SPANS, wall_span
 
     print("benchmark,metric,value,note")
@@ -268,10 +302,13 @@ def main() -> int:
     for name, fn in BENCHMARKS.items():
         if name not in selected:
             continue
+        if name in done_modules:
+            continue
         idx += 1
         _profile_tick(idx)
         rows_before = len(common.ROWS)
         SPANS.drain()  # a clean slate: spans below belong to this module
+        drain_events()  # likewise for checkpoint save/restore events
         t0 = time.time()
         try:
             with wall_span(f"bench/{name}"):
@@ -284,6 +321,7 @@ def main() -> int:
             ok = False
         elapsed = time.time() - t0
         spans = SPANS.drain()
+        ckpt_events = drain_events()
         if profiling:
             traced += 1
         print(f"{name},total_runtime_s,{elapsed:.1f},")
@@ -317,6 +355,7 @@ def main() -> int:
                 baseline=baseline_records,
                 bench_json=bench_path,
                 spans=spans,
+                checkpoints=ckpt_events,
             )
         if not ok:
             failures.append(name)

@@ -1,3 +1,21 @@
 from repro.checkpoint.ckpt import load_pytree, save_pytree, latest_step
+from repro.checkpoint.trajectory import (
+    CheckpointSpec,
+    drain_events,
+    latest_round,
+    load_snapshot,
+    save_snapshot,
+    segment_bounds,
+)
 
-__all__ = ["save_pytree", "load_pytree", "latest_step"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "latest_step",
+    "CheckpointSpec",
+    "segment_bounds",
+    "save_snapshot",
+    "load_snapshot",
+    "latest_round",
+    "drain_events",
+]

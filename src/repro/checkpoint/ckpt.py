@@ -1,13 +1,25 @@
-"""Minimal npz-based pytree checkpointing with step management.
+"""npz-based pytree checkpointing with step management, hardened for
+preemption.
 
-Layout: <dir>/step_<N>.npz with leaves flattened to path-keyed arrays
-plus a json-encoded treedef for faithful restoration (lists/dicts/
-namedtuple-as-dict).  Good enough for the CPU-scale federated runs; a
-production TPU deployment would swap in tensorstore behind the same API.
+Layout: ``<dir>/step_<N>.npz`` with leaves flattened to path-keyed
+arrays plus a json-encoded dtype manifest (stored inside the npz under a
+reserved key) so every leaf round-trips **bit-exactly**:
+
+- dtypes numpy serializes natively (bool / ints / floats / complex) are
+  stored as-is;
+- extended dtypes numpy's npz format cannot represent (``bfloat16`` and
+  friends from ``ml_dtypes``) are packed as raw bytes and re-viewed on
+  load, so they neither upcast nor fail.
+
+Writes are preemption-safe: the payload goes to a pid-unique ``.tmp``
+sibling, is fsync'd, and lands via atomic ``os.replace``; a killed
+writer leaves only ``.tmp`` litter, which ``latest_step`` ignores and
+the next ``save_pytree`` sweeps up.  Good enough for the CPU-scale
+federated runs; a production TPU deployment would swap in tensorstore
+behind the same API.
 """
 from __future__ import annotations
 
-import io
 import json
 import os
 import re
@@ -17,35 +29,148 @@ import jax
 import numpy as np
 
 _SEP = "|"
+# Reserved npz entry holding the json dtype/shape manifest.  The path
+# separator makes collision with a real leaf key impossible only if the
+# name cannot arise from tree_flatten_with_path -- "__" prefixed and
+# suffixed names never do (GetAttrKey renders as the bare field name).
+_META_KEY = "__ckpt_meta__"
+_TMP_RE = re.compile(r"step_\d+\.npz\.tmp(?:\.(\d+))?$")
 
 
-def _flatten(tree: Any):
-    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = {}
+def _leaf_keys(tree: Any):
+    """(key, leaf) pairs using the stable path-joined key scheme."""
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
     for path, leaf in leaves_with_paths:
         key = _SEP.join(
             str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
             for p in path
         )
-        out[key] = np.asarray(leaf)
-    return out
+        out.append((key, leaf))
+    return out, treedef
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        pass
+    try:  # extended dtypes (bfloat16, float8_*) live in ml_dtypes
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+    except (ImportError, AttributeError) as e:
+        raise TypeError(f"cannot resolve checkpoint dtype {name!r}") from e
+
+
+def _pack(arr: np.ndarray):
+    """Return (storable ndarray, meta dict) for one leaf."""
+    meta = {"dtype": arr.dtype.name, "shape": list(arr.shape)}
+    if arr.dtype.isbuiltin == 1:  # 2 == user-registered (e.g. bfloat16)
+        return arr, meta
+    # npz would pickle (or reject) extended dtypes; store raw bytes.
+    meta["packed"] = 1
+    raw = np.frombuffer(np.ascontiguousarray(arr).tobytes(), np.uint8)
+    return raw, meta
+
+
+def _unpack(arr: np.ndarray, meta: Optional[dict]) -> np.ndarray:
+    if not meta:
+        return arr
+    dtype = _resolve_dtype(meta["dtype"])
+    if meta.get("packed"):
+        arr = np.frombuffer(arr.tobytes(), dtype).reshape(meta["shape"])
+    return arr
+
+
+def _sweep_stale_tmps(directory: str) -> None:
+    """Remove ``.tmp`` litter from killed writers (best-effort).
+
+    pid-suffixed tmps belonging to a *live* process are left alone so a
+    concurrent writer is never sabotaged.
+    """
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return
+    for f in names:
+        m = _TMP_RE.search(f)
+        if not m:
+            continue
+        pid = m.group(1)
+        if pid is not None and int(pid) != os.getpid():
+            try:
+                os.kill(int(pid), 0)
+                continue  # writer still alive; not ours to clean
+            except OSError:
+                pass  # dead writer
+        elif pid is not None:
+            continue  # our own in-flight tmp
+        try:
+            os.remove(os.path.join(directory, f))
+        except OSError:
+            pass
 
 
 def save_pytree(directory: str, tree: Any, step: int) -> str:
+    """Atomically persist ``tree`` as ``<directory>/step_<step>.npz``."""
     os.makedirs(directory, exist_ok=True)
-    flat = _flatten(tree)
+    _sweep_stale_tmps(directory)
+    pairs, _ = _leaf_keys(tree)
+    flat, meta = {}, {}
+    for key, leaf in pairs:
+        if key == _META_KEY:
+            raise ValueError(f"leaf key collides with reserved {_META_KEY!r}")
+        arr, m = _pack(np.asarray(leaf))
+        flat[key] = arr
+        meta[key] = m
+    flat[_META_KEY] = np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8)
     path = os.path.join(directory, f"step_{step:08d}.npz")
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez(f, **flat)
-    os.replace(tmp, path)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):  # failed mid-write; don't leave litter
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+    try:  # make the rename durable too (best-effort on odd filesystems)
+        dfd = os.open(directory, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:
+        pass
     return path
+
+
+def _leaf_shape_dtype(leaf: Any):
+    shape = getattr(leaf, "shape", None)
+    dtype = getattr(leaf, "dtype", None)
+    if shape is None or dtype is None:  # python scalars / lists
+        as_np = np.asarray(leaf)
+        shape, dtype = as_np.shape, as_np.dtype
+    return tuple(shape), np.dtype(dtype)
 
 
 def load_pytree(
     directory: str, like: Any, step: Optional[int] = None
 ) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (shapes must match)."""
+    """Restore into the structure of ``like`` (shapes must match).
+
+    ``like`` leaves only need ``.shape``/``.dtype`` -- concrete arrays
+    and ``jax.ShapeDtypeStruct`` templates both work.  When the
+    checkpoint carries a dtype manifest (everything written by this
+    version), leaves are restored bit-exactly and a dtype mismatch with
+    ``like`` is an error rather than a silent cast; manifest-less legacy
+    files keep the old cast-to-like behavior.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -53,25 +178,38 @@ def load_pytree(
     path = os.path.join(directory, f"step_{step:08d}.npz")
     with np.load(path) as data:
         flat = {k: data[k] for k in data.files}
-    ref_flat = _flatten(like)
-    missing = set(ref_flat) - set(flat)
+    meta = None
+    if _META_KEY in flat:
+        meta = json.loads(flat.pop(_META_KEY).tobytes().decode("utf-8"))
+    pairs, treedef = _leaf_keys(like)
+    missing = {k for k, _ in pairs} - set(flat)
     if missing:
         raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
-    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     new_leaves = []
-    for lpath, leaf in leaves_with_paths:
-        key = _SEP.join(
-            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-            for p in lpath
-        )
-        arr = flat[key]
-        if arr.shape != tuple(np.shape(leaf)):
-            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {np.shape(leaf)}")
-        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    for key, leaf in pairs:
+        arr = _unpack(flat[key], meta.get(key) if meta else None)
+        shape, dtype = _leaf_shape_dtype(leaf)
+        if arr.shape != shape:
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {shape}")
+        if meta is not None:
+            if arr.dtype != dtype:
+                raise ValueError(
+                    f"dtype mismatch at {key}: checkpoint has {arr.dtype}, "
+                    f"template wants {dtype}"
+                )
+            new_leaves.append(jax.numpy.asarray(arr))
+        else:
+            new_leaves.append(jax.numpy.asarray(arr, dtype=dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Largest committed step, ignoring ``.tmp`` litter from killed writers.
+
+    Only fully-renamed ``step_<N>.npz`` files match; an interrupted
+    writer's ``step_<N>.npz.tmp.<pid>`` never does, so a resume cannot
+    pick up a torn file.
+    """
     if not os.path.isdir(directory):
         return None
     steps = []

@@ -119,12 +119,21 @@ def smo(
     return _trace(a, b, e)
 
 
-def amo(
+def amo_segment(
     cfg: OceanConfig,
+    spent: Array,
     h2_seq: Array,
+    ts: Array,
     budgets: Optional[Array] = None,
     radio_seq=None,
-) -> PolicyTrace:
+) -> Tuple[Array, PolicyTrace]:
+    """AMO over one contiguous block of rounds from a carried ``spent``.
+
+    ``ts`` holds the *global* round indices of the block (the budget
+    recycling rate depends on how many of the T total rounds remain).
+    ``amo`` is exactly this from ``spent = 0`` over ``ts = 0..T-1``; the
+    segmented grid engine feeds the carry across checkpoint boundaries.
+    """
     budgets = cfg.budgets() if budgets is None else budgets
     T = cfg.num_rounds
 
@@ -140,18 +149,32 @@ def amo(
             h2, t = inputs
             return round_fn(spent, h2, t, cfg.radio)
 
-        _, (a, b, e) = jax.lax.scan(
-            step, jnp.zeros_like(budgets), (h2_seq, jnp.arange(T))
-        )
+        spent, (a, b, e) = jax.lax.scan(step, spent, (h2_seq, ts))
     else:
         def step(spent, inputs):
             h2, t, radio_t = inputs
             return round_fn(spent, h2, t, radio_t)
 
-        _, (a, b, e) = jax.lax.scan(
-            step, jnp.zeros_like(budgets), (h2_seq, jnp.arange(T), radio_seq)
-        )
-    return _trace(a, b, e)
+        spent, (a, b, e) = jax.lax.scan(step, spent, (h2_seq, ts, radio_seq))
+    return spent, _trace(a, b, e)
+
+
+def amo(
+    cfg: OceanConfig,
+    h2_seq: Array,
+    budgets: Optional[Array] = None,
+    radio_seq=None,
+) -> PolicyTrace:
+    budgets = cfg.budgets() if budgets is None else budgets
+    _, trace = amo_segment(
+        cfg,
+        jnp.zeros_like(budgets),
+        h2_seq,
+        jnp.arange(cfg.num_rounds),
+        budgets=budgets,
+        radio_seq=radio_seq,
+    )
+    return trace
 
 
 # --------------------------------------------------------------------------

@@ -14,7 +14,8 @@ T-round trajectory as one ``lax.scan`` given a precomputed channel matrix.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+import functools
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +29,7 @@ from repro.core.selection import (
     ocean_p,
 )
 from repro.core.solvers import get_solver
+from repro.checkpoint.trajectory import CheckpointSpec
 from repro.obs.metrics import (
     MetricsSpec,
     finalize_metrics,
@@ -90,6 +92,16 @@ class OceanConfig:
                    third ``metrics`` dict.  ``None`` (default) keeps
                    every legacy code path byte-identical.  A
                    compiled-program static (grid must-agree).
+      checkpoint:  optional ``repro.checkpoint.CheckpointSpec`` enabling
+                   preemption-safe segmented execution: ``simulate``
+                   splits the T rounds into ``every_rounds``-sized
+                   segments (one ``lax.scan`` / fused-kernel launch
+                   each) and atomically snapshots the full carry at
+                   every boundary, so a killed run resumes
+                   mid-trajectory via ``simulate(resume_from=...)`` with
+                   bitwise-identical traces.  ``None`` (default) keeps
+                   the legacy single-program path byte-identical.  A
+                   compiled-program static (grid must-agree).
     """
 
     num_clients: int
@@ -103,6 +115,7 @@ class OceanConfig:
     block_k: int = DEFAULT_BLOCK_K
     traj: str = "scan"
     metrics: Optional[MetricsSpec] = None
+    checkpoint: Optional[CheckpointSpec] = None
 
     def __post_init__(self):
         backend = get_solver(self.solver)  # fail fast on unknown backend names
@@ -261,6 +274,8 @@ def simulate(
     radio_seq=None,                      # (T,)-leaf radio pytree (TracedRadio)
     traj: Optional[str] = None,          # trajectory backend; None => cfg.traj
     stream_bf16: bool = False,           # fused only: bf16 decision traces
+    checkpoint: Union[CheckpointSpec, None, bool] = None,
+    resume_from: Union[str, bool, None] = None,
 ):
     """Run T rounds as one program; returns final state + stacked decisions.
 
@@ -288,6 +303,20 @@ def simulate(
     ``stream_bf16=True`` (fused backend only) streams the per-round
     (T, K) float decision traces back to HBM in bfloat16; the on-chip
     carries — and hence the trajectory and final state — are unchanged.
+
+    ``checkpoint`` (default ``None`` => ``cfg.checkpoint``; pass
+    ``False`` to force off) switches to **segmented execution**: the T
+    rounds run as ``every_rounds``-sized segments — one ``lax.scan`` /
+    fused-kernel launch each — with the full carry (queues,
+    energy_spent, round index, metrics accumulators, decision prefix)
+    snapshotted atomically at every boundary.  ``resume_from`` (a
+    snapshot directory, or ``True`` for the spec's own directory)
+    restores the latest committed snapshot and continues mid-trajectory;
+    the completed run's traces and telemetry are bitwise identical to
+    the uninterrupted segmented run on both backends.  Segmented
+    execution is a host-side driver: call it outside ``jit`` (each
+    segment is jitted internally).  With checkpointing off everywhere
+    the legacy single-program path below is byte-identical.
     """
     traj = check_traj_backend(cfg.traj if traj is None else traj)
     if stream_bf16 and traj != "fused":
@@ -295,6 +324,12 @@ def simulate(
             "stream_bf16=True requires the 'fused' trajectory backend "
             "(the scan path materializes full-precision decisions by "
             f"construction); got traj={traj!r}"
+        )
+    ckpt_spec = cfg.checkpoint if checkpoint is None else (checkpoint or None)
+    if ckpt_spec is not None or resume_from is not None:
+        return _simulate_segmented(
+            cfg, h2_seq, eta_seq, v, budgets, budget_seq, radio_seq,
+            traj, stream_bf16, ckpt_spec, resume_from,
         )
     v_seq = v_schedule(cfg, v)
     eta_seq = jnp.asarray(eta_seq, jnp.float32)
@@ -372,3 +407,181 @@ def simulate(
         step_m, (init_state(cfg), init_metrics(spec, cfg)), xs
     )
     return state, decs, finalize_metrics(spec, cfg, mstate, traces)
+
+
+# ---------------------------------------------------------------------------
+# Segmented execution with preemption-safe checkpoint/resume.
+#
+# The T-round trajectory is split at multiples of ``every_rounds`` into
+# segments; each segment is ONE ``lax.scan`` (or one fused-kernel launch)
+# continuing from the carried state, so the concatenated decisions are the
+# same op sequence as the single-program run.  At every boundary the full
+# carry plus the decision/trace prefix is snapshotted through the hardened
+# ``repro.checkpoint`` (atomic replace, bit-exact dtypes); a resumed run
+# re-enters the same segment grid, which makes resumed == uninterrupted a
+# structural identity, not a numerical accident.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "traj", "stream_bf16"))
+def _segment_step(
+    cfg, traj, stream_bf16, state, mstate, h2, v_s, eta_s, inc_s, radio_s,
+    budgets,
+):
+    """One segment from a mid-trajectory carry -> (state', mstate', decs, traces)."""
+    spec = cfg.metrics
+    if traj == "fused":
+        from repro.kernels.ocean_traj import ocean_trajectory_fused
+
+        out = ocean_trajectory_fused(
+            cfg, h2, v_s, eta_s, inc_s, radio_s,
+            stream_bf16=stream_bf16,
+            init_state=state,
+            init_mstate=mstate,
+            raw_metrics=True,
+        )
+        if spec is None:
+            new_state, decs = out
+            return new_state, None, decs, None
+        new_state, decs, mstate, traces = out
+        return new_state, mstate, decs, traces
+
+    def step(carry, inputs):
+        state, mstate = carry
+        if radio_s is None:
+            h2_t, v_t, eta_t, inc_t = inputs
+            radio_t = cfg.radio
+        else:
+            h2_t, v_t, eta_t, inc_t, radio_t = inputs
+        new_state, dec = ocean_round(
+            state, h2_t, v_t, eta_t, cfg, budgets, budget_inc=inc_t,
+            radio=radio_t if radio_s is not None else None,
+        )
+        if spec is None:
+            return (new_state, mstate), (dec, None)
+        ctx = round_context(
+            state.t, dec, new_state, v_t, eta_t, inc_t, radio_t
+        )
+        mstate, traces = metrics_round(spec, cfg, ctx, mstate)
+        return (new_state, mstate), (dec, traces)
+
+    xs = (h2, v_s, eta_s, inc_s)
+    if radio_s is not None:
+        xs = xs + (radio_s,)
+    (state, mstate), (decs, traces) = jax.lax.scan(step, (state, mstate), xs)
+    return state, mstate, decs, traces
+
+
+def _concat_parts(parts):
+    """Concatenate per-segment stacked pytrees along the round axis."""
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *parts
+    )
+
+
+def _simulate_segmented(
+    cfg, h2_seq, eta_seq, v, budgets, budget_seq, radio_seq,
+    traj, stream_bf16, ckpt_spec, resume_from,
+):
+    from repro.checkpoint import trajectory as ckpt_io
+
+    if ckpt_spec is not None and not isinstance(ckpt_spec, CheckpointSpec):
+        raise TypeError(
+            f"checkpoint must be a CheckpointSpec, None, or False; got "
+            f"{ckpt_spec!r}"
+        )
+    if isinstance(h2_seq, jax.core.Tracer):
+        raise ValueError(
+            "checkpointed simulate is a host-side segmented driver and "
+            "cannot run under jit/vmap; call it un-jitted (each segment "
+            "is jitted internally) or use GridEngine for batched sweeps"
+        )
+    T, K = cfg.num_rounds, cfg.num_clients
+    spec = cfg.metrics
+    v_seq = v_schedule(cfg, v)
+    eta_seq = jnp.asarray(eta_seq, jnp.float32)
+    if budget_seq is None:
+        per_round = (cfg.budgets() if budgets is None else budgets) / cfg.num_rounds
+        budget_seq = jnp.broadcast_to(per_round, (T, K))
+    budget_seq = jnp.asarray(budget_seq, jnp.float32)
+    every = ckpt_spec.every_rounds if ckpt_spec is not None else T
+
+    def sl(tree, t0, t1):
+        if tree is None:
+            return None
+        return jax.tree_util.tree_map(lambda x: x[t0:t1], tree)
+
+    def run_segment(state, mstate, t0, t1):
+        return _segment_step(
+            cfg, traj, stream_bf16, state, mstate,
+            h2_seq[t0:t1], v_seq[t0:t1], eta_seq[t0:t1], budget_seq[t0:t1],
+            sl(radio_seq, t0, t1), budgets,
+        )
+
+    state = init_state(cfg)
+    mstate = init_metrics(spec, cfg) if spec is not None else None
+    dec_parts, trace_parts = [], []
+    start = 0
+
+    if resume_from is not None:
+        if resume_from is True:
+            if ckpt_spec is None:
+                raise ValueError(
+                    "resume_from=True needs a CheckpointSpec to name the "
+                    "snapshot directory"
+                )
+            directory = ckpt_spec.directory
+        else:
+            directory = str(resume_from)
+        r = ckpt_io.latest_round(directory)
+        if r is None:
+            raise FileNotFoundError(
+                f"resume_from: no committed snapshots in {directory!r}"
+            )
+
+        def prefix_like(h2p, vp, ep, ip, radp):
+            st0 = init_state(cfg)
+            ms0 = init_metrics(spec, cfg) if spec is not None else None
+            st, ms, d, tr = _segment_step(
+                cfg, traj, stream_bf16, st0, ms0, h2p, vp, ep, ip, radp,
+                budgets,
+            )
+            snap = {"state": st, "decs": d}
+            if spec is not None:
+                snap["mstate"] = ms
+                snap["traces"] = tr
+            return snap
+
+        like = jax.eval_shape(
+            prefix_like,
+            h2_seq[:r], v_seq[:r], eta_seq[:r], budget_seq[:r],
+            sl(radio_seq, 0, r),
+        )
+        snap, _ = ckpt_io.load_snapshot(directory, like, r)
+        state = snap["state"]
+        start = r
+        dec_parts = [snap["decs"]]
+        if spec is not None:
+            mstate = snap["mstate"]
+            trace_parts = [snap["traces"]]
+
+    for t0, t1 in ckpt_io.segment_bounds(T, every, start):
+        state, mstate, decs_s, traces_s = run_segment(state, mstate, t0, t1)
+        dec_parts.append(decs_s)
+        if spec is not None:
+            trace_parts.append(traces_s)
+        if ckpt_spec is not None:
+            snapshot = {"state": state, "decs": _concat_parts(dec_parts)}
+            if spec is not None:
+                snapshot["mstate"] = mstate
+                snapshot["traces"] = _concat_parts(trace_parts)
+            ckpt_io.save_snapshot(ckpt_spec, snapshot, t1)
+
+    decs = _concat_parts(dec_parts)
+    if spec is None:
+        return state, decs
+    return state, decs, finalize_metrics(
+        spec, cfg, mstate, _concat_parts(trace_parts)
+    )

@@ -23,9 +23,16 @@ from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.baselines import PolicyTrace, amo, select_all, smo
-from repro.core.ocean import OceanConfig, simulate
+from repro.core.baselines import PolicyTrace, amo, amo_segment, select_all, smo
+from repro.core.ocean import (
+    OceanConfig,
+    _segment_step,
+    init_state,
+    simulate,
+    v_schedule,
+)
 from repro.core.patterns import eta_schedule
+from repro.obs.metrics import init_metrics
 
 Array = jax.Array
 
@@ -65,6 +72,20 @@ class PolicyParams(NamedTuple):
 
 TraceFn = Callable[[OceanConfig, Array, PolicyParams], PolicyTrace]
 
+# Segmented execution hooks (checkpoint/resume):
+#   seg_init(cfg) -> carry            — the policy's round-to-round state
+#   seg_fn(cfg, carry, h2_full, params, t0, seg_len)
+#       -> (carry', PolicyTrace_seg)  — run seg_len rounds starting at the
+#                                       (traced) global round t0, slicing
+#                                       the FULL per-round sequences held
+#                                       by params/h2_full internally.
+# Stateless policies carry (); OCEAN carries (OceanState, MetricsState?).
+SegInitFn = Callable[[OceanConfig], object]
+SegFn = Callable[
+    [OceanConfig, object, Array, PolicyParams, Array, int],
+    Tuple[object, PolicyTrace],
+]
+
 
 class Policy(NamedTuple):
     """A registered policy: name + pure trace function + resolution hints."""
@@ -73,6 +94,8 @@ class Policy(NamedTuple):
     trace_fn: TraceFn
     default_eta: Optional[str] = None  # eta-schedule name baked into the variant
     needs_key: bool = False            # stochastic policy: params.key required
+    seg_init: Optional[SegInitFn] = None  # segmented-execution carry init
+    seg_fn: Optional[SegFn] = None        # segmented-execution step
 
 
 _REGISTRY: Dict[str, Policy] = {}
@@ -86,9 +109,11 @@ def register_policy(
     *,
     default_eta: Optional[str] = None,
     needs_key: bool = False,
+    seg_init: Optional[SegInitFn] = None,
+    seg_fn: Optional[SegFn] = None,
 ) -> Policy:
     """Add a policy to the registry (overwrites an existing name)."""
-    pol = Policy(name, trace_fn, default_eta, needs_key)
+    pol = Policy(name, trace_fn, default_eta, needs_key, seg_init, seg_fn)
     _REGISTRY[name] = pol
     return pol
 
@@ -216,13 +241,10 @@ def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
     )
 
 
-def pattern_trace(key: Array, counts: Array, num_clients: int) -> PolicyTrace:
-    """Random selection of counts[t] clients per round (§III experiments).
-
-    Bandwidth is split evenly among the selected (energy physics is not the
-    object of §III).
-    """
-    T = counts.shape[0]
+def pattern_trace_rounds(
+    keys: Array, counts: Array, num_clients: int
+) -> PolicyTrace:
+    """The per-round pattern body over pre-split (n, 2) keys + (n,) counts."""
 
     def per_round(k, c):
         scores = jax.random.uniform(k, (num_clients,))
@@ -231,9 +253,19 @@ def pattern_trace(key: Array, counts: Array, num_clients: int) -> PolicyTrace:
         b = jnp.where(a, 1.0 / jnp.maximum(jnp.sum(a), 1), 0.0)
         return a, b
 
-    a, b = jax.vmap(per_round)(jax.random.split(key, T), counts)
+    a, b = jax.vmap(per_round)(keys, counts)
     e = jnp.zeros_like(b)
     return PolicyTrace(a=a, b=b, e=e, num_selected=jnp.sum(a, -1))
+
+
+def pattern_trace(key: Array, counts: Array, num_clients: int) -> PolicyTrace:
+    """Random selection of counts[t] clients per round (§III experiments).
+
+    Bandwidth is split evenly among the selected (energy physics is not the
+    object of §III).
+    """
+    T = counts.shape[0]
+    return pattern_trace_rounds(jax.random.split(key, T), counts, num_clients)
 
 
 def _pattern_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
@@ -242,10 +274,128 @@ def _pattern_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
     return pattern_trace(params.key, params.counts, cfg.num_clients)
 
 
-register_policy("select_all", _select_all_fn)
-register_policy("smo", _smo_fn)
-register_policy("amo", _amo_fn)
-register_policy("ocean", _ocean_fn)  # eta from params or scenario
+# --------------------------------------------------------------------------
+# segmented-execution hooks (checkpoint/resume; see sim/engine.py)
+# --------------------------------------------------------------------------
+def _dslice(tree, t0: Array, n: int):
+    """Slice ``n`` rounds starting at traced index ``t0`` from (T,)-leading
+    leaves (None passes through)."""
+    if tree is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, t0, n, axis=0), tree
+    )
+
+
+def _stateless_init(cfg: OceanConfig):
+    return ()
+
+
+def _select_all_seg(cfg, carry, h2_full, params, t0, n):
+    trace = select_all(
+        cfg, _dslice(h2_full, t0, n), radio_seq=_dslice(params.radio_seq, t0, n)
+    )
+    return carry, trace
+
+
+def _smo_seg(cfg, carry, h2_full, params, t0, n):
+    # The default constant H_k/T cap broadcasts identically on any slice,
+    # so only an explicit time-varying budget_seq needs the global offset.
+    trace = smo(
+        cfg,
+        _dslice(h2_full, t0, n),
+        budgets=params.budgets,
+        budget_seq=_dslice(params.budget_seq, t0, n),
+        radio_seq=_dslice(params.radio_seq, t0, n),
+    )
+    return carry, trace
+
+
+def _amo_seg_init(cfg: OceanConfig):
+    return jnp.zeros((cfg.num_clients,), jnp.float32)
+
+
+def _amo_seg(cfg, spent, h2_full, params, t0, n):
+    ts = t0 + jnp.arange(n)
+    return amo_segment(
+        cfg,
+        spent,
+        _dslice(h2_full, t0, n),
+        ts,
+        budgets=params.budgets,
+        radio_seq=_dslice(params.radio_seq, t0, n),
+    )
+
+
+def _pattern_seg(cfg, carry, h2_full, params, t0, n):
+    if params.counts is None:
+        raise ValueError("policy 'pattern' requires PolicyParams.counts (T,)")
+    # Re-split the SAME full (T, 2) key stream every segment and slice the
+    # block — the per-round keys (the RNG stream position) are identical to
+    # the unsegmented run's, regardless of where the boundaries fall.
+    keys = jax.random.split(params.key, cfg.num_rounds)
+    trace = pattern_trace_rounds(
+        _dslice(keys, t0, n), _dslice(params.counts, t0, n), cfg.num_clients
+    )
+    return carry, trace
+
+
+def _ocean_seg_init(cfg: OceanConfig):
+    mstate = init_metrics(cfg.metrics, cfg) if cfg.metrics is not None else None
+    return (init_state(cfg), mstate)
+
+
+def _ocean_seg(cfg, carry, h2_full, params, t0, n):
+    state, mstate = carry
+    v_seq = v_schedule(cfg, params.v)
+    eta_seq = jnp.asarray(params.eta, jnp.float32)
+    budget_seq = params.budget_seq
+    if budget_seq is None:
+        per = (cfg.budgets() if params.budgets is None else params.budgets)
+        budget_seq = jnp.broadcast_to(
+            per / cfg.num_rounds, (cfg.num_rounds, cfg.num_clients)
+        )
+    budget_seq = jnp.asarray(budget_seq, jnp.float32)
+    state, mstate, decs, traces = _segment_step(
+        cfg,
+        cfg.traj,
+        False,
+        state,
+        mstate,
+        _dslice(h2_full, t0, n),
+        _dslice(v_seq, t0, n),
+        _dslice(eta_seq, t0, n),
+        _dslice(budget_seq, t0, n),
+        _dslice(params.radio_seq, t0, n),
+        params.budgets,
+    )
+    trace = PolicyTrace(
+        a=decs.a,
+        b=decs.b,
+        e=decs.e,
+        num_selected=decs.num_selected,
+        # raw full-trace dict (NOT finalized): the segmented driver
+        # concatenates these and finalizes once from the final carry.
+        metrics=traces,
+    )
+    return (state, mstate), trace
+
+
+register_policy(
+    "select_all", _select_all_fn,
+    seg_init=_stateless_init, seg_fn=_select_all_seg,
+)
+register_policy("smo", _smo_fn, seg_init=_stateless_init, seg_fn=_smo_seg)
+register_policy("amo", _amo_fn, seg_init=_amo_seg_init, seg_fn=_amo_seg)
+register_policy(  # eta from params or scenario
+    "ocean", _ocean_fn, seg_init=_ocean_seg_init, seg_fn=_ocean_seg,
+)
 for _v, _sched in _OCEAN_VARIANTS.items():
-    register_policy(f"ocean-{_v}", _ocean_fn, default_eta=_sched)
-register_policy("pattern", _pattern_fn, needs_key=True)
+    register_policy(
+        f"ocean-{_v}", _ocean_fn, default_eta=_sched,
+        seg_init=_ocean_seg_init, seg_fn=_ocean_seg,
+    )
+register_policy(
+    "pattern", _pattern_fn, needs_key=True,
+    seg_init=_stateless_init, seg_fn=_pattern_seg,
+)

@@ -26,6 +26,7 @@ from typing import Any, Dict, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint.trajectory import CheckpointSpec
 from repro.core.channel import (
     ChannelModel,
     constant_pathloss,
@@ -97,6 +98,12 @@ class Scenario:
                        (default) keeps the legacy programs and payloads
                        byte-identical.  Also a compiled-program static
                        joining the grid's must-agree set.
+      checkpoint:      optional ``repro.checkpoint.CheckpointSpec``
+                       enabling preemption-safe segmented execution with
+                       periodic snapshots (see ``OceanConfig.checkpoint``
+                       / ``GridEngine``).  ``None`` (default) keeps the
+                       legacy programs and serialized payloads
+                       byte-identical.  Joins the grid's must-agree set.
     """
 
     name: str = "stationary"
@@ -115,6 +122,7 @@ class Scenario:
     block_k: int = DEFAULT_BLOCK_K
     traj: str = "scan"
     metrics: Optional[MetricsSpec] = None
+    checkpoint: Optional[CheckpointSpec] = None
 
     def __post_init__(self):
         backend = get_solver(self.solver)  # fail fast on unknown backend names
@@ -158,6 +166,7 @@ class Scenario:
             block_k=self.block_k,
             traj=self.traj,
             metrics=self.metrics,
+            checkpoint=self.checkpoint,
         )
 
     def channel_model(self) -> ChannelModel:
@@ -286,6 +295,10 @@ class Scenario:
             d.pop("metrics")  # keep pre-metrics payloads byte-stable
         else:
             d["metrics"] = self.metrics.to_dict()
+        if self.checkpoint is None:
+            d.pop("checkpoint")  # keep pre-checkpoint payloads byte-stable
+        else:
+            d["checkpoint"] = self.checkpoint.to_dict()
         return d
 
     @classmethod
@@ -310,6 +323,8 @@ class Scenario:
             d["env"] = EnvSpec.from_dict(d["env"])
         if isinstance(d.get("metrics"), dict):
             d["metrics"] = MetricsSpec.from_dict(d["metrics"])
+        if isinstance(d.get("checkpoint"), dict):
+            d["checkpoint"] = CheckpointSpec.from_dict(d["checkpoint"])
         return cls(**d)
 
     def to_json(self) -> str:

@@ -98,6 +98,7 @@ def _traj_kernel(
     chunk: int,
     num_rounds: int,
     has_radio: bool,
+    has_init: bool = False,
 ):
     # stream_bf16: the per-round (chunk, K) output refs may be bf16 — the
     # cast happens only at the final ref store below; the resident q/es
@@ -108,6 +109,9 @@ def _traj_kernel(
     Ref layout (after the closure statics):
       inputs:  h2 (chunk, K), v (chunk,), eta (chunk,), inc (chunk, K)
                [+ the 7 TracedRadio leaves, (chunk,) each, iff has_radio]
+               [+ q0 (1, K), es0 (1, K), t0 (1,) — the restored carry for
+               a mid-trajectory segment launch — and one (1, ...) leaf
+               per restored MetricsState leaf, iff has_init]
       outputs: a, b, e, q_pre, rho (chunk, K); obj, nsel (chunk,);
                q_final, es_final (1, K) — rewritten every step, so after
                the last step they hold the end-of-trajectory state;
@@ -120,13 +124,6 @@ def _traj_kernel(
                chunks exactly like the queues]
     """
     spec = cfg.metrics
-    n_in = 4 + (_N_RADIO_LEAVES if has_radio else 0)
-    h2_ref, v_ref, eta_ref, inc_ref = refs[:4]
-    radio_refs = refs[4:n_in]
-    (
-        a_ref, b_ref, e_ref, qp_ref, rho_ref, obj_ref, ns_ref,
-        qf_ref, esf_ref,
-    ) = refs[n_in : n_in + 9]
     if spec is None:
         n_traces = n_mleaves = 0
         m_treedef = None
@@ -137,6 +134,17 @@ def _traj_kernel(
         )
         n_traces = len(spec.full_trace_entries)
         n_mleaves = len(m_init_leaves)
+    n_in = 4 + (_N_RADIO_LEAVES if has_radio else 0)
+    h2_ref, v_ref, eta_ref, inc_ref = refs[:4]
+    radio_refs = refs[4:n_in]
+    if has_init:
+        q0_ref, es0_ref, t0_ref = refs[n_in : n_in + 3]
+        minit_refs = refs[n_in + 3 : n_in + 3 + n_mleaves]
+        n_in += 3 + n_mleaves
+    (
+        a_ref, b_ref, e_ref, qp_ref, rho_ref, obj_ref, ns_ref,
+        qf_ref, esf_ref,
+    ) = refs[n_in : n_in + 9]
     trace_refs = refs[n_in + 9 : n_in + 9 + n_traces]
     mfinal_refs = refs[n_in + 9 + n_traces : n_in + 9 + n_traces + n_mleaves]
     scratch = refs[n_in + 9 + n_traces + n_mleaves :]
@@ -148,16 +156,29 @@ def _traj_kernel(
 
     @pl.when(ic == 0)
     def _init():
-        q_scr[...] = jnp.zeros_like(q_scr)
-        es_scr[...] = jnp.zeros_like(es_scr)
-        for ref, leaf in zip(m_scrs, m_init_leaves):
-            ref[0] = leaf
+        if has_init:
+            # Segment launch: seed the resident carry from the restored
+            # mid-trajectory state instead of zeros.
+            q_scr[...] = q0_ref[...]
+            es_scr[...] = es0_ref[...]
+            for ref, iref in zip(m_scrs, minit_refs):
+                ref[...] = iref[...]
+        else:
+            q_scr[...] = jnp.zeros_like(q_scr)
+            es_scr[...] = jnp.zeros_like(es_scr)
+            for ref, leaf in zip(m_scrs, m_init_leaves):
+                ref[0] = leaf
 
     fdtype = q_scr.dtype
 
     def step(i, carry):
         q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c, m_leaves, t_bufs = carry
-        t = ic * chunk + i
+        # tl indexes rounds within THIS launch (drives validity masking of
+        # chunk-padded tails); t is the global Alg. 1 round (drives frame
+        # resets).  They coincide unless this is a resumed segment.
+        t = tl = ic * chunk + i
+        if has_init:
+            t = t0_ref[0] + tl
         radio_t = (
             TracedRadio(*(r[i] for r in radio_refs)) if has_radio else None
         )
@@ -171,9 +192,9 @@ def _traj_kernel(
             budget_inc=inc_ref[i],
             radio=radio_t,
         )
-        # Chunk-padded tail rounds (t >= T) stream edge-replicated inputs:
+        # Chunk-padded tail rounds (tl >= T) stream edge-replicated inputs:
         # their math runs but must not advance the resident carry.
-        valid = t < num_rounds
+        valid = tl < num_rounds
         if spec is not None:
             ctx = round_context(
                 t, dec, new_state, v_ref[i], eta_ref[i], inc_ref[i],
@@ -257,6 +278,9 @@ def ocean_trajectory_fused(
     chunk: Optional[int] = None,
     stream_bf16: bool = False,
     interpret: Optional[bool] = None,
+    init_state: Optional[OceanState] = None,
+    init_mstate=None,
+    raw_metrics: bool = False,
 ):
     """Run the whole OCEAN trajectory as one fused kernel.
 
@@ -283,13 +307,29 @@ def ocean_trajectory_fused(
     K >= 10^5 sweeps.  The VMEM-resident carries stay full precision, so
     the trajectory itself (selection masks, queue evolution, final
     state) is unchanged; only the *stored* float traces are quantized.
+
+    ``init_state`` turns the launch into a **mid-trajectory segment**:
+    the resident carry is seeded from the given :class:`OceanState`
+    (global round index included, so frame resets stay aligned) instead
+    of zeros, and the input sequences cover only this segment's rounds.
+    With ``cfg.metrics`` set, ``init_mstate`` must carry the restored
+    ``MetricsState`` the same way.  ``raw_metrics=True`` returns the
+    un-finalized ``(state, decs, mstate, traces)`` so a segmented driver
+    can keep accumulating; ``init_state=None`` (the default) keeps the
+    legacy whole-trajectory lowering byte-identical.
     """
     if interpret is None:
         interpret = _default_interpret()
     T, K = h2_seq.shape
-    if T != cfg.num_rounds:
+    if init_state is None and T != cfg.num_rounds:
         raise ValueError(
             f"h2_seq has {T} rounds but cfg.num_rounds={cfg.num_rounds}"
+        )
+    has_init = init_state is not None
+    if has_init and cfg.metrics is not None and init_mstate is None:
+        raise ValueError(
+            "segment launch with cfg.metrics set needs init_mstate (the "
+            "restored MetricsState carry)"
         )
     fdtype = jnp.result_type(h2_seq.dtype, jnp.float32)
     if chunk is None:
@@ -310,6 +350,7 @@ def ocean_trajectory_fused(
             _pad_rounds(jnp.asarray(leaf, jnp.float32), pad)
             for leaf in radio_seq
         )
+    n_streamed = len(inputs)
 
     def row_spec(x):
         if x.ndim == 2:
@@ -332,7 +373,30 @@ def ocean_trajectory_fused(
         chunk=chunk,
         num_rounds=T,
         has_radio=has_radio,
+        has_init=has_init,
     )
+    in_specs = [row_spec(x) for x in inputs[:n_streamed]]
+    if has_init:
+        # Restored-carry inputs: whole-array blocks, same slot every step
+        # (only read at ic == 0).
+        inputs.append(jnp.asarray(init_state.q, fdtype).reshape(1, K))
+        inputs.append(
+            jnp.asarray(init_state.energy_spent, fdtype).reshape(1, K)
+        )
+        inputs.append(jnp.asarray(init_state.t, jnp.int32).reshape(1))
+        in_specs.append(pl.BlockSpec((1, K), lambda ic: (0, 0)))
+        in_specs.append(pl.BlockSpec((1, K), lambda ic: (0, 0)))
+        in_specs.append(pl.BlockSpec((1,), lambda ic: (0,)))
+        if cfg.metrics is not None:
+            for leaf in jax.tree_util.tree_leaves(init_mstate):
+                leaf = jnp.asarray(leaf)
+                inputs.append(leaf.reshape((1,) + leaf.shape))
+                block = (1,) + leaf.shape
+                in_specs.append(
+                    pl.BlockSpec(
+                        block, lambda ic, _n=leaf.ndim: (0,) * (1 + _n)
+                    )
+                )
     out_specs = [
         pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # a
         pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # b
@@ -382,7 +446,7 @@ def ocean_trajectory_fused(
     out = pl.pallas_call(
         kernel,
         grid=(n_chunks,),
-        in_specs=[row_spec(x) for x in inputs],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch_shapes,
@@ -390,9 +454,14 @@ def ocean_trajectory_fused(
     )(*inputs)
     a, b, e, q_pre, rho, obj, nsel, q_final, es_final = out[:9]
 
+    t_final = (
+        jnp.asarray(init_state.t, jnp.int32) + T
+        if has_init
+        else jnp.asarray(T, jnp.int32)
+    )
     state = OceanState(
         q=q_final[0],
-        t=jnp.asarray(T, jnp.int32),
+        t=t_final,
         energy_spent=es_final[0],
     )
     decs = RoundDecision(
@@ -414,4 +483,6 @@ def ocean_trajectory_fused(
     mstate = jax.tree_util.tree_unflatten(
         m_treedef, [x[0] for x in out[9 + n_traces :]]
     )
+    if raw_metrics:
+        return state, decs, mstate, traces
     return state, decs, finalize_metrics(spec, cfg, mstate, traces)

@@ -16,7 +16,8 @@ Schema (``"schema": 1`` on every record):
 * ``{"record": "module", "run_id", "schema", "name", "ok", "runtime_s",
    "claims": [{"description", "ok"}], "baseline": [{"metric", "status",
    "note"}], "bench_json", "spans": [{"name", "count", "total_s",
-   "mean_s"}], "num_rows"}``
+   "mean_s"}], "checkpoints": [{"kind", "directory", "round", ...}],
+   "num_rows"}``
 * ``{"record": "summary", "run_id", "schema", "ok", "modules",
    "failed", "total_runtime_s"}``
 
@@ -40,7 +41,7 @@ _RUN_COUNTER = itertools.count()
 
 MODULE_RECORD_KEYS = (
     "record", "run_id", "schema", "name", "ok", "runtime_s",
-    "claims", "baseline", "bench_json", "spans", "num_rows",
+    "claims", "baseline", "bench_json", "spans", "checkpoints", "num_rows",
 )
 RUN_RECORD_KEYS = (
     "record", "run_id", "schema", "argv", "config_hash", "jax_version",
@@ -134,6 +135,7 @@ class ManifestWriter:
         baseline: Sequence[Dict[str, Any]] = (),
         bench_json: Optional[str] = None,
         spans: Sequence[Dict[str, Any]] = (),
+        checkpoints: Sequence[Dict[str, Any]] = (),
     ) -> None:
         # CLAIM rows (benchmarks.common.claim) carry PASS/FAIL in ``value``
         # and the human-readable description in ``note``.
@@ -156,6 +158,9 @@ class ManifestWriter:
                 "baseline": list(baseline),
                 "bench_json": bench_json,
                 "spans": list(spans),
+                # drained repro.checkpoint snapshot save/restore events —
+                # the preemption audit trail of a checkpointed module.
+                "checkpoints": list(checkpoints),
                 "num_rows": len(rows),
             }
         )

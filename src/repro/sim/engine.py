@@ -45,6 +45,22 @@ Three execution knobs (see the README "Performance" section):
   auto-built mesh of all local devices via ``shard_map`` (padded to the
   mesh size, donated input buffers off-CPU).  Cells are independent, so
   the sharded program is bit-identical to the unsharded nested-vmap one.
+
+Preemption safety (``checkpoint=``, see the README "Checkpoint/resume"
+section): a ``repro.checkpoint.CheckpointSpec`` switches ``run`` to a
+*segmented* driver — the T-round trajectory is split at multiples of
+``every_rounds``, each segment is one jitted program (one ``lax.scan``
+or one fused-kernel launch per policy, continuing from carried state),
+and at every boundary the full carry plus the decision/telemetry prefix
+is snapshotted atomically.  ``run(..., resume_from=...)`` restores the
+latest committed snapshot and re-enters the same segment grid, so a
+killed-and-resumed sweep is bitwise identical to an uninterrupted one —
+a structural identity (same op sequence), not a numerical accident.
+``checkpoint=None`` (the default) keeps the legacy single-program path
+byte-identical.  The segmented driver is host-side and runs unsharded
+(``shard=`` is ignored); environment streams are re-sampled
+deterministically from the seeds on resume, so snapshots hold only
+policy carries and trace prefixes.
 """
 from __future__ import annotations
 
@@ -57,6 +73,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec
 
+from repro.checkpoint import trajectory as ckpt_io
+from repro.checkpoint.trajectory import CheckpointSpec
 from repro.core.baselines import PolicyTrace
 from repro.core.ocean import OceanConfig
 from repro.core.policy import (
@@ -70,7 +88,7 @@ from repro.env.channel import sample_channel_process
 from repro.env.energy import sample_budget_process
 from repro.env.radio import TracedRadio, sample_radio_process
 from repro.env.spec import env_cell_keys, radio_cell_key
-from repro.obs.metrics import MetricsSpec
+from repro.obs.metrics import MetricsSpec, finalize_metrics
 from repro.obs.spans import trace_span
 
 Array = jax.Array
@@ -167,6 +185,7 @@ def _check_compatible(scenarios: Sequence[Scenario]) -> Scenario:
             for field in (
                 "num_rounds", "num_clients", "frame_len", "solver",
                 "ranking", "top_m", "block_k", "traj", "metrics",
+                "checkpoint",
             )
             if getattr(base, field) != getattr(sc, field)
         ]
@@ -211,6 +230,15 @@ class GridEngine:
                  telemetry dict per policy-axis entry — recorded inside
                  the same single compiled program.  Also a
                  compiled-program static joining the must-agree set.
+      checkpoint: preemption-safe segmented execution override (a
+                 ``repro.checkpoint.CheckpointSpec``); None keeps the
+                 scenarios' ``checkpoint`` field (default off — the
+                 legacy single-program path, byte-identical).  When set,
+                 ``run`` executes segment by segment and snapshots the
+                 full sweep state at every ``every_rounds`` boundary;
+                 ``run(..., resume_from=...)`` restores the latest
+                 snapshot.  Joins the must-agree statics; the segmented
+                 driver runs unsharded (``shard=`` is ignored).
       shard:     multi-device execution: the flattened (S*N) cell axis is
                  ``shard_map``-ped over an auto-built mesh of all local
                  devices, with donated input buffers (off-CPU).  None =
@@ -232,6 +260,7 @@ class GridEngine:
         block_k: Optional[int] = None,
         traj: Optional[str] = None,
         metrics: Optional[MetricsSpec] = None,
+        checkpoint: Optional[CheckpointSpec] = None,
     ):
         if not scenarios or not policies:
             raise ValueError("need at least one scenario and one policy")
@@ -247,6 +276,7 @@ class GridEngine:
                 ("block_k", block_k),
                 ("traj", traj),
                 ("metrics", metrics),
+                ("checkpoint", checkpoint),
             )
             if v is not None
         }
@@ -299,11 +329,34 @@ class GridEngine:
         else:
             self._fn = jax.jit(self._build)
 
-    # -- the single compiled program ----------------------------------------
-    def _build(
-        self, seed_arr, chan_params, budget_params, radio_params, env_salts,
-        etas, base_key, learn_keys,
+        # Segmented (checkpointed) execution: per-segment programs cached
+        # by segment length — equal-length segments share one executable
+        # (the global round offset t0 is a traced argument).
+        self._seg_cache: Dict[int, object] = {}
+        self._sample_fn = jax.jit(self._sample_grid_env)
+        self._keys_fn = jax.jit(self._grid_keys)
+        if self.cfg.checkpoint is not None:
+            missing = [
+                pol.name for pol, _ in self._resolved if pol.seg_fn is None
+            ]
+            if missing:
+                raise ValueError(
+                    f"checkpointed (segmented) execution needs seg_init/"
+                    f"seg_fn hooks, missing for: {', '.join(missing)}; "
+                    f"register them or run without checkpoint="
+                )
+
+    # -- environment sampling (shared by the legacy and segmented paths) -----
+    def _sample_grid_env(
+        self, seed_arr, chan_params, budget_params, radio_params, env_salts
     ):
+        """Sample every (scenario, seed) cell's environment streams.
+
+        The exact traced ops of the legacy ``_build`` sampling block — the
+        segmented driver re-runs this same program, so a resumed sweep
+        re-derives bit-identical streams from the seeds instead of
+        snapshotting them.
+        """
         cfg = self.cfg
         T, K = cfg.num_rounds, cfg.num_clients
 
@@ -319,16 +372,14 @@ class GridEngine:
             radio_seq = sample_radio_process(rp, k_radio, T)
             return h2, dh, total, radio_seq
 
-        with trace_span("grid/sample_env"):
-            over_seeds = jax.vmap(
-                sample_cell, in_axes=(None, None, None, None, 0)
-            )
-            h2, budget_inc, budget_total, radio_seq = jax.vmap(
-                over_seeds, in_axes=(0, 0, 0, 0, None)
-            )(chan_params, budget_params, radio_params, env_salts, seed_arr)
-        # h2/budget_inc: (S, N, T, K); budget_total: (S, N, K);
-        # radio_seq: TracedRadio of (S, N, T) leaves
+        over_seeds = jax.vmap(
+            sample_cell, in_axes=(None, None, None, None, 0)
+        )
+        return jax.vmap(
+            over_seeds, in_axes=(0, 0, 0, 0, None)
+        )(chan_params, budget_params, radio_params, env_salts, seed_arr)
 
+    def _grid_keys(self, seed_arr, base_key):
         def cell_keys(s_idx):
             return jax.vmap(
                 lambda seed: jax.random.fold_in(
@@ -336,7 +387,23 @@ class GridEngine:
                 )
             )(seed_arr)
 
-        keys = jax.vmap(cell_keys)(jnp.arange(len(self.scenarios)))  # (S, N, 2)
+        return jax.vmap(cell_keys)(jnp.arange(len(self.scenarios)))
+
+    # -- the single compiled program ----------------------------------------
+    def _build(
+        self, seed_arr, chan_params, budget_params, radio_params, env_salts,
+        etas, base_key, learn_keys,
+    ):
+        cfg = self.cfg
+
+        with trace_span("grid/sample_env"):
+            h2, budget_inc, budget_total, radio_seq = self._sample_grid_env(
+                seed_arr, chan_params, budget_params, radio_params, env_salts
+            )
+        # h2/budget_inc: (S, N, T, K); budget_total: (S, N, K);
+        # radio_seq: TracedRadio of (S, N, T) leaves
+
+        keys = self._grid_keys(seed_arr, base_key)  # (S, N, 2)
 
         traces = []
         histories = []
@@ -497,6 +564,191 @@ class GridEngine:
             to_grid(radio_seq), history, to_grid(metrics),
         )
 
+    # -- segmented (checkpointed) execution ----------------------------------
+    def _init_carries(self, S: int, N: int):
+        """Every policy's seg_init carry, broadcast over the (S, N) grid."""
+
+        def bc(x):
+            x = jnp.asarray(x)
+            return jnp.broadcast_to(x, (S, N) + x.shape)
+
+        return tuple(
+            jax.tree_util.tree_map(bc, pol.seg_init(self.cfg))
+            for pol, _ in self._resolved
+        )
+
+    def _segment_fn(self, n: int):
+        """The jitted per-segment grid program for segments of length n.
+
+        Receives the FULL per-round streams plus a traced global offset
+        ``t0``; each policy's seg_fn slices its block internally, so all
+        equal-length segments reuse one executable.
+        """
+        if n in self._seg_cache:
+            return self._seg_cache[n]
+        cfg = self.cfg
+
+        def seg(carries, h2, etas, total, inc, radio_seq, keys, t0):
+            new_carries, traces = [], []
+            for i, (pol, pp) in enumerate(self._resolved):
+                def cell(
+                    carry, h2_cell, eta_s, total_cell, inc_cell, radio_cell,
+                    key_cell, pol=pol, pp=pp,
+                ):
+                    params = resolve_params(
+                        pol,
+                        cfg,
+                        pp._replace(
+                            key=pp.key if pp.key is not None else key_cell
+                        ),
+                        scenario_eta=eta_s,
+                        scenario_budgets=total_cell,
+                        scenario_budget_seq=inc_cell,
+                        scenario_radio_seq=radio_cell,
+                    )
+                    return pol.seg_fn(cfg, carry, h2_cell, params, t0, n)
+
+                with trace_span(f"grid/policy/{pol.name}"):
+                    over_seeds = jax.vmap(
+                        cell, in_axes=(0, 0, None, 0, 0, 0, 0)
+                    )
+                    c2, tr = jax.vmap(over_seeds)(
+                        carries[i], h2, etas, total, inc, radio_seq, keys
+                    )
+                new_carries.append(c2)
+                traces.append(tr)
+            return tuple(new_carries), tuple(traces)
+
+        fn = jax.jit(seg)
+        self._seg_cache[n] = fn
+        return fn
+
+    @staticmethod
+    def _concat_traces(parts):
+        """Concatenate per-segment (S, N, n, ...) trace tuples on axis 2."""
+        if len(parts) == 1:
+            return parts[0]
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=2), *parts
+        )
+
+    def _run_segmented(self, seed_arr, base_key, learn_keys, resume_from):
+        cfg = self.cfg
+        ckpt_spec = cfg.checkpoint
+        T = cfg.num_rounds
+        S, N = len(self.scenarios), int(seed_arr.shape[0])
+        missing = [pol.name for pol, _ in self._resolved if pol.seg_fn is None]
+        if missing:
+            raise ValueError(
+                f"checkpointed (segmented) execution needs seg_init/seg_fn "
+                f"hooks, missing for: {', '.join(missing)}"
+            )
+        every = ckpt_spec.every_rounds if ckpt_spec is not None else T
+
+        h2, budget_inc, budget_total, radio_seq = self._sample_fn(
+            seed_arr, self._chan_params, self._budget_params,
+            self._radio_params, self._env_salts,
+        )
+        keys = self._keys_fn(seed_arr, base_key)
+        etas = self._etas
+
+        def sl(tree, r):
+            return jax.tree_util.tree_map(
+                lambda x: x[:, :, :r], tree
+            )
+
+        carries = self._init_carries(S, N)
+        trace_parts = []
+        start = 0
+
+        if resume_from is not None and resume_from is not False:
+            if resume_from is True:
+                if ckpt_spec is None:
+                    raise ValueError(
+                        "resume_from=True needs a CheckpointSpec (engine "
+                        "checkpoint= or Scenario.checkpoint) to name the "
+                        "snapshot directory"
+                    )
+                directory = ckpt_spec.directory
+            else:
+                directory = str(resume_from)
+            r = ckpt_io.latest_round(directory)
+            if r is None:
+                raise FileNotFoundError(
+                    f"resume_from: no committed snapshots in {directory!r}"
+                )
+
+            def prefix_like(h2p, incp, radp):
+                c0 = self._init_carries(S, N)
+                seg = self._segment_fn(r)
+                c1, tr = seg(
+                    c0, h2p, etas, budget_total, incp, radp, keys,
+                    jnp.asarray(0, jnp.int32),
+                )
+                return {"carries": c1, "traces": tr}
+
+            like = jax.eval_shape(
+                prefix_like, sl(h2, r), sl(budget_inc, r),
+                jax.tree_util.tree_map(lambda x: x[:, :, :r], radio_seq),
+            )
+            snap, _ = ckpt_io.load_snapshot(directory, like, r)
+            carries = snap["carries"]
+            trace_parts = [snap["traces"]]
+            start = r
+
+        for t0, t1 in ckpt_io.segment_bounds(T, every, start):
+            seg = self._segment_fn(t1 - t0)
+            carries, traces_s = seg(
+                carries, h2, etas, budget_total, budget_inc, radio_seq, keys,
+                jnp.asarray(t0, jnp.int32),
+            )
+            trace_parts.append(traces_s)
+            if ckpt_spec is not None:
+                snapshot = {
+                    "carries": carries,
+                    "traces": self._concat_traces(trace_parts),
+                }
+                ckpt_io.save_snapshot(ckpt_spec, snapshot, t1)
+
+        traces = self._concat_traces(trace_parts)
+
+        # OCEAN traces carry RAW full-trace telemetry; finalize each from
+        # its final carried MetricsState (once, at the end — exactly what
+        # the single-program path does inside its scan epilogue).
+        spec = cfg.metrics
+        finalized = []
+        for i, (pol, _) in enumerate(self._resolved):
+            tr = traces[i]
+            if spec is not None and tr.metrics is not None:
+                _state, mstate = carries[i]
+                mets = jax.jit(
+                    jax.vmap(
+                        jax.vmap(
+                            lambda ms, t: finalize_metrics(spec, cfg, ms, t)
+                        )
+                    )
+                )(mstate, tr.metrics)
+                tr = tr._replace(metrics=mets)
+            finalized.append(tr)
+        traces = tuple(finalized)
+
+        history = None
+        if self.experiment is not None:
+            run = self.experiment.run
+            hfn = jax.jit(jax.vmap(jax.vmap(run)))
+            hists = [hfn(learn_keys, tr) for tr in traces]
+            history = {k: jnp.stack([h[k] for h in hists]) for k in hists[0]}
+
+        a = jnp.stack([t.a for t in traces])
+        b = jnp.stack([t.b for t in traces])
+        e = jnp.stack([t.e for t in traces])
+        ns = jnp.stack([t.num_selected for t in traces])
+        metrics = tuple(t.metrics for t in traces)
+        return (
+            a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
+            metrics,
+        )
+
     # -- public API ----------------------------------------------------------
     def run(
         self,
@@ -505,12 +757,20 @@ class GridEngine:
         base_key: Optional[Array] = None,
         learn_keys: Optional[Array] = None,
         learn_seed: int = 0,
+        resume_from: Union[str, bool, None] = None,
     ) -> GridResult:
         """Sweep the grid over ``seeds``; compiled once per grid shape.
 
         ``learn_keys`` — optional explicit (S, N, 2) PRNG keys for the
         learning trajectories (default: fold (scenario, seed) into
         ``PRNGKey(learn_seed)``).  ``base_key`` seeds stochastic policies.
+
+        ``resume_from`` — restore the latest committed snapshot before
+        running: ``True`` resumes from the configured ``CheckpointSpec``
+        directory, a string names an explicit snapshot directory.  The
+        resumed sweep must use the same grid, seeds, and keys as the
+        interrupted one (snapshots hold only policy carries and trace
+        prefixes; environment streams are re-derived from the seeds).
         """
         seeds = tuple(int(s) for s in seeds)
         seed_arr = jnp.asarray(seeds, jnp.uint32)
@@ -537,7 +797,14 @@ class GridEngine:
                     f"learn_keys must have leading shape (S={S}, N={N}), "
                     f"got {learn_keys.shape}"
                 )
-        if self._shard:
+        if self.cfg.checkpoint is not None or (
+            resume_from is not None and resume_from is not False
+        ):
+            (
+                a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
+                metrics,
+            ) = self._run_segmented(seed_arr, base_key, learn_keys, resume_from)
+        elif self._shard:
             (
                 a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
                 metrics,
@@ -589,15 +856,18 @@ def run_grid(
     block_k: Optional[int] = None,
     traj: Optional[str] = None,
     metrics: Optional[MetricsSpec] = None,
+    checkpoint: Optional[CheckpointSpec] = None,
     base_key: Optional[Array] = None,
     learn_keys: Optional[Array] = None,
     learn_seed: int = 0,
+    resume_from: Union[str, bool, None] = None,
 ) -> GridResult:
     """One-shot convenience wrapper around ``GridEngine``."""
     return GridEngine(
         scenarios, policies, experiment=experiment, solver=solver, shard=shard,
         ranking=ranking, top_m=top_m, block_k=block_k, traj=traj,
-        metrics=metrics,
+        metrics=metrics, checkpoint=checkpoint,
     ).run(
-        seeds, base_key=base_key, learn_keys=learn_keys, learn_seed=learn_seed
+        seeds, base_key=base_key, learn_keys=learn_keys, learn_seed=learn_seed,
+        resume_from=resume_from,
     )

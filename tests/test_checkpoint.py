@@ -1,0 +1,161 @@
+"""Hardened checkpoint IO: bit-exact round-trips, atomicity, stale tmps.
+
+The preemption-safety contract of ``repro.checkpoint.ckpt``:
+
+* every leaf dtype round-trips **bit-exactly** — including ``bfloat16``
+  (a user-registered numpy dtype npz cannot store natively), bools, and
+  ints — via the in-archive dtype manifest;
+* a writer killed mid-save leaves only ``.tmp`` litter that
+  ``latest_step`` ignores and the next save sweeps up, so a resume can
+  never read a torn file;
+* dtype disagreement between a manifest-carrying checkpoint and the
+  restore template is an error, never a silent cast.
+
+Plus the ``CheckpointSpec`` / ``segment_bounds`` semantics the segmented
+trajectory drivers build on.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_pytree, save_pytree
+from repro.checkpoint.trajectory import (
+    CheckpointSpec,
+    drain_events,
+    latest_round,
+    load_snapshot,
+    save_snapshot,
+    segment_bounds,
+)
+
+from test_checkpoint_common import (  # noqa: E402
+    Carry,
+    _DTYPES,
+    _leaf,
+    _trees_bitwise_equal,
+    mixed_tree,
+)
+
+
+@pytest.mark.parametrize("seed", (0, 1, 2, 3))
+def test_mixed_dtype_pytree_roundtrips_bitwise(tmp_path, seed):
+    """Nested dict/list/namedtuple pytrees with f32/bf16/i32/bool leaves
+    survive a save/load cycle bit-for-bit (deterministic sweep; the
+    hypothesis version lives in test_checkpoint_properties.py)."""
+    rng = np.random.default_rng(seed)
+    dts = [_DTYPES[(seed + i) % len(_DTYPES)] for i in range(3)]
+    tree = mixed_tree(rng, *dts, n=seed + 2)
+    save_pytree(str(tmp_path), tree, step=seed)
+    restored, step = load_pytree(str(tmp_path), tree)
+    assert step == seed
+    _trees_bitwise_equal(tree, restored)
+
+
+def test_bfloat16_extremes_roundtrip_bitwise(tmp_path):
+    """bf16 specials (inf, nan, subnormals, -0.0) must round-trip exactly
+    — npz has no native bf16, so they travel as raw bytes."""
+    vals = np.asarray(
+        [0.0, -0.0, np.inf, -np.inf, np.nan, 1e-40, -1e-40, 3.14159, 65504.0],
+        np.float32,
+    )
+    tree = {"x": jnp.asarray(vals, jnp.bfloat16)}
+    save_pytree(str(tmp_path), tree, step=0)
+    restored, _ = load_pytree(str(tmp_path), tree)
+    assert restored["x"].dtype == jnp.bfloat16
+    assert (
+        np.asarray(restored["x"]).tobytes() == np.asarray(tree["x"]).tobytes()
+    )
+
+
+def test_dtype_mismatch_is_an_error_not_a_cast(tmp_path):
+    save_pytree(str(tmp_path), {"x": jnp.ones((3,), jnp.float32)}, step=1)
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        load_pytree(str(tmp_path), {"x": jnp.ones((3,), jnp.bfloat16)})
+
+
+def test_shape_dtype_struct_template(tmp_path):
+    """jax.eval_shape output works as the restore template (the segmented
+    resume path builds its template exactly this way)."""
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3), "t": jnp.int32(7)}
+    save_pytree(str(tmp_path), tree, step=4)
+    like = jax.eval_shape(lambda: tree)
+    restored, step = load_pytree(str(tmp_path), like)
+    assert step == 4
+    _trees_bitwise_equal(tree, restored)
+
+
+# --------------------------------------------------------------------------
+# preemption safety: tmp litter and atomic replace
+# --------------------------------------------------------------------------
+def test_latest_step_ignores_tmp_litter(tmp_path):
+    save_pytree(str(tmp_path), {"x": jnp.zeros(2)}, step=3)
+    # a killed writer's torn tmp for a LATER step must not win
+    (tmp_path / "step_00000009.npz.tmp.99999999").write_bytes(b"torn")
+    assert latest_step(str(tmp_path)) == 3
+    restored, step = load_pytree(str(tmp_path), {"x": jnp.zeros(2)})
+    assert step == 3
+
+
+def test_save_sweeps_dead_writer_tmps(tmp_path):
+    stale = tmp_path / "step_00000005.npz.tmp.99999999"  # pid surely dead
+    stale.write_bytes(b"torn")
+    save_pytree(str(tmp_path), {"x": jnp.zeros(2)}, step=6)
+    assert not stale.exists()
+    assert latest_step(str(tmp_path)) == 6
+
+
+def test_save_is_atomic_via_replace(tmp_path, monkeypatch):
+    """A crash between write and replace leaves no committed step."""
+    import repro.checkpoint.ckpt as ck
+
+    def boom(src, dst):
+        raise RuntimeError("killed before rename")
+
+    monkeypatch.setattr(ck.os, "replace", boom)
+    with pytest.raises(RuntimeError):
+        save_pytree(str(tmp_path), {"x": jnp.zeros(2)}, step=1)
+    assert latest_step(str(tmp_path)) is None
+
+
+# --------------------------------------------------------------------------
+# CheckpointSpec / segment_bounds / snapshot events
+# --------------------------------------------------------------------------
+def test_checkpoint_spec_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        CheckpointSpec(directory="", every_rounds=5)
+    with pytest.raises(ValueError, match="every_rounds"):
+        CheckpointSpec(directory="/tmp/x", every_rounds=0)
+    spec = CheckpointSpec(directory="/tmp/x", every_rounds=5)
+    assert CheckpointSpec.from_dict(spec.to_dict()) == spec
+    assert hash(spec)  # must ride jit statics
+
+
+def test_segment_bounds_align_to_global_grid():
+    assert segment_bounds(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert segment_bounds(10, 4, start=4) == [(4, 8), (8, 10)]
+    # a mid-segment start still snaps to the global boundary grid
+    assert segment_bounds(10, 4, start=5) == [(5, 8), (8, 10)]
+    assert segment_bounds(10, 100) == [(0, 10)]
+    assert segment_bounds(10, 4, start=10) == []
+    with pytest.raises(ValueError):
+        segment_bounds(10, 4, start=11)
+
+
+def test_snapshot_io_records_events(tmp_path):
+    spec = CheckpointSpec(directory=str(tmp_path), every_rounds=2)
+    snap = {"q": jnp.arange(4, dtype=jnp.float32), "t": jnp.int32(2)}
+    drain_events()
+    save_snapshot(spec, snap, 2)
+    save_snapshot(spec, jax.tree.map(lambda x: x + 1, snap), 4)
+    assert latest_round(str(tmp_path)) == 4
+    restored, r = load_snapshot(str(tmp_path), snap)
+    assert r == 4
+    _trees_bitwise_equal(jax.tree.map(lambda x: x + 1, snap), restored)
+    events = drain_events()
+    kinds = [(e["kind"], e["round"]) for e in events]
+    assert kinds == [("save", 2), ("save", 4), ("restore", 4)]
+    assert all(e["directory"] == str(tmp_path) for e in events)
+    assert drain_events() == []

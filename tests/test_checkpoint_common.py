@@ -1,0 +1,40 @@
+"""Shared helpers for the checkpoint round-trip tests.
+
+Used by tests/test_checkpoint.py (deterministic) and
+tests/test_checkpoint_properties.py (hypothesis, dev extra).
+"""
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Carry = namedtuple("Carry", ("q", "flags"))
+
+_DTYPES = (jnp.float32, jnp.bfloat16, jnp.int32, jnp.bool_)
+
+
+def _leaf(rng, dtype, shape):
+    x = rng.standard_normal(shape) * 10
+    if dtype == jnp.bool_:
+        return jnp.asarray(x > 0)
+    return jnp.asarray(x, dtype)
+
+
+def mixed_tree(rng, d0, d1, d2, n: int):
+    """A nested dict/list/namedtuple pytree with mixed-dtype leaves."""
+    return {
+        "state": Carry(q=_leaf(rng, d0, (n, 3)), flags=_leaf(rng, d1, (n,))),
+        "parts": [_leaf(rng, d2, (2, n)), _leaf(rng, d0, ())],
+        "nested": {"deep": {"x": _leaf(rng, d1, (1, 1, n))}},
+    }
+
+
+def _trees_bitwise_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.dtype == ya.dtype
+        assert xa.shape == ya.shape
+        assert xa.tobytes() == ya.tobytes()

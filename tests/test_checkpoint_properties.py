@@ -1,0 +1,40 @@
+"""Hypothesis property tests for checkpoint round-trips (dev extra).
+
+Randomized nested dict/list/namedtuple pytrees with mixed dtypes
+(f32 / bf16 / i32 / bool) must survive a save/load cycle bit-for-bit.
+Complements the deterministic sweep in tests/test_checkpoint.py.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import load_pytree, save_pytree  # noqa: E402
+from test_checkpoint_common import (  # noqa: E402
+    _DTYPES,
+    _trees_bitwise_equal,
+    mixed_tree,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d0=st.sampled_from(_DTYPES),
+    d1=st.sampled_from(_DTYPES),
+    d2=st.sampled_from(_DTYPES),
+    n=st.integers(1, 7),
+)
+def test_mixed_dtype_pytree_roundtrips_bitwise(
+    tmp_path_factory, seed, d0, d1, d2, n
+):
+    directory = str(tmp_path_factory.mktemp("ck"))
+    rng = np.random.default_rng(seed)
+    tree = mixed_tree(rng, d0, d1, d2, n)
+    save_pytree(directory, tree, step=seed % 1000)
+    restored, step = load_pytree(directory, tree)
+    assert step == seed % 1000
+    _trees_bitwise_equal(tree, restored)

@@ -1,0 +1,278 @@
+"""Preemption-safe segmented execution: checkpoint/resume bit-identity.
+
+The acceptance criterion of the segmented drivers (``repro.core.ocean``
+single-trajectory, ``repro.sim.engine`` grid): with a ``CheckpointSpec``
+the run splits into per-segment programs and snapshots every boundary,
+and BOTH
+
+* the segmented run must equal the legacy single-program run bitwise
+  (decision traces AND telemetry), on ``traj="scan"`` and ``"fused"``;
+* a run killed mid-sweep (SIGKILL, no cleanup) and resumed from the
+  latest committed snapshot must equal the uninterrupted run bitwise.
+
+The kill test mirrors tests/test_grid_shard.py's subprocess idiom: the
+child monkeypatches ``repro.checkpoint.trajectory.save_snapshot`` to
+SIGKILL itself after the first committed snapshot, the parent verifies
+returncode -9, then a resumed child completes the sweep and dumps its
+results for a bitwise comparison against an uninterrupted child.
+"""
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.trajectory import CheckpointSpec, drain_events
+from repro.core import EnvSpec, OceanConfig, PolicyParams, RadioParams, Scenario
+from repro.core.ocean import simulate
+from repro.core.patterns import eta_schedule
+from repro.obs.metrics import MetricsSpec
+from repro.sim import GridEngine, run_grid
+
+T, K = 25, 6
+
+SPEC = MetricsSpec.of(
+    "queue:full_trace", "num_selected:mean", "energy_headroom:last"
+)
+
+
+def _scenarios():
+    base = dict(num_clients=K, num_rounds=T, frame_len=10)
+    return [
+        Scenario(name="static", **base),
+        Scenario(name="spectrum", env=EnvSpec(radio="spectrum_sharing"), **base),
+    ]
+
+
+POLICIES = [
+    ("ocean-a", PolicyParams(v=1e-5)),
+    ("ocean-u", PolicyParams(v=1e-5)),
+    ("smo", PolicyParams()),
+    ("amo", PolicyParams()),
+    ("select_all", PolicyParams()),
+]
+SEEDS = (0, 7, 11)
+
+
+def _tree_bytes(tree):
+    return [
+        (np.asarray(x).dtype.str, np.asarray(x).tobytes())
+        for x in jax.tree_util.tree_leaves(tree)
+    ]
+
+
+def _assert_bitwise(name, ref, got):
+    rb, gb = _tree_bytes(ref), _tree_bytes(got)
+    assert len(rb) == len(gb), name
+    for i, (r, g) in enumerate(zip(rb, gb)):
+        assert r == g, f"{name}: leaf {i} differs"
+
+
+def _grid_tree(res):
+    return {
+        "a": res.a,
+        "b": res.b,
+        "e": res.e,
+        "num_selected": res.num_selected,
+        "energy_spent": res.energy_spent,
+        "h2": res.h2,
+        "metrics": res.metrics,
+        "history": res.history,
+    }
+
+
+# --------------------------------------------------------------------------
+# single-trajectory simulate(): segmented == legacy, resume == uninterrupted
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("traj", ("scan", "fused"))
+@pytest.mark.parametrize("with_metrics", (False, True))
+def test_simulate_checkpointed_bit_identical(tmp_path, traj, with_metrics):
+    cfg = OceanConfig(
+        num_clients=K, num_rounds=T, radio=RadioParams(), frame_len=10,
+        traj=traj, metrics=SPEC if with_metrics else None,
+    )
+    h2 = jax.random.exponential(jax.random.PRNGKey(3), (T, K)) * 2.5e-4
+    eta = eta_schedule("uniform", T)
+    ref = simulate(cfg, h2, eta, 1e-5)
+    spec = CheckpointSpec(directory=str(tmp_path), every_rounds=7)
+    got = simulate(cfg, h2, eta, 1e-5, checkpoint=spec)
+    _assert_bitwise(f"{traj} segmented", ref, got)
+    # snapshots at every boundary including T
+    steps = sorted(
+        int(f.split("_")[1].split(".")[0]) for f in os.listdir(tmp_path)
+    )
+    assert steps == [7, 14, 21, 25]
+    # resume mid-trajectory: drop the later snapshots, restart from 14
+    for s in (21, 25):
+        os.remove(tmp_path / f"step_{s:08d}.npz")
+    res = simulate(cfg, h2, eta, 1e-5, checkpoint=spec, resume_from=True)
+    _assert_bitwise(f"{traj} resumed", ref, res)
+
+
+def test_simulate_checkpoint_rejects_jit(tmp_path):
+    cfg = OceanConfig(
+        num_clients=K, num_rounds=T, radio=RadioParams(), frame_len=10,
+        checkpoint=CheckpointSpec(directory=str(tmp_path), every_rounds=7),
+    )
+    h2 = jax.random.exponential(jax.random.PRNGKey(0), (T, K)) * 2.5e-4
+    eta = eta_schedule("uniform", T)
+    with pytest.raises(ValueError, match="under jit"):
+        jax.jit(lambda h: simulate(cfg, h, eta, 1e-5))(h2)
+
+
+# --------------------------------------------------------------------------
+# grid engine: segmented == legacy, resume == uninterrupted
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("traj", ("scan", "fused"))
+@pytest.mark.parametrize("with_metrics", (False, True))
+def test_grid_checkpointed_bit_identical(tmp_path, traj, with_metrics):
+    mets = SPEC if with_metrics else None
+    ref = run_grid(_scenarios(), POLICIES, seeds=SEEDS, traj=traj, metrics=mets)
+    ck = CheckpointSpec(directory=str(tmp_path), every_rounds=7)
+    got = run_grid(
+        _scenarios(), POLICIES, seeds=SEEDS, traj=traj, metrics=mets,
+        checkpoint=ck,
+    )
+    _assert_bitwise(f"grid {traj} segmented", _grid_tree(ref), _grid_tree(got))
+    # kill the sweep's tail: only snapshots up to round 14 survive
+    for s in (21, 25):
+        os.remove(tmp_path / f"step_{s:08d}.npz")
+    res = run_grid(
+        _scenarios(), POLICIES, seeds=SEEDS, traj=traj, metrics=mets,
+        checkpoint=ck, resume_from=True,
+    )
+    _assert_bitwise(f"grid {traj} resumed", _grid_tree(ref), _grid_tree(res))
+
+
+def test_grid_checkpoint_records_manifest_events(tmp_path):
+    drain_events()
+    ck = CheckpointSpec(directory=str(tmp_path), every_rounds=10)
+    run_grid(_scenarios()[:1], POLICIES[:2], seeds=(0,), checkpoint=ck)
+    events = drain_events()
+    assert [(e["kind"], e["round"]) for e in events] == [
+        ("save", 10), ("save", 20), ("save", 25)
+    ]
+    for s in (20, 25):
+        os.remove(tmp_path / f"step_{s:08d}.npz")
+    run_grid(
+        _scenarios()[:1], POLICIES[:2], seeds=(0,), checkpoint=ck,
+        resume_from=True,
+    )
+    events = drain_events()
+    assert [(e["kind"], e["round"]) for e in events] == [
+        ("restore", 10), ("save", 20), ("save", 25)
+    ]
+
+
+def test_grid_checkpoint_must_agree_across_scenarios(tmp_path):
+    import dataclasses
+
+    ck = CheckpointSpec(directory=str(tmp_path), every_rounds=5)
+    s1, s2 = _scenarios()
+    s1 = dataclasses.replace(s1, checkpoint=ck)
+    with pytest.raises(ValueError, match="checkpoint"):
+        GridEngine([s1, s2], ["ocean-u"])
+
+
+def test_resume_without_snapshots_is_an_error(tmp_path):
+    ck = CheckpointSpec(directory=str(tmp_path), every_rounds=5)
+    with pytest.raises(FileNotFoundError, match="no committed snapshots"):
+        run_grid(
+            _scenarios()[:1], POLICIES[:1], seeds=(0,), checkpoint=ck,
+            resume_from=True,
+        )
+
+
+# --------------------------------------------------------------------------
+# fault injection: SIGKILL mid-sweep, resume, compare bitwise
+# --------------------------------------------------------------------------
+_CHILD_SCRIPT = """
+import os, signal, sys
+import numpy as np
+import jax
+mode, ckdir, outpath = sys.argv[1], sys.argv[2], sys.argv[3]
+from repro.checkpoint.trajectory import CheckpointSpec
+from repro.core import EnvSpec, PolicyParams, Scenario
+from repro.obs.metrics import MetricsSpec
+from repro.sim import run_grid
+T, K = 25, 6
+spec = MetricsSpec.of("queue:full_trace", "num_selected:mean")
+base = dict(num_clients=K, num_rounds=T, frame_len=10)
+scenarios = [
+    Scenario(name="static", **base),
+    Scenario(name="spectrum", env=EnvSpec(radio="spectrum_sharing"), **base),
+]
+policies = [("ocean-u", PolicyParams(v=1e-5)), ("amo", PolicyParams()), ("smo", PolicyParams())]
+ck = CheckpointSpec(directory=ckdir, every_rounds=7)
+if mode == "kill":
+    # commit the first snapshot, then die with no cleanup whatsoever
+    from repro.checkpoint import trajectory
+    orig = trajectory.save_snapshot
+    def killing_save(spec, snapshot, round_idx):
+        path = orig(spec, snapshot, round_idx)
+        os.kill(os.getpid(), signal.SIGKILL)
+    trajectory.save_snapshot = killing_save
+res = run_grid(
+    scenarios, policies, seeds=(0, 7), metrics=spec, checkpoint=ck,
+    resume_from=(mode == "resume"),
+)
+leaves = jax.tree_util.tree_leaves({
+    "a": res.a, "b": res.b, "e": res.e, "num_selected": res.num_selected,
+    "metrics": res.metrics,
+})
+np.savez(outpath, **{str(i): np.asarray(x) for i, x in enumerate(leaves)})
+print("DONE", mode)
+"""
+
+
+def _run_child(mode, ckdir, outpath, tmp_path):
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = (
+        os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    return subprocess.run(
+        [sys.executable, "-c", _CHILD_SCRIPT, mode, ckdir, outpath],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+        cwd=str(tmp_path),
+    )
+
+
+@pytest.mark.slow
+def test_sigkill_mid_sweep_resume_bit_identical(tmp_path):
+    """End-to-end preemption drill: child killed by SIGKILL right after
+    its first committed snapshot; the resumed child's full results must
+    equal an uninterrupted child's bitwise."""
+    ckdir = str(tmp_path / "snaps")
+    ref_out = str(tmp_path / "ref.npz")
+    res_out = str(tmp_path / "res.npz")
+
+    full = _run_child("full", str(tmp_path / "snaps_full"), ref_out, tmp_path)
+    assert full.returncode == 0, full.stderr[-2000:]
+    assert "DONE full" in full.stdout
+
+    killed = _run_child("kill", ckdir, str(tmp_path / "never.npz"), tmp_path)
+    assert killed.returncode == -signal.SIGKILL, (
+        killed.returncode, killed.stderr[-2000:]
+    )
+    # exactly one committed snapshot (round 7), and no result dump
+    assert sorted(os.listdir(ckdir)) == ["step_00000007.npz"]
+    assert not os.path.exists(str(tmp_path / "never.npz"))
+
+    resumed = _run_child("resume", ckdir, res_out, tmp_path)
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    assert "DONE resume" in resumed.stdout
+
+    with np.load(ref_out) as ref, np.load(res_out) as res:
+        assert sorted(ref.files) == sorted(res.files)
+        for k in ref.files:
+            assert ref[k].dtype == res[k].dtype, k
+            assert ref[k].tobytes() == res[k].tobytes(), f"leaf {k} differs"
