@@ -62,6 +62,7 @@ from benchmarks import (
     grid_scaling,
     learning_performance,
     radio_sweep,
+    reliability_sweep,
     roofline,
     scenarios,
     selection_patterns,
@@ -161,6 +162,7 @@ BENCHMARKS = {
     "ablations_beyond_paper": ablations.run,
     "adaptivity_env_zoo": adaptivity.run,
     "radio_sweep": radio_sweep.run,
+    "reliability_sweep": reliability_sweep.run,
     "grid_scaling": grid_scaling.run,
     "solver_bench": solver_bench.run,
     "traj_bench": traj_bench.run,

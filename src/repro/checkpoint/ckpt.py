@@ -23,6 +23,8 @@ from __future__ import annotations
 import json
 import os
 import re
+import time
+import zipfile
 from typing import Any, Optional, Tuple
 
 import jax
@@ -112,8 +114,30 @@ def _sweep_stale_tmps(directory: str) -> None:
             pass
 
 
-def save_pytree(directory: str, tree: Any, step: int) -> str:
-    """Atomically persist ``tree`` as ``<directory>/step_<step>.npz``."""
+# Transient-OSError retry policy for save_pytree: shared filesystems
+# (NFS, FUSE, overlay mounts on preemptible workers) throw spurious
+# EIO/ESTALE under contention; a short bounded exponential backoff rides
+# those out without masking a genuinely broken disk.
+SAVE_RETRIES = 3
+SAVE_BACKOFF_S = 0.1
+
+
+def save_pytree(
+    directory: str,
+    tree: Any,
+    step: int,
+    *,
+    retries: int = SAVE_RETRIES,
+    backoff_s: float = SAVE_BACKOFF_S,
+) -> str:
+    """Atomically persist ``tree`` as ``<directory>/step_<step>.npz``.
+
+    Transient ``OSError`` during the write/fsync/rename is retried up to
+    ``retries`` times with exponential backoff (``backoff_s * 2**attempt``
+    seconds); each attempt rewrites the tmp sibling from scratch, so a
+    half-written file is never renamed in.  After the final attempt the
+    original error propagates, chained under a message naming the path.
+    """
     os.makedirs(directory, exist_ok=True)
     _sweep_stale_tmps(directory)
     pairs, _ = _leaf_keys(tree)
@@ -127,18 +151,29 @@ def save_pytree(directory: str, tree: Any, step: int) -> str:
     flat[_META_KEY] = np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8)
     path = os.path.join(directory, f"step_{step:08d}.npz")
     tmp = f"{path}.tmp.{os.getpid()}"
-    try:
-        with open(tmp, "wb") as f:
-            np.savez(f, **flat)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
-    finally:
-        if os.path.exists(tmp):  # failed mid-write; don't leave litter
+    for attempt in range(retries + 1):
+        try:
             try:
-                os.remove(tmp)
-            except OSError:
-                pass
+                with open(tmp, "wb") as f:
+                    np.savez(f, **flat)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+            finally:
+                if os.path.exists(tmp):  # failed mid-write; no litter
+                    try:
+                        os.remove(tmp)
+                    except OSError:
+                        pass
+            break
+        except OSError as e:
+            if attempt == retries:
+                raise OSError(
+                    f"save_pytree: writing {path!r} failed "
+                    f"{retries + 1} times (last: {e}); check the snapshot "
+                    f"filesystem"
+                ) from e
+            time.sleep(backoff_s * (2 ** attempt))
     try:  # make the rename durable too (best-effort on odd filesystems)
         dfd = os.open(directory, os.O_RDONLY)
         try:
@@ -174,10 +209,36 @@ def load_pytree(
     if step is None:
         step = latest_step(directory)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
+            detail = (
+                "directory does not exist"
+                if not os.path.isdir(directory)
+                else "directory has no committed step_<N>.npz files"
+            )
+            raise FileNotFoundError(
+                f"no checkpoints in {directory!r} ({detail}); point "
+                f"resume_from at a directory written by save_snapshot/"
+                f"save_pytree, or start a fresh run without resume_from"
+            )
     path = os.path.join(directory, f"step_{step:08d}.npz")
-    with np.load(path) as data:
-        flat = {k: data[k] for k in data.files}
+    if not os.path.exists(path):
+        committed = latest_step(directory)
+        raise FileNotFoundError(
+            f"checkpoint {path!r} does not exist"
+            + (
+                f"; latest committed step in {directory!r} is {committed}"
+                if committed is not None
+                else f"; {directory!r} has no committed snapshots"
+            )
+        )
+    try:
+        with np.load(path) as data:
+            flat = {k: data[k] for k in data.files}
+    except (zipfile.BadZipFile, OSError, ValueError, EOFError) as e:
+        raise ValueError(
+            f"checkpoint {path!r} is unreadable ({type(e).__name__}: {e}); "
+            f"the file is corrupt or torn — delete it and resume from an "
+            f"earlier committed step"
+        ) from e
     meta = None
     if _META_KEY in flat:
         meta = json.loads(flat.pop(_META_KEY).tobytes().decode("utf-8"))

@@ -18,10 +18,12 @@ from repro.core.solvers import (
     register_solver,
 )
 from repro.core.ocean import (
+    FAILURE_MODES,
     TRAJ_BACKENDS,
     OceanConfig,
     OceanState,
     RoundDecision,
+    check_failure_mode,
     check_traj_backend,
     init_state,
     ocean_round,
@@ -41,6 +43,7 @@ from repro.core.patterns import eta_schedule, ETA_SCHEDULES, COUNT_PATTERNS
 from repro.core.baselines import (
     PolicyTrace,
     amo,
+    delivered_utility,
     lookahead_dual,
     select_all,
     smo,
@@ -82,7 +85,9 @@ __all__ = [
     "OceanConfig",
     "OceanState",
     "RoundDecision",
+    "FAILURE_MODES",
     "TRAJ_BACKENDS",
+    "check_failure_mode",
     "check_traj_backend",
     "init_state",
     "ocean_round",
@@ -97,6 +102,7 @@ __all__ = [
     "COUNT_PATTERNS",
     "PolicyTrace",
     "amo",
+    "delivered_utility",
     "lookahead_dual",
     "select_all",
     "smo",

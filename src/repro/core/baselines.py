@@ -37,24 +37,43 @@ class PolicyTrace(NamedTuple):
     # the config carries a repro.obs.MetricsSpec; None (the default) for
     # metrics-off runs and for policies without Lyapunov machinery.
     metrics: Optional[Dict[str, Array]] = None
+    # (T, K) selected-and-delivered mask when a repro.env.failure process
+    # is active; None (the default) keeps pre-failure pytrees identical.
+    delivered: Optional[Array] = None
 
 
-def _trace(a, b, e):
-    return PolicyTrace(a=a, b=b, e=e, num_selected=jnp.sum(a, axis=-1))
+def _trace(a, b, e, delivered=None):
+    return PolicyTrace(
+        a=a, b=b, e=e, num_selected=jnp.sum(a, axis=-1), delivered=delivered
+    )
+
+
+def _delivered_mask(a: Array, failure_seq) -> Optional[Array]:
+    """Selected-and-delivered (T, K) bool mask; None without failures.
+
+    Baselines keep their selections and spend their full transmission
+    energy (the pessimistic accounting) — unreliability only gates which
+    updates arrive.
+    """
+    if failure_seq is None:
+        return None
+    return a & (failure_seq.delivered > 0.0)
 
 
 # --------------------------------------------------------------------------
 # Select-All
 # --------------------------------------------------------------------------
 def select_all(
-    cfg: OceanConfig, h2_seq: Array, radio_seq=None
+    cfg: OceanConfig, h2_seq: Array, radio_seq=None, failure_seq=None
 ) -> PolicyTrace:
     """Select everyone; minimize total energy via the P4 waterfiller.
 
     ``radio_seq`` — optional per-round radio physics, a pytree of (T,)
     leaves (``repro.env.radio.TracedRadio``); None bakes in the static
     ``cfg.radio`` exactly as before.  ``cfg.solver`` picks the P4
-    waterfilling backend (``repro.core.solvers``).
+    waterfilling backend (``repro.core.solvers``).  ``failure_seq`` — an
+    optional realized ``repro.env.failure.TracedFailure``; it gates the
+    trace's ``delivered`` mask only.
     """
     from repro.core.bandwidth import solve_p4
 
@@ -72,7 +91,7 @@ def select_all(
         a, b, e = jax.vmap(lambda h2: per_round(h2, cfg.radio))(h2_seq)
     else:
         a, b, e = jax.vmap(per_round)(h2_seq, radio_seq)
-    return _trace(a, b, e)
+    return _trace(a, b, e, _delivered_mask(a, failure_seq))
 
 
 # --------------------------------------------------------------------------
@@ -97,11 +116,13 @@ def smo(
     budgets: Optional[Array] = None,
     budget_seq: Optional[Array] = None,
     radio_seq=None,
+    failure_seq=None,
 ) -> PolicyTrace:
     """Static Myopic Optimal; ``budget_seq`` (T, K) makes the hard
     per-round cap follow a time-varying budget process instead of the
     constant H_k / T, ``radio_seq`` per-round radio physics (None bakes
-    in the static ``cfg.radio``)."""
+    in the static ``cfg.radio``), ``failure_seq`` an optional realized
+    reliability gating the ``delivered`` mask."""
     if budget_seq is None:
         per = (cfg.budgets() if budgets is None else budgets) / cfg.num_rounds
         budget_seq = jnp.broadcast_to(per, h2_seq.shape)
@@ -116,7 +137,7 @@ def smo(
         )
     else:
         a, b, e = jax.vmap(per_round)(h2_seq, budget_seq, radio_seq)
-    return _trace(a, b, e)
+    return _trace(a, b, e, _delivered_mask(a, failure_seq))
 
 
 def amo_segment(
@@ -126,6 +147,7 @@ def amo_segment(
     ts: Array,
     budgets: Optional[Array] = None,
     radio_seq=None,
+    failure_seq=None,
 ) -> Tuple[Array, PolicyTrace]:
     """AMO over one contiguous block of rounds from a carried ``spent``.
 
@@ -156,7 +178,7 @@ def amo_segment(
             return round_fn(spent, h2, t, radio_t)
 
         spent, (a, b, e) = jax.lax.scan(step, spent, (h2_seq, ts, radio_seq))
-    return spent, _trace(a, b, e)
+    return spent, _trace(a, b, e, _delivered_mask(a, failure_seq))
 
 
 def amo(
@@ -164,6 +186,7 @@ def amo(
     h2_seq: Array,
     budgets: Optional[Array] = None,
     radio_seq=None,
+    failure_seq=None,
 ) -> PolicyTrace:
     budgets = cfg.budgets() if budgets is None else budgets
     _, trace = amo_segment(
@@ -173,6 +196,7 @@ def amo(
         jnp.arange(cfg.num_rounds),
         budgets=budgets,
         radio_seq=radio_seq,
+        failure_seq=failure_seq,
     )
     return trace
 
@@ -240,3 +264,12 @@ def lookahead_dual(
 def utility(trace: PolicyTrace, eta_seq: Array) -> Array:
     """sum_t eta^t * |S^t| — the paper's long-term objective (Eq. 4)."""
     return jnp.sum(jnp.asarray(eta_seq) * trace.num_selected.astype(jnp.float32))
+
+
+def delivered_utility(trace: PolicyTrace, eta_seq: Array) -> Array:
+    """sum_t eta^t * |delivered S^t| — Eq. 4 counting only the updates
+    that actually arrived; equals ``utility`` without a failure process."""
+    if trace.delivered is None:
+        return utility(trace, eta_seq)
+    ns = jnp.sum(trace.delivered.astype(jnp.float32), axis=-1)
+    return jnp.sum(jnp.asarray(eta_seq) * ns)

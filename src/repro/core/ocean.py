@@ -20,6 +20,7 @@ from typing import NamedTuple, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.bandwidth import solve_p4
 from repro.core.energy import RadioParams, energy
 from repro.core.selection import (
     DEFAULT_BLOCK_K,
@@ -27,6 +28,7 @@ from repro.core.selection import (
     OceanPSolution,
     check_ranking,
     ocean_p,
+    p3_value,
 )
 from repro.core.solvers import get_solver
 from repro.checkpoint.trajectory import CheckpointSpec
@@ -41,6 +43,26 @@ from repro.obs.metrics import (
 Array = jax.Array
 
 TRAJ_BACKENDS = ("scan", "fused")
+
+FAILURE_MODES = ("plain", "overprovision", "reallocate")
+
+# Mirrors repro.core.selection._RHO_ZERO_TOL (S0 membership); kept local
+# so the failure-aware re-solves classify zero-rho clients exactly as the
+# committed P3 solve did.
+_RHO_ZERO_TOL = 1e-30
+
+
+def check_failure_mode(name: str) -> str:
+    """Fail fast on unknown failure-aware OCEAN variant names."""
+    if name not in FAILURE_MODES:
+        raise ValueError(
+            f"unknown failure mode {name!r}; available: "
+            f"{', '.join(FAILURE_MODES)} (``plain`` commits the legacy "
+            f"decision, ``overprovision`` ranks extra clients so expected "
+            f"deliveries match the plain selection, ``reallocate`` re-runs "
+            f"the P4 bandwidth solve on the mid-round survivor set)"
+        )
+    return name
 
 
 def check_traj_backend(name: str) -> str:
@@ -92,6 +114,19 @@ class OceanConfig:
                    third ``metrics`` dict.  ``None`` (default) keeps
                    every legacy code path byte-identical.  A
                    compiled-program static (grid must-agree).
+      failure_mode: how OCEAN reacts to per-client delivery failures when
+                   a failure process is active (``repro.env.failure``):
+                   ``plain`` (default — commit the legacy decision; failed
+                   clients burn their energy but deliver nothing),
+                   ``overprovision`` (extend the rho-ascending selection
+                   prefix until the declared delivery rates sum to the
+                   plain cardinality, then re-solve P4 over the extended
+                   set), or ``reallocate`` (detect failures at the round's
+                   deadline midpoint and re-run P4 on the survivor set;
+                   failed clients pay half a round of energy).  A
+                   compiled-program static (grid must-agree); with no
+                   failure process the knob is inert and every legacy
+                   path stays byte-identical.
       checkpoint:  optional ``repro.checkpoint.CheckpointSpec`` enabling
                    preemption-safe segmented execution: ``simulate``
                    splits the T rounds into ``every_rounds``-sized
@@ -114,6 +149,7 @@ class OceanConfig:
     top_m: int = DEFAULT_TOP_M
     block_k: int = DEFAULT_BLOCK_K
     traj: str = "scan"
+    failure_mode: str = "plain"
     metrics: Optional[MetricsSpec] = None
     checkpoint: Optional[CheckpointSpec] = None
 
@@ -121,6 +157,7 @@ class OceanConfig:
         backend = get_solver(self.solver)  # fail fast on unknown backend names
         check_ranking(self.ranking)
         check_traj_backend(self.traj)
+        check_failure_mode(self.failure_mode)
         if backend.topm is not None and self.ranking != "topm":
             raise ValueError(
                 f"solver {self.solver!r} is sort-free and only runs under "
@@ -169,6 +206,10 @@ class RoundDecision(NamedTuple):
     rho: Array          # (K,) priorities
     objective: Array    # P3 optimum
     num_selected: Array
+    # Failure extension (None without a failure process — the fields then
+    # flatten to zero pytree leaves, keeping legacy traces byte-identical):
+    delivered: Optional[Array] = None  # (K,) bool: selected AND delivered
+    realloc: Optional[Array] = None    # () int32: 1 if P4 re-ran mid-round
 
 
 def init_state(cfg: OceanConfig) -> OceanState:
@@ -177,6 +218,85 @@ def init_state(cfg: OceanConfig) -> OceanState:
         q=jnp.zeros((k,), jnp.float32),
         t=jnp.zeros((), jnp.int32),
         energy_spent=jnp.zeros((k,), jnp.float32),
+    )
+
+
+def _masked_p4(cfg, rho, in_s0, mask, radio):
+    """P4 bandwidth over an arbitrary selected set, with OCEAN-P's S0 split.
+
+    Mirrors ``repro.core.selection`` exactly: zero-rho clients in the set
+    get the ``b_min`` floor (absorbing the whole budget when no
+    positive-rho client is selected), positive-rho clients share the
+    remaining ``delta`` through the exact convex ``solve_p4``.
+    """
+    b_min = jnp.asarray(radio.b_min, jnp.float32)
+    n0 = jnp.sum(mask & in_s0)
+    delta = 1.0 - n0.astype(jnp.float32) * b_min
+    pos = mask & ~in_s0
+    b_pos, _ = solve_p4(rho, pos, delta, radio, method=cfg.solver)
+    leftover = jnp.where(jnp.sum(pos) == 0, delta, 0.0)
+    b0_each = b_min + leftover / jnp.maximum(n0.astype(jnp.float32), 1.0)
+    return jnp.where(pos, b_pos, jnp.where(mask & in_s0, b0_each, 0.0))
+
+
+def _failure_adjust(cfg, q, h2, v, eta, sol, e, radio, delivered, fail_rate):
+    """Apply the configured failure-aware variant to one committed round.
+
+    Returns ``(a, b, e, objective, num_selected, delivered, realloc)``.
+    Accounting convention (pessimistic, paper-faithful): selected clients
+    spend transmission energy whether or not their update arrives — the
+    virtual queue charges them — except under ``reallocate``, where a
+    client detected failed at the deadline midpoint stops transmitting
+    and pays half its committed-round energy while survivors pay half
+    the committed allocation plus half the re-solved (cheaper, since
+    bandwidth only grows) one.
+    """
+    ok = delivered > 0.0
+    no_ral = jnp.zeros((), jnp.int32)
+    if cfg.failure_mode == "plain":
+        return sol.a, sol.b, e, sol.objective, sol.num_selected, sol.a & ok, no_ral
+
+    in_s0 = sol.rho <= _RHO_ZERO_TOL
+
+    if cfg.failure_mode == "overprovision":
+        if fail_rate is None:
+            raise ValueError(
+                "failure_mode='overprovision' needs the failure process's "
+                "declared delivery rates (TracedFailure.rate); pass the "
+                "full TracedFailure, not a bare delivered mask"
+            )
+        b_min = jnp.asarray(radio.b_min, jnp.float32)
+        m_plain = sol.num_selected
+        order = jnp.argsort(sol.rho)  # ascending, stable: S0 first
+        inv = jnp.argsort(order)
+        csum = jnp.cumsum(fail_rate[order])
+        # Smallest prefix whose declared delivery rates sum to the plain
+        # cardinality (expected deliveries ~ |S_plain|), at least the
+        # plain prefix itself, capped by b_min feasibility.
+        n_exp = 1 + jnp.sum(csum < m_plain.astype(jnp.float32))
+        n_max = jnp.minimum(
+            jnp.asarray(cfg.num_clients, jnp.int32),
+            jnp.floor((1.0 + 1e-9) / b_min).astype(jnp.int32),
+        )
+        n_ext = jnp.clip(jnp.maximum(n_exp, m_plain), 0, n_max)
+        n_ext = jnp.where(m_plain > 0, n_ext, 0)
+        a = inv < n_ext
+        b = _masked_p4(cfg, sol.rho, in_s0, a, radio)
+        e_ext = energy(b, h2, radio, a)
+        obj = p3_value(a, b, q, h2, v, eta, radio)
+        ns = jnp.sum(a).astype(m_plain.dtype)
+        return a, b, e_ext, obj, ns, a & ok, no_ral
+
+    # failure_mode == "reallocate": commit the plain decision, detect
+    # failures at the deadline midpoint, re-run P4 on the survivor set.
+    surv = sol.a & ok
+    any_failed = jnp.any(sol.a & ~ok)
+    b2 = _masked_p4(cfg, sol.rho, in_s0, surv, radio)
+    e2 = energy(b2, h2, radio, surv)
+    e_out = jnp.where(any_failed, 0.5 * e + 0.5 * e2, e)
+    return (
+        sol.a, sol.b, e_out, sol.objective, sol.num_selected, surv,
+        any_failed.astype(jnp.int32),
     )
 
 
@@ -189,6 +309,8 @@ def ocean_round(
     budgets: Optional[Array] = None,
     budget_inc: Optional[Array] = None,
     radio=None,
+    delivered: Optional[Array] = None,
+    fail_rate: Optional[Array] = None,
 ) -> Tuple[OceanState, RoundDecision]:
     """One OCEAN round: frame-reset -> P3 solve -> act -> queue update.
 
@@ -200,6 +322,15 @@ def ocean_round(
     ``radio`` overrides ``cfg.radio`` with this round's physics — any
     pytree of (traced) scalars exposing the ``RadioParams`` attributes,
     e.g. one round of a ``repro.env.radio`` sequence.
+
+    ``delivered`` is this round's (K,) {0, 1} delivery mask from a
+    ``repro.env.failure`` process; with it the round applies
+    ``cfg.failure_mode`` (plain / overprovision / reallocate), charges
+    energy under the pessimistic accounting, and reports the
+    ``RoundDecision.delivered``/``realloc`` fields.  ``fail_rate`` is the
+    (K,) declared stationary delivery rate (``TracedFailure.rate``),
+    required by ``overprovision``.  Both ``None`` (the default) keeps the
+    pre-failure program byte-identical.
     """
     R = cfg.R
     radio = cfg.radio if radio is None else radio
@@ -220,6 +351,13 @@ def ocean_round(
     )
     e = energy(sol.b, h2, radio, sol.a)
 
+    a, b, objective, num_selected = sol.a, sol.b, sol.objective, sol.num_selected
+    dlv = ral = None
+    if delivered is not None:
+        a, b, e, objective, num_selected, dlv, ral = _failure_adjust(
+            cfg, q, h2, v, eta, sol, e, radio, delivered, fail_rate
+        )
+
     if budget_inc is None:
         if budgets is None:
             budgets = cfg.budgets()
@@ -232,13 +370,15 @@ def ocean_round(
         energy_spent=state.energy_spent + e,
     )
     dec = RoundDecision(
-        a=sol.a,
-        b=sol.b,
+        a=a,
+        b=b,
         e=e,
         q=q,
         rho=sol.rho,
-        objective=sol.objective,
-        num_selected=sol.num_selected,
+        objective=objective,
+        num_selected=num_selected,
+        delivered=dlv,
+        realloc=ral,
     )
     return new_state, dec
 
@@ -272,6 +412,7 @@ def simulate(
     budgets: Optional[Array] = None,     # (K,) override of cfg.budgets()
     budget_seq: Optional[Array] = None,  # (T, K) per-round budget increments
     radio_seq=None,                      # (T,)-leaf radio pytree (TracedRadio)
+    failure_seq=None,                    # TracedFailure ((T, K) mask + (K,) rate)
     traj: Optional[str] = None,          # trajectory backend; None => cfg.traj
     stream_bf16: bool = False,           # fused only: bf16 decision traces
     checkpoint: Union[CheckpointSpec, None, bool] = None,
@@ -291,7 +432,12 @@ def simulate(
     per-round radio physics (``repro.env.radio`` processes: spectrum
     sharing, deadline jitter) — a pytree whose leaves carry a leading
     ``(T,)`` axis the scan slices; when omitted the static ``cfg.radio``
-    is baked in, the paper's (and the legacy) program.
+    is baked in, the paper's (and the legacy) program.  ``failure_seq``
+    feeds a realized ``repro.env.failure`` reliability (a
+    ``TracedFailure``: the (T, K) delivered mask plus the (K,) declared
+    rates); each round then applies ``cfg.failure_mode`` and reports
+    ``delivered``/``realloc`` decision fields — when omitted, the
+    pre-failure program is byte-identical.
 
     ``traj`` picks the trajectory backend (a compiled-program static):
     ``scan`` runs the rounds as one ``lax.scan`` (the default, bit-stable
@@ -329,7 +475,7 @@ def simulate(
     if ckpt_spec is not None or resume_from is not None:
         return _simulate_segmented(
             cfg, h2_seq, eta_seq, v, budgets, budget_seq, radio_seq,
-            traj, stream_bf16, ckpt_spec, resume_from,
+            failure_seq, traj, stream_bf16, ckpt_spec, resume_from,
         )
     v_seq = v_schedule(cfg, v)
     eta_seq = jnp.asarray(eta_seq, jnp.float32)
@@ -350,30 +496,29 @@ def simulate(
             eta_seq,
             budget_seq,
             radio_seq,
+            failure_seq,
             stream_bf16=stream_bf16,
         )
 
+    dlv_seq = None if failure_seq is None else failure_seq.delivered
+    fail_rate = None if failure_seq is None else failure_seq.rate
+    # One step body for every optional-input combination: absent inputs
+    # simply never join the scan xs and their kwargs stay None, so each
+    # flag combination traces exactly the ops it always has.
+    unpack = _make_unpack(radio_seq is not None, dlv_seq is not None)
+
     if cfg.metrics is None:
-        if radio_seq is None:
-            def step(state, inputs):
-                h2, v_t, eta_t, inc_t = inputs
-                return ocean_round(
-                    state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t
-                )
-
-            return jax.lax.scan(
-                step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq)
-            )
-
         def step(state, inputs):
-            h2, v_t, eta_t, inc_t, radio_t = inputs
+            h2, v_t, eta_t, inc_t, radio_t, dlv_t = unpack(inputs)
             return ocean_round(
                 state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t,
-                radio=radio_t,
+                radio=radio_t, delivered=dlv_t, fail_rate=fail_rate,
             )
 
         return jax.lax.scan(
-            step, init_state(cfg), (h2_seq, v_seq, eta_seq, budget_seq, radio_seq)
+            step,
+            init_state(cfg),
+            _scan_xs(h2_seq, v_seq, eta_seq, budget_seq, radio_seq, dlv_seq),
         )
 
     # Metrics-enabled scan: the round math is the untouched ocean_round —
@@ -384,29 +529,48 @@ def simulate(
 
     def step_m(carry, inputs):
         state, mstate = carry
-        if radio_seq is None:
-            h2, v_t, eta_t, inc_t = inputs
-            radio_t = cfg.radio
-            new_state, dec = ocean_round(
-                state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t
-            )
-        else:
-            h2, v_t, eta_t, inc_t, radio_t = inputs
-            new_state, dec = ocean_round(
-                state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t,
-                radio=radio_t,
-            )
-        ctx = round_context(state.t, dec, new_state, v_t, eta_t, inc_t, radio_t)
+        h2, v_t, eta_t, inc_t, radio_t, dlv_t = unpack(inputs)
+        new_state, dec = ocean_round(
+            state, h2, v_t, eta_t, cfg, budgets, budget_inc=inc_t,
+            radio=radio_t, delivered=dlv_t, fail_rate=fail_rate,
+        )
+        ctx = round_context(
+            state.t, dec, new_state, v_t, eta_t, inc_t,
+            cfg.radio if radio_t is None else radio_t,
+        )
         mstate, traces = metrics_round(spec, cfg, ctx, mstate)
         return (new_state, mstate), (dec, traces)
 
+    (state, mstate), (decs, traces) = jax.lax.scan(
+        step_m,
+        (init_state(cfg), init_metrics(spec, cfg)),
+        _scan_xs(h2_seq, v_seq, eta_seq, budget_seq, radio_seq, dlv_seq),
+    )
+    return state, decs, finalize_metrics(spec, cfg, mstate, traces)
+
+
+def _scan_xs(h2_seq, v_seq, eta_seq, budget_seq, radio_seq, dlv_seq):
     xs = (h2_seq, v_seq, eta_seq, budget_seq)
     if radio_seq is not None:
         xs = xs + (radio_seq,)
-    (state, mstate), (decs, traces) = jax.lax.scan(
-        step_m, (init_state(cfg), init_metrics(spec, cfg)), xs
-    )
-    return state, decs, finalize_metrics(spec, cfg, mstate, traces)
+    if dlv_seq is not None:
+        xs = xs + (dlv_seq,)
+    return xs
+
+
+def _make_unpack(has_radio: bool, has_failure: bool):
+    def unpack(inputs):
+        h2, v_t, eta_t, inc_t = inputs[:4]
+        i = 4
+        radio_t = dlv_t = None
+        if has_radio:
+            radio_t = inputs[i]
+            i += 1
+        if has_failure:
+            dlv_t = inputs[i]
+        return h2, v_t, eta_t, inc_t, radio_t, dlv_t
+
+    return unpack
 
 
 # ---------------------------------------------------------------------------
@@ -426,7 +590,7 @@ def simulate(
 @functools.partial(jax.jit, static_argnames=("cfg", "traj", "stream_bf16"))
 def _segment_step(
     cfg, traj, stream_bf16, state, mstate, h2, v_s, eta_s, inc_s, radio_s,
-    budgets,
+    failure_s, budgets,
 ):
     """One segment from a mid-trajectory carry -> (state', mstate', decs, traces)."""
     spec = cfg.metrics
@@ -434,7 +598,7 @@ def _segment_step(
         from repro.kernels.ocean_traj import ocean_trajectory_fused
 
         out = ocean_trajectory_fused(
-            cfg, h2, v_s, eta_s, inc_s, radio_s,
+            cfg, h2, v_s, eta_s, inc_s, radio_s, failure_s,
             stream_bf16=stream_bf16,
             init_state=state,
             init_mstate=mstate,
@@ -446,28 +610,27 @@ def _segment_step(
         new_state, decs, mstate, traces = out
         return new_state, mstate, decs, traces
 
+    dlv_s = None if failure_s is None else failure_s.delivered
+    fail_rate = None if failure_s is None else failure_s.rate
+    unpack = _make_unpack(radio_s is not None, dlv_s is not None)
+
     def step(carry, inputs):
         state, mstate = carry
-        if radio_s is None:
-            h2_t, v_t, eta_t, inc_t = inputs
-            radio_t = cfg.radio
-        else:
-            h2_t, v_t, eta_t, inc_t, radio_t = inputs
+        h2_t, v_t, eta_t, inc_t, radio_t, dlv_t = unpack(inputs)
         new_state, dec = ocean_round(
             state, h2_t, v_t, eta_t, cfg, budgets, budget_inc=inc_t,
-            radio=radio_t if radio_s is not None else None,
+            radio=radio_t, delivered=dlv_t, fail_rate=fail_rate,
         )
         if spec is None:
             return (new_state, mstate), (dec, None)
         ctx = round_context(
-            state.t, dec, new_state, v_t, eta_t, inc_t, radio_t
+            state.t, dec, new_state, v_t, eta_t, inc_t,
+            cfg.radio if radio_t is None else radio_t,
         )
         mstate, traces = metrics_round(spec, cfg, ctx, mstate)
         return (new_state, mstate), (dec, traces)
 
-    xs = (h2, v_s, eta_s, inc_s)
-    if radio_s is not None:
-        xs = xs + (radio_s,)
+    xs = _scan_xs(h2, v_s, eta_s, inc_s, radio_s, dlv_s)
     (state, mstate), (decs, traces) = jax.lax.scan(step, (state, mstate), xs)
     return state, mstate, decs, traces
 
@@ -482,7 +645,7 @@ def _concat_parts(parts):
 
 
 def _simulate_segmented(
-    cfg, h2_seq, eta_seq, v, budgets, budget_seq, radio_seq,
+    cfg, h2_seq, eta_seq, v, budgets, budget_seq, radio_seq, failure_seq,
     traj, stream_bf16, ckpt_spec, resume_from,
 ):
     from repro.checkpoint import trajectory as ckpt_io
@@ -513,11 +676,17 @@ def _simulate_segmented(
             return None
         return jax.tree_util.tree_map(lambda x: x[t0:t1], tree)
 
+    def fl(failure, t0, t1):
+        # Slice the (T, K) mask only — the (K,) declared rates ride whole.
+        if failure is None:
+            return None
+        return failure._replace(delivered=failure.delivered[t0:t1])
+
     def run_segment(state, mstate, t0, t1):
         return _segment_step(
             cfg, traj, stream_bf16, state, mstate,
             h2_seq[t0:t1], v_seq[t0:t1], eta_seq[t0:t1], budget_seq[t0:t1],
-            sl(radio_seq, t0, t1), budgets,
+            sl(radio_seq, t0, t1), fl(failure_seq, t0, t1), budgets,
         )
 
     state = init_state(cfg)
@@ -541,12 +710,12 @@ def _simulate_segmented(
                 f"resume_from: no committed snapshots in {directory!r}"
             )
 
-        def prefix_like(h2p, vp, ep, ip, radp):
+        def prefix_like(h2p, vp, ep, ip, radp, failp):
             st0 = init_state(cfg)
             ms0 = init_metrics(spec, cfg) if spec is not None else None
             st, ms, d, tr = _segment_step(
                 cfg, traj, stream_bf16, st0, ms0, h2p, vp, ep, ip, radp,
-                budgets,
+                failp, budgets,
             )
             snap = {"state": st, "decs": d}
             if spec is not None:
@@ -557,7 +726,7 @@ def _simulate_segmented(
         like = jax.eval_shape(
             prefix_like,
             h2_seq[:r], v_seq[:r], eta_seq[:r], budget_seq[:r],
-            sl(radio_seq, 0, r),
+            sl(radio_seq, 0, r), fl(failure_seq, 0, r),
         )
         snap, _ = ckpt_io.load_snapshot(directory, like, r)
         state = snap["state"]

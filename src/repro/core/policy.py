@@ -18,6 +18,7 @@ This replaces the ad-hoc string dispatch that used to live in
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
@@ -59,6 +60,12 @@ class PolicyParams(NamedTuple):
                ``RadioParams`` attributes (``TracedRadio``).  None => the
                static ``cfg.radio`` floats are baked into the program (the
                legacy path, bit-for-bit).
+      failure_seq: realized per-client reliability from a failure process
+               (``repro.env.failure``): a ``TracedFailure`` pytree — the
+               (T, K) delivered mask plus the (K,) declared rates.  OCEAN
+               applies ``cfg.failure_mode`` with it; baselines gate their
+               ``delivered`` trace.  None => the pre-failure programs,
+               byte-identical.
     """
 
     v: Union[float, Array] = 1e-5
@@ -68,6 +75,7 @@ class PolicyParams(NamedTuple):
     counts: Optional[Array] = None
     budget_seq: Optional[Array] = None
     radio_seq: Optional[object] = None
+    failure_seq: Optional[object] = None
 
 
 TraceFn = Callable[[OceanConfig, Array, PolicyParams], PolicyTrace]
@@ -152,6 +160,7 @@ def resolve_params(
     scenario_budgets: Optional[Array] = None,
     scenario_budget_seq: Optional[Array] = None,
     scenario_radio_seq=None,
+    scenario_failure_seq=None,
 ) -> PolicyParams:
     """Fill None fields: explicit > policy default > scenario > uniform/cfg."""
     params = PolicyParams() if params is None else params
@@ -172,6 +181,9 @@ def resolve_params(
     radio_seq = params.radio_seq
     if radio_seq is None:
         radio_seq = scenario_radio_seq  # may stay None: static cfg.radio
+    failure_seq = params.failure_seq
+    if failure_seq is None:
+        failure_seq = scenario_failure_seq  # may stay None: no failures
     if policy.needs_key and params.key is None:
         raise ValueError(
             f"policy {policy.name!r} is stochastic and requires PolicyParams.key"
@@ -181,6 +193,7 @@ def resolve_params(
         budgets=budgets,
         budget_seq=budget_seq,
         radio_seq=radio_seq,
+        failure_seq=failure_seq,
     )
 
 
@@ -199,7 +212,9 @@ def run_policy(
 # registry entries
 # --------------------------------------------------------------------------
 def _select_all_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
-    return select_all(cfg, h2_seq, radio_seq=params.radio_seq)
+    return select_all(
+        cfg, h2_seq, radio_seq=params.radio_seq, failure_seq=params.failure_seq
+    )
 
 
 def _smo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
@@ -209,11 +224,18 @@ def _smo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
         budgets=params.budgets,
         budget_seq=params.budget_seq,
         radio_seq=params.radio_seq,
+        failure_seq=params.failure_seq,
     )
 
 
 def _amo_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
-    return amo(cfg, h2_seq, budgets=params.budgets, radio_seq=params.radio_seq)
+    return amo(
+        cfg,
+        h2_seq,
+        budgets=params.budgets,
+        radio_seq=params.radio_seq,
+        failure_seq=params.failure_seq,
+    )
 
 
 def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
@@ -225,6 +247,7 @@ def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
         budgets=params.budgets,
         budget_seq=params.budget_seq,
         radio_seq=params.radio_seq,
+        failure_seq=params.failure_seq,
     )
     # cfg.metrics is a static, so the result arity is too: the 3rd element
     # (the in-graph telemetry dict) exists iff a MetricsSpec is configured.
@@ -238,6 +261,7 @@ def _ocean_fn(cfg: OceanConfig, h2_seq: Array, params: PolicyParams):
         e=decs.e,
         num_selected=decs.num_selected,
         metrics=metrics,
+        delivered=decs.delivered,
     )
 
 
@@ -287,13 +311,27 @@ def _dslice(tree, t0: Array, n: int):
     )
 
 
+def _fslice(failure, t0: Array, n: int):
+    """Slice a ``TracedFailure`` block: only the (T, K) delivered mask has a
+    time axis — the (K,) stationary rates pass through unsliced (a generic
+    tree_map would wrongly slice them along axis 0)."""
+    if failure is None:
+        return None
+    return failure._replace(
+        delivered=jax.lax.dynamic_slice_in_dim(failure.delivered, t0, n, axis=0)
+    )
+
+
 def _stateless_init(cfg: OceanConfig):
     return ()
 
 
 def _select_all_seg(cfg, carry, h2_full, params, t0, n):
     trace = select_all(
-        cfg, _dslice(h2_full, t0, n), radio_seq=_dslice(params.radio_seq, t0, n)
+        cfg,
+        _dslice(h2_full, t0, n),
+        radio_seq=_dslice(params.radio_seq, t0, n),
+        failure_seq=_fslice(params.failure_seq, t0, n),
     )
     return carry, trace
 
@@ -307,6 +345,7 @@ def _smo_seg(cfg, carry, h2_full, params, t0, n):
         budgets=params.budgets,
         budget_seq=_dslice(params.budget_seq, t0, n),
         radio_seq=_dslice(params.radio_seq, t0, n),
+        failure_seq=_fslice(params.failure_seq, t0, n),
     )
     return carry, trace
 
@@ -324,6 +363,7 @@ def _amo_seg(cfg, spent, h2_full, params, t0, n):
         ts,
         budgets=params.budgets,
         radio_seq=_dslice(params.radio_seq, t0, n),
+        failure_seq=_fslice(params.failure_seq, t0, n),
     )
 
 
@@ -367,6 +407,7 @@ def _ocean_seg(cfg, carry, h2_full, params, t0, n):
         _dslice(eta_seq, t0, n),
         _dslice(budget_seq, t0, n),
         _dslice(params.radio_seq, t0, n),
+        _fslice(params.failure_seq, t0, n),
         params.budgets,
     )
     trace = PolicyTrace(
@@ -377,6 +418,7 @@ def _ocean_seg(cfg, carry, h2_full, params, t0, n):
         # raw full-trace dict (NOT finalized): the segmented driver
         # concatenates these and finalizes once from the final carry.
         metrics=traces,
+        delivered=decs.delivered,
     )
     return (state, mstate), trace
 
@@ -394,6 +436,30 @@ for _v, _sched in _OCEAN_VARIANTS.items():
     register_policy(
         f"ocean-{_v}", _ocean_fn, default_eta=_sched,
         seg_init=_ocean_seg_init, seg_fn=_ocean_seg,
+    )
+
+
+def _ocean_mode_fn(mode: str) -> TraceFn:
+    def fn(cfg, h2_seq, params):
+        return _ocean_fn(dataclasses.replace(cfg, failure_mode=mode), h2_seq, params)
+    return fn
+
+
+def _ocean_mode_seg(mode: str) -> SegFn:
+    def fn(cfg, carry, h2_full, params, t0, n):
+        return _ocean_seg(
+            dataclasses.replace(cfg, failure_mode=mode), carry, h2_full, params, t0, n
+        )
+    return fn
+
+
+# Failure-aware OCEAN variants as first-class policy names so a grid's
+# unrolled policy axis can sweep them against plain 'ocean' in one program.
+# Without a failure_seq they trace identically to plain OCEAN.
+for _mode, _suffix in (("overprovision", "over"), ("reallocate", "realloc")):
+    register_policy(
+        f"ocean-{_suffix}", _ocean_mode_fn(_mode),
+        seg_init=_ocean_seg_init, seg_fn=_ocean_mode_seg(_mode),
     )
 register_policy(
     "pattern", _pattern_fn, needs_key=True,

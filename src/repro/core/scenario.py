@@ -34,18 +34,20 @@ from repro.core.channel import (
     pathloss_to_gain,
 )
 from repro.core.energy import RadioParams
-from repro.core.ocean import OceanConfig, check_traj_backend
+from repro.core.ocean import OceanConfig, check_failure_mode, check_traj_backend
 from repro.core.patterns import eta_schedule
 from repro.core.selection import DEFAULT_BLOCK_K, DEFAULT_TOP_M, check_ranking
 from repro.core.solvers import get_solver
 from repro.obs.metrics import MetricsSpec
 from repro.env.channel import LowerCtx, get_channel_process, sample_channel_process
 from repro.env.energy import sample_budget_process
+from repro.env.failure import TracedFailure, traced_failure
 from repro.env.radio import TracedRadio, sample_radio_process
 from repro.env.spec import (
     EnvSpec,
     LoweredEnv,
     env_cell_keys,
+    failure_cell_key,
     lower_env,
     radio_cell_key,
 )
@@ -104,6 +106,14 @@ class Scenario:
                        / ``GridEngine``).  ``None`` (default) keeps the
                        legacy programs and serialized payloads
                        byte-identical.  Joins the grid's must-agree set.
+      failure_mode:    OCEAN's reaction to an active ``env.failure``
+                       process (``repro.core.ocean.FAILURE_MODES``):
+                       ``plain`` (default — legacy decisions, failures
+                       only gate delivery), ``overprovision`` (rank past
+                       top-m so expected deliveries match m), or
+                       ``reallocate`` (re-run P4 on the survivor set at
+                       the deadline midpoint).  A compiled-program
+                       static; ``plain`` keeps payloads byte-stable.
     """
 
     name: str = "stationary"
@@ -123,11 +133,13 @@ class Scenario:
     traj: str = "scan"
     metrics: Optional[MetricsSpec] = None
     checkpoint: Optional[CheckpointSpec] = None
+    failure_mode: str = "plain"
 
     def __post_init__(self):
         backend = get_solver(self.solver)  # fail fast on unknown backend names
         check_ranking(self.ranking)
         check_traj_backend(self.traj)
+        check_failure_mode(self.failure_mode)
         if backend.topm is not None and self.ranking != "topm":
             raise ValueError(
                 f"solver {self.solver!r} is sort-free and only runs under "
@@ -167,6 +179,7 @@ class Scenario:
             traj=self.traj,
             metrics=self.metrics,
             checkpoint=self.checkpoint,
+            failure_mode=self.failure_mode,
         )
 
     def channel_model(self) -> ChannelModel:
@@ -264,6 +277,25 @@ class Scenario:
         k_radio = radio_cell_key(key, jnp.uint32(lowered.key_salt))
         return sample_radio_process(lowered.radio, k_radio, self.num_rounds)
 
+    def sample_failure(self, seed_or_key: Union[int, Array]) -> TracedFailure:
+        """Realized reliability (``TracedFailure``) for one seed.
+
+        The ``none`` process returns an exact all-ones mask; active
+        processes draw from the dedicated failure key stream
+        (``failure_cell_key``), so adding failures never perturbs the
+        channel/budget/radio draws of existing runs.
+        """
+        key = (
+            jax.random.PRNGKey(seed_or_key)
+            if isinstance(seed_or_key, int)
+            else seed_or_key
+        )
+        lowered = self.lower_env()
+        k_fail = failure_cell_key(key, jnp.uint32(lowered.key_salt))
+        return traced_failure(
+            lowered.failure, k_fail, self.num_rounds, self.num_clients
+        )
+
     def eta_seq(self) -> Array:
         return eta_schedule(self.eta, self.num_rounds)
 
@@ -299,6 +331,8 @@ class Scenario:
             d.pop("checkpoint")  # keep pre-checkpoint payloads byte-stable
         else:
             d["checkpoint"] = self.checkpoint.to_dict()
+        if self.failure_mode == "plain":
+            d.pop("failure_mode")  # keep pre-failure payloads byte-stable
         return d
 
     @classmethod
@@ -401,6 +435,29 @@ def environment_zoo(
         "deadline_jitter": Scenario(
             name="deadline_jitter",
             env=EnvSpec(radio="deadline_jitter", radio_params={"amp": 0.3}),
+            **base,
+        ),
+        "dropout": Scenario(
+            name="dropout",
+            env=EnvSpec(
+                failure="iid_dropout", failure_params={"p_deliver": 0.85}
+            ),
+            **base,
+        ),
+        "bursty_outage": Scenario(
+            name="bursty_outage",
+            env=EnvSpec(
+                failure="markov_availability",
+                failure_params={"p_fail": 0.1, "p_recover": 0.4},
+            ),
+            **base,
+        ),
+        "stragglers": Scenario(
+            name="stragglers",
+            env=EnvSpec(
+                failure="straggler_slowdown",
+                failure_params={"sigma": 0.5, "compute_frac": 0.8},
+            ),
             **base,
         ),
     }

@@ -27,6 +27,16 @@ from repro.env.energy import (
     register_budget_process,
     sample_budget_process,
 )
+from repro.env.failure import (
+    FailureParams,
+    FailureProcess,
+    TracedFailure,
+    available_failure_processes,
+    get_failure_process,
+    register_failure_process,
+    sample_failure_process,
+    traced_failure,
+)
 from repro.env.radio import (
     RadioProcess,
     RadioProcessParams,
@@ -42,6 +52,7 @@ from repro.env.spec import (
     LoweredEnv,
     env_cell_keys,
     env_key_salt,
+    failure_cell_key,
     lower_env,
     radio_cell_key,
 )
@@ -56,6 +67,15 @@ __all__ = [
     "sample_radio_process",
     "traced_radio",
     "radio_cell_key",
+    "FailureParams",
+    "FailureProcess",
+    "TracedFailure",
+    "available_failure_processes",
+    "get_failure_process",
+    "register_failure_process",
+    "sample_failure_process",
+    "traced_failure",
+    "failure_cell_key",
     "ChannelParams",
     "ChannelProcess",
     "LowerCtx",

@@ -1,0 +1,361 @@
+"""Failure processes — per-client delivery reliability as environment data.
+
+The paper assumes every selected client always delivers its update; no
+real WFLN does (uplinks fade mid-round, stragglers miss the deadline,
+devices go dark).  A :class:`FailureProcess` makes delivery failure a
+first-class, sweepable environment axis: every registered process lowers
+a JSON-able parameter dict to one shared :class:`FailureParams` pytree,
+and a single interpreter (:func:`sample_failure_process`) realizes a
+``(T, K)`` *delivered* mask — 1.0 where a selected client's update would
+arrive, 0.0 where it is lost.  Because the interpreter is the same
+program for every process, a grid can mix perfectly reliable cells with
+dropout, Markov-availability, and straggler cells (and any
+channel/budget/radio process) and still compile ONE executable.
+
+Processes
+---------
+``none``
+    Every update delivers — the all-ones mask, composed as an *exact*
+    product of 1.0s so programs gated on ``failure="none"`` stay
+    bitwise identical to the pre-failure code paths.
+``iid_dropout``
+    Bernoulli delivery: each (round, client) delivers independently with
+    probability ``p_deliver`` (scalar or per-client).
+``markov_availability``
+    Gilbert-Elliott per-client up/down chain: an *up* client fails with
+    ``p_fail`` per round, a *down* client recovers with ``p_recover``.
+    Chains start from their stationary distribution, so the declared
+    delivery rate ``p_recover / (p_fail + p_recover)`` holds from round 0.
+``straggler_slowdown``
+    Lognormal compute-time inflation: client k's round-t compute time is
+    ``compute_frac_k * exp(sigma_k * z)`` deadlines with ``z ~ N(0, 1)``;
+    the update misses the deadline (fails) when that exceeds 1.  The
+    stationary delivery rate is ``Phi(ln(1/compute_frac) / sigma)``.
+
+The lowered pytree also carries the per-client *declared stationary
+delivery rate* — failure-aware OCEAN variants (``overprovision``) read
+it in-graph to size their selection slack.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.env.channel import LowerCtx, check_spec_keys
+
+Array = jax.Array
+
+
+class TracedFailure(NamedTuple):
+    """Realized reliability for one cell, as the round semantics consume it.
+
+    ``delivered`` is the ``(T, K)`` {0, 1} mask (float32 — it multiplies
+    into traced arithmetic); ``rate`` is the ``(K,)`` declared stationary
+    delivery rate the lowering computed eagerly (NOT the realized mean).
+    """
+
+    delivered: Array  # (T, K) float32 in {0.0, 1.0}
+    rate: Array       # (K,) float32 declared stationary delivery rate
+
+
+class FailureParams(NamedTuple):
+    """Unified, vmappable parameterization of every failure process.
+
+    All leaves are float32 arrays; "off" sub-processes are encoded as
+    zero flags, never as structurally different pytrees, so cells with
+    heterogeneous reliability stack on a grid's scenario axis.
+    """
+
+    drop_on: Array       # ()  1.0 => i.i.d. Bernoulli dropout active
+    p_deliver: Array     # (K,) per-(round, client) delivery probability
+    chain_on: Array      # ()  1.0 => Gilbert-Elliott availability chain
+    p_fail: Array        # (K,) up -> down transition probability
+    p_recover: Array     # (K,) down -> up transition probability
+    strag_on: Array      # ()  1.0 => lognormal straggler slowdown
+    strag_sigma: Array   # (K,) lognormal sigma of the compute-time draw
+    compute_frac: Array  # (K,) median compute time / deadline
+    rate: Array          # (K,) declared stationary delivery rate
+
+
+def _off_mods(num_clients: int) -> Dict[str, Any]:
+    ones = jnp.ones((num_clients,), jnp.float32)
+    zeros = jnp.zeros((num_clients,), jnp.float32)
+    return dict(
+        drop_on=jnp.float32(0.0),
+        p_deliver=ones,
+        chain_on=jnp.float32(0.0),
+        p_fail=zeros,
+        p_recover=ones,
+        strag_on=jnp.float32(0.0),
+        strag_sigma=ones,
+        compute_frac=0.5 * ones,
+        rate=ones,
+    )
+
+
+# --------------------------------------------------------------------------
+# the single interpreter: one program evaluates every registered process
+# --------------------------------------------------------------------------
+def sample_failure_process(
+    params: FailureParams, key: Array, num_rounds: int, num_clients: int
+) -> Array:
+    """Realize the ``(T, K)`` delivered mask for one cell.
+
+    Sub-process masks compose as a product of ``where(flag > 0, m, 1.0)``
+    factors, so with every flag off the result is an *exact* all-ones
+    array (the ``none`` process) — inactive sub-streams are drawn and
+    discarded, keeping the traced program identical across cells.
+    """
+    T, K = num_rounds, num_clients
+    k_drop, k_chain0, k_chain, k_strag = jax.random.split(key, 4)
+
+    # i.i.d. Bernoulli delivery.
+    u_drop = jax.random.uniform(k_drop, (T, K))
+    m_drop = (u_drop < params.p_deliver).astype(jnp.float32)
+
+    # Gilbert-Elliott up/down chain, started from its stationary
+    # distribution so the declared rate holds from round 0.
+    pi_up = params.p_recover / jnp.maximum(params.p_fail + params.p_recover, 1e-12)
+    up0 = (jax.random.uniform(k_chain0, (K,)) < pi_up).astype(jnp.float32)
+    u_chain = jax.random.uniform(k_chain, (T, K))
+
+    def step(up, u):
+        p_flip = jnp.where(up > 0.0, params.p_fail, params.p_recover)
+        up_new = jnp.where(u < p_flip, 1.0 - up, up)
+        return up_new, up_new
+
+    _, m_chain = jax.lax.scan(step, up0, u_chain)
+
+    # Lognormal compute time in units of the deadline; late => lost.
+    z = jax.random.normal(k_strag, (T, K))
+    t_frac = params.compute_frac * jnp.exp(params.strag_sigma * z)
+    m_strag = (t_frac <= 1.0).astype(jnp.float32)
+
+    delivered = jnp.ones((T, K), jnp.float32)
+    delivered = delivered * jnp.where(params.drop_on > 0.0, m_drop, 1.0)
+    delivered = delivered * jnp.where(params.chain_on > 0.0, m_chain, 1.0)
+    delivered = delivered * jnp.where(params.strag_on > 0.0, m_strag, 1.0)
+    return delivered
+
+
+def traced_failure(
+    params: FailureParams, key: Array, num_rounds: int, num_clients: int
+) -> TracedFailure:
+    """Bundle one cell's realized mask with its declared rates — the
+    ``TracedFailure`` the round semantics (``simulate(failure_seq=)``,
+    ``PolicyParams.failure_seq``) consume."""
+    return TracedFailure(
+        delivered=sample_failure_process(params, key, num_rounds, num_clients),
+        rate=params.rate,
+    )
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+FailureLowerFn = Callable[[Mapping[str, Any], LowerCtx], FailureParams]
+RateFn = Callable[[Mapping[str, Any], LowerCtx], Tuple[float, ...]]
+
+
+class FailureProcess(NamedTuple):
+    """A registered failure process.
+
+    Attributes:
+      name:          registry key (the ``EnvSpec.failure`` string).
+      lower:         (params dict, ctx) -> FailureParams.
+      delivery_rate: (params dict, ctx) -> per-client declared stationary
+                     delivery rates (eager Python floats, for docs/tables;
+                     the same numbers the lowering bakes into ``rate``).
+      doc:           one-line description for tables/docs.
+    """
+
+    name: str
+    lower: FailureLowerFn
+    delivery_rate: Optional[RateFn] = None
+    doc: str = ""
+
+
+_FAILURE_REGISTRY: Dict[str, FailureProcess] = {}
+
+
+def register_failure_process(
+    name: str,
+    lower: FailureLowerFn,
+    *,
+    delivery_rate: Optional[RateFn] = None,
+    doc: str = "",
+) -> FailureProcess:
+    proc = FailureProcess(name, lower, delivery_rate, doc)
+    _FAILURE_REGISTRY[name] = proc
+    return proc
+
+
+def available_failure_processes() -> Tuple[str, ...]:
+    return tuple(sorted(_FAILURE_REGISTRY))
+
+
+def get_failure_process(name: str) -> FailureProcess:
+    if name not in _FAILURE_REGISTRY:
+        raise ValueError(
+            f"unknown failure process {name!r}; available: "
+            f"{', '.join(available_failure_processes())}"
+        )
+    return _FAILURE_REGISTRY[name]
+
+
+# -- registry entries -------------------------------------------------------
+def _per_client(
+    process: str, key: str, value: Any, num_clients: int, lo: float, hi: float
+) -> Tuple[float, ...]:
+    """Validate a scalar-or-length-K parameter into K Python floats."""
+    if isinstance(value, (int, float)):
+        vals = (float(value),) * num_clients
+    else:
+        vals = tuple(float(v) for v in value)
+        if len(vals) != num_clients:
+            raise ValueError(
+                f"{process} {key} needs a scalar or {num_clients} per-client "
+                f"entries, got {len(vals)}"
+            )
+    for v in vals:
+        if not lo <= v <= hi:
+            raise ValueError(
+                f"{process} {key} must lie in [{lo}, {hi}], got {v}"
+            )
+    return vals
+
+
+def _f32_vec(vals: Tuple[float, ...]) -> Array:
+    return jnp.asarray(vals, jnp.float32)
+
+
+def _none_lower(spec, ctx):
+    check_spec_keys("none", spec, ())
+    return FailureParams(**_off_mods(ctx.num_clients))
+
+
+def _none_rate(spec, ctx):
+    return (1.0,) * ctx.num_clients
+
+
+def _dropout_lower(spec, ctx):
+    check_spec_keys("iid_dropout", spec, ("p_deliver",))
+    p = _per_client(
+        "iid_dropout", "p_deliver", spec.get("p_deliver", 0.9),
+        ctx.num_clients, 0.0, 1.0,
+    )
+    fields = _off_mods(ctx.num_clients)
+    fields.update(
+        drop_on=jnp.float32(1.0),
+        p_deliver=_f32_vec(p),
+        rate=_f32_vec(p),
+    )
+    return FailureParams(**fields)
+
+
+def _dropout_rate(spec, ctx):
+    return _per_client(
+        "iid_dropout", "p_deliver", spec.get("p_deliver", 0.9),
+        ctx.num_clients, 0.0, 1.0,
+    )
+
+
+def _markov_rates(spec, ctx):
+    p_fail = _per_client(
+        "markov_availability", "p_fail", spec.get("p_fail", 0.1),
+        ctx.num_clients, 0.0, 1.0,
+    )
+    p_recover = _per_client(
+        "markov_availability", "p_recover", spec.get("p_recover", 0.4),
+        ctx.num_clients, 0.0, 1.0,
+    )
+    rates = []
+    for pf, pr in zip(p_fail, p_recover):
+        if pf + pr <= 0.0:
+            raise ValueError(
+                f"markov_availability needs p_fail + p_recover > 0 per "
+                f"client (the chain must mix), got p_fail={pf}, "
+                f"p_recover={pr}"
+            )
+        rates.append(pr / (pf + pr))
+    return p_fail, p_recover, tuple(rates)
+
+
+def _markov_lower(spec, ctx):
+    check_spec_keys("markov_availability", spec, ("p_fail", "p_recover"))
+    p_fail, p_recover, rates = _markov_rates(spec, ctx)
+    fields = _off_mods(ctx.num_clients)
+    fields.update(
+        chain_on=jnp.float32(1.0),
+        p_fail=_f32_vec(p_fail),
+        p_recover=_f32_vec(p_recover),
+        rate=_f32_vec(rates),
+    )
+    return FailureParams(**fields)
+
+
+def _markov_rate(spec, ctx):
+    return _markov_rates(spec, ctx)[2]
+
+
+def _straggler_rates(spec, ctx):
+    sigma = _per_client(
+        "straggler_slowdown", "sigma", spec.get("sigma", 0.5),
+        ctx.num_clients, 1e-6, 10.0,
+    )
+    frac = _per_client(
+        "straggler_slowdown", "compute_frac", spec.get("compute_frac", 0.8),
+        ctx.num_clients, 1e-6, 100.0,
+    )
+    # P[frac * exp(sigma z) <= 1] = Phi(ln(1/frac) / sigma).
+    rates = tuple(
+        0.5 * (1.0 + math.erf(math.log(1.0 / f) / s / math.sqrt(2.0)))
+        for s, f in zip(sigma, frac)
+    )
+    return sigma, frac, rates
+
+
+def _straggler_lower(spec, ctx):
+    check_spec_keys("straggler_slowdown", spec, ("sigma", "compute_frac"))
+    sigma, frac, rates = _straggler_rates(spec, ctx)
+    fields = _off_mods(ctx.num_clients)
+    fields.update(
+        strag_on=jnp.float32(1.0),
+        strag_sigma=_f32_vec(sigma),
+        compute_frac=_f32_vec(frac),
+        rate=_f32_vec(rates),
+    )
+    return FailureParams(**fields)
+
+
+def _straggler_rate(spec, ctx):
+    return _straggler_rates(spec, ctx)[2]
+
+
+register_failure_process(
+    "none",
+    _none_lower,
+    delivery_rate=_none_rate,
+    doc="every selected update delivers (bit-identical to pre-failure paths)",
+)
+register_failure_process(
+    "iid_dropout",
+    _dropout_lower,
+    delivery_rate=_dropout_rate,
+    doc="i.i.d. Bernoulli delivery with probability p_deliver per round",
+)
+register_failure_process(
+    "markov_availability",
+    _markov_lower,
+    delivery_rate=_markov_rate,
+    doc="Gilbert-Elliott per-client up/down chain (p_fail / p_recover)",
+)
+register_failure_process(
+    "straggler_slowdown",
+    _straggler_lower,
+    delivery_rate=_straggler_rate,
+    doc="lognormal compute-time inflation; late updates miss the deadline",
+)

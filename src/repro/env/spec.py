@@ -34,6 +34,7 @@ from repro.env.channel import (
     get_channel_process,
 )
 from repro.env.energy import BudgetParams, get_budget_process
+from repro.env.failure import FailureParams, get_failure_process
 from repro.env.radio import RadioProcessParams, get_radio_process
 
 Array = jax.Array
@@ -54,6 +55,11 @@ class EnvSpec:
                       reproduces the scenario's fixed ``RadioParams``
                       bit-for-bit.
       radio_params:   JSON-able parameter dict for the radio process.
+      failure:        registered failure-process name (see
+                      ``repro.env.available_failure_processes``); ``none``
+                      keeps every pre-failure code path and payload
+                      byte-identical.
+      failure_params: JSON-able parameter dict for the failure process.
     """
 
     channel: str = "iid_rayleigh"
@@ -62,11 +68,14 @@ class EnvSpec:
     budget_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     radio: str = "static"
     radio_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    failure: str = "none"
+    failure_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     def validate(self) -> None:
         get_channel_process(self.channel)
         get_budget_process(self.budget)
         get_radio_process(self.radio)
+        get_failure_process(self.failure)
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -83,6 +92,12 @@ class EnvSpec:
         if self.radio != "static" or self.radio_params:
             d["radio"] = self.radio
             d["radio_params"] = dict(self.radio_params)
+        # Same omit-when-default discipline for the failure axis: pre-failure
+        # payloads stay byte-stable and every existing scenario keeps its
+        # exact channel/budget/radio streams (the salt hashes this dict).
+        if self.failure != "none" or self.failure_params:
+            d["failure"] = self.failure
+            d["failure_params"] = dict(self.failure_params)
         return d
 
     @classmethod
@@ -111,6 +126,7 @@ class LoweredEnv(NamedTuple):
     channel: ChannelParams
     budget: BudgetParams
     radio: RadioProcessParams
+    failure: FailureParams
     key_salt: int  # uint32 content hash for fold_in
 
 
@@ -133,10 +149,12 @@ def lower_env(spec: EnvSpec, ctx: LowerCtx) -> LoweredEnv:
     chan = get_channel_process(spec.channel)
     budg = get_budget_process(spec.budget)
     radio = get_radio_process(spec.radio)
+    failure = get_failure_process(spec.failure)
     return LoweredEnv(
         channel=chan.lower(spec.channel_params, ctx),
         budget=budg.lower(spec.budget_params, ctx),
         radio=radio.lower(spec.radio_params, ctx),
+        failure=failure.lower(spec.failure_params, ctx),
         key_salt=env_key_salt(spec, ctx),
     )
 
@@ -162,3 +180,15 @@ def radio_cell_key(fade_key: Array, key_salt) -> Array:
     """PRNG key feeding the radio process of one (scenario, seed) cell."""
     env_key = jax.random.fold_in(fade_key, key_salt)
     return jax.random.fold_in(env_key, _RADIO_STREAM)
+
+
+# Distinct stream id for the failure process — fold_in (not a wider split)
+# keeps the channel/budget/radio keys, and so every pre-failure draw,
+# bit-identical.
+_FAILURE_STREAM = 0x6661_694C  # "faiL"
+
+
+def failure_cell_key(fade_key: Array, key_salt) -> Array:
+    """PRNG key feeding the failure process of one (scenario, seed) cell."""
+    env_key = jax.random.fold_in(fade_key, key_salt)
+    return jax.random.fold_in(env_key, _FAILURE_STREAM)

@@ -162,8 +162,15 @@ class WflnExperiment:
         k_init, k_rounds = jax.random.split(key)
         params0 = self.task.init(k_init)
 
+        # With a failure process active, aggregation only sees the updates
+        # that actually arrived (selected AND delivered); selected clients
+        # still train locally and report their losses.  Without failures
+        # delivered == selections, numerically identical to the legacy path.
+        has_dlv = trace.delivered is not None
+        dlv = trace.a if trace.delivered is None else trace.delivered
+
         def round_step(params, inputs):
-            a_t, k_t = inputs
+            a_t, d_t, k_t = inputs
             kb, kl = jax.random.split(k_t)
             bx, by = client_batch(ds, kb, self.batch_size)
 
@@ -182,7 +189,7 @@ class WflnExperiment:
                 jax.random.split(kl, ds.num_clients), bx, by
             )
             new_params = masked_fedavg(
-                params, deltas, a_t, server_lr=self.server_lr
+                params, deltas, d_t, server_lr=self.server_lr
             )
             m = self.task.metrics(new_params, ds.test_x, ds.test_y)
             sel = jnp.sum(a_t)
@@ -197,8 +204,10 @@ class WflnExperiment:
                 "test_accuracy": m["accuracy"],
                 "num_selected": sel,
             }
+            if has_dlv:
+                out["num_delivered"] = jnp.sum(d_t)
             return new_params, out
 
         keys = jax.random.split(k_rounds, T)
-        _, history = jax.lax.scan(round_step, params0, (trace.a, keys))
+        _, history = jax.lax.scan(round_step, params0, (trace.a, dlv, keys))
         return history

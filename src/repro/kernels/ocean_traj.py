@@ -61,6 +61,7 @@ from repro.core.ocean import (
     RoundDecision,
     ocean_round,
 )
+from repro.env.failure import TracedFailure
 from repro.env.radio import TracedRadio
 from repro.obs.metrics import (
     finalize_metrics,
@@ -98,6 +99,7 @@ def _traj_kernel(
     chunk: int,
     num_rounds: int,
     has_radio: bool,
+    has_failure: bool = False,
     has_init: bool = False,
 ):
     # stream_bf16: the per-round (chunk, K) output refs may be bf16 — the
@@ -109,10 +111,14 @@ def _traj_kernel(
     Ref layout (after the closure statics):
       inputs:  h2 (chunk, K), v (chunk,), eta (chunk,), inc (chunk, K)
                [+ the 7 TracedRadio leaves, (chunk,) each, iff has_radio]
+               [+ dlv (chunk, K) streamed delivery mask and rate (1, K)
+               declared stationary rates — the same slot every step, like
+               the restored carry — iff has_failure]
                [+ q0 (1, K), es0 (1, K), t0 (1,) — the restored carry for
                a mid-trajectory segment launch — and one (1, ...) leaf
                per restored MetricsState leaf, iff has_init]
       outputs: a, b, e, q_pre, rho (chunk, K); obj, nsel (chunk,);
+               [+ dlv (chunk, K) and ral (chunk,) iff has_failure;]
                q_final, es_final (1, K) — rewritten every step, so after
                the last step they hold the end-of-trajectory state;
                [+ one (chunk, ...) streamed tile per full_trace metrics
@@ -137,17 +143,26 @@ def _traj_kernel(
     n_in = 4 + (_N_RADIO_LEAVES if has_radio else 0)
     h2_ref, v_ref, eta_ref, inc_ref = refs[:4]
     radio_refs = refs[4:n_in]
+    if has_failure:
+        dlv_ref, rate_ref = refs[n_in : n_in + 2]
+        n_in += 2
     if has_init:
         q0_ref, es0_ref, t0_ref = refs[n_in : n_in + 3]
         minit_refs = refs[n_in + 3 : n_in + 3 + n_mleaves]
         n_in += 3 + n_mleaves
-    (
-        a_ref, b_ref, e_ref, qp_ref, rho_ref, obj_ref, ns_ref,
-        qf_ref, esf_ref,
-    ) = refs[n_in : n_in + 9]
-    trace_refs = refs[n_in + 9 : n_in + 9 + n_traces]
-    mfinal_refs = refs[n_in + 9 + n_traces : n_in + 9 + n_traces + n_mleaves]
-    scratch = refs[n_in + 9 + n_traces + n_mleaves :]
+    n_out = 9 + (2 if has_failure else 0)
+    fixed = refs[n_in : n_in + n_out]
+    a_ref, b_ref, e_ref, qp_ref, rho_ref, obj_ref, ns_ref = fixed[:7]
+    if has_failure:
+        dlvo_ref, ral_ref = fixed[7:9]
+        qf_ref, esf_ref = fixed[9:11]
+    else:
+        qf_ref, esf_ref = fixed[7:9]
+    trace_refs = refs[n_in + n_out : n_in + n_out + n_traces]
+    mfinal_refs = refs[
+        n_in + n_out + n_traces : n_in + n_out + n_traces + n_mleaves
+    ]
+    scratch = refs[n_in + n_out + n_traces + n_mleaves :]
     q_scr, es_scr = scratch[:2]
     m_scrs = scratch[2:]
 
@@ -172,7 +187,10 @@ def _traj_kernel(
     fdtype = q_scr.dtype
 
     def step(i, carry):
-        q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c, m_leaves, t_bufs = carry
+        (
+            q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c, fail_bufs,
+            m_leaves, t_bufs,
+        ) = carry
         # tl indexes rounds within THIS launch (drives validity masking of
         # chunk-padded tails); t is the global Alg. 1 round (drives frame
         # resets).  They coincide unless this is a resumed segment.
@@ -191,7 +209,15 @@ def _traj_kernel(
             cfg,
             budget_inc=inc_ref[i],
             radio=radio_t,
+            delivered=dlv_ref[i] if has_failure else None,
+            fail_rate=rate_ref[0] if has_failure else None,
         )
+        if has_failure:
+            dlv_c, ral_c = fail_bufs
+            fail_bufs = (
+                dlv_c.at[i].set(dec.delivered),
+                ral_c.at[i].set(dec.realloc),
+            )
         # Chunk-padded tail rounds (tl >= T) stream edge-replicated inputs:
         # their math runs but must not advance the resident carry.
         valid = tl < num_rounds
@@ -221,6 +247,7 @@ def _traj_kernel(
             rho_c.at[i].set(dec.rho),
             obj_c.at[i].set(dec.objective),
             ns_c.at[i].set(dec.num_selected),
+            fail_bufs,
             m_leaves,
             t_bufs,
         )
@@ -233,11 +260,17 @@ def _traj_kernel(
         zf, zf, zf, zf,
         jnp.zeros((chunk,), fdtype),
         jnp.zeros((chunk,), jnp.int32),
+        (
+            (jnp.zeros((chunk, K), jnp.bool_), jnp.zeros((chunk,), jnp.int32))
+            if has_failure
+            else ()
+        ),
         tuple(ref[0] for ref in m_scrs),
         tuple(jnp.zeros(ref.shape, ref.dtype) for ref in trace_refs),
     )
     (
-        q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c, m_leaves, t_bufs,
+        q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c, fail_bufs,
+        m_leaves, t_bufs,
     ) = jax.lax.fori_loop(0, chunk, step, carry0)
     with trace_span("traj/chunk_io"):
         q_scr[0] = q
@@ -249,6 +282,9 @@ def _traj_kernel(
         rho_ref[...] = rho_c.astype(rho_ref.dtype)
         obj_ref[...] = obj_c
         ns_ref[...] = ns_c
+        if has_failure:
+            dlvo_ref[...] = fail_bufs[0]
+            ral_ref[...] = fail_bufs[1]
         qf_ref[0] = q
         esf_ref[0] = es
         for ref, buf in zip(trace_refs, t_bufs):
@@ -274,6 +310,7 @@ def ocean_trajectory_fused(
     eta_seq: Array,       # (T,)   temporal weights
     budget_seq: Array,    # (T, K) per-round budget increments
     radio_seq: Optional[TracedRadio] = None,  # (T,)-leaf radio pytree
+    failure_seq: Optional[TracedFailure] = None,  # (T, K) mask + (K,) rates
     *,
     chunk: Optional[int] = None,
     stream_bf16: bool = False,
@@ -339,6 +376,7 @@ def ocean_trajectory_fused(
     n_chunks = (T + pad) // chunk
 
     has_radio = radio_seq is not None
+    has_failure = failure_seq is not None
     inputs = [
         _pad_rounds(jnp.asarray(h2_seq, fdtype), pad),
         _pad_rounds(jnp.asarray(v_seq, jnp.float32), pad),
@@ -349,6 +387,12 @@ def ocean_trajectory_fused(
         inputs.extend(
             _pad_rounds(jnp.asarray(leaf, jnp.float32), pad)
             for leaf in radio_seq
+        )
+    if has_failure:
+        # Streamed like the other per-round (T, K) inputs; the fixed (K,)
+        # declared rates ride as a whole-array block appended below.
+        inputs.append(
+            _pad_rounds(jnp.asarray(failure_seq.delivered, jnp.float32), pad)
         )
     n_streamed = len(inputs)
 
@@ -373,9 +417,13 @@ def ocean_trajectory_fused(
         chunk=chunk,
         num_rounds=T,
         has_radio=has_radio,
+        has_failure=has_failure,
         has_init=has_init,
     )
     in_specs = [row_spec(x) for x in inputs[:n_streamed]]
+    if has_failure:
+        inputs.append(jnp.asarray(failure_seq.rate, jnp.float32).reshape(1, K))
+        in_specs.append(pl.BlockSpec((1, K), lambda ic: (0, 0)))
     if has_init:
         # Restored-carry inputs: whole-array blocks, same slot every step
         # (only read at ic == 0).
@@ -405,8 +453,6 @@ def ocean_trajectory_fused(
         pl.BlockSpec((chunk, K), lambda ic: (ic, 0)),   # rho
         pl.BlockSpec((chunk,), lambda ic: (ic,)),       # objective
         pl.BlockSpec((chunk,), lambda ic: (ic,)),       # num_selected
-        pl.BlockSpec((1, K), lambda ic: (0, 0)),        # q_final
-        pl.BlockSpec((1, K), lambda ic: (0, 0)),        # es_final
     ]
     out_shape = [
         jax.ShapeDtypeStruct((Tp, K), jnp.bool_),
@@ -416,9 +462,16 @@ def ocean_trajectory_fused(
         jax.ShapeDtypeStruct((Tp, K), sdtype),
         jax.ShapeDtypeStruct((Tp,), fdtype),
         jax.ShapeDtypeStruct((Tp,), jnp.int32),
-        jax.ShapeDtypeStruct((1, K), fdtype),
-        jax.ShapeDtypeStruct((1, K), fdtype),
     ]
+    if has_failure:
+        out_specs.append(pl.BlockSpec((chunk, K), lambda ic: (ic, 0)))  # dlv
+        out_specs.append(pl.BlockSpec((chunk,), lambda ic: (ic,)))      # ral
+        out_shape.append(jax.ShapeDtypeStruct((Tp, K), jnp.bool_))
+        out_shape.append(jax.ShapeDtypeStruct((Tp,), jnp.int32))
+    out_specs.append(pl.BlockSpec((1, K), lambda ic: (0, 0)))           # q_final
+    out_specs.append(pl.BlockSpec((1, K), lambda ic: (0, 0)))           # es_final
+    out_shape.append(jax.ShapeDtypeStruct((1, K), fdtype))
+    out_shape.append(jax.ShapeDtypeStruct((1, K), fdtype))
     scratch_shapes = [
         pltpu.VMEM((1, K), fdtype),   # q carry
         pltpu.VMEM((1, K), fdtype),   # energy_spent carry
@@ -452,7 +505,13 @@ def ocean_trajectory_fused(
         scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(*inputs)
-    a, b, e, q_pre, rho, obj, nsel, q_final, es_final = out[:9]
+    n_fixed = 9 + (2 if has_failure else 0)
+    a, b, e, q_pre, rho, obj, nsel = out[:7]
+    if has_failure:
+        dlv, ral = out[7:9]
+    else:
+        dlv = ral = None
+    q_final, es_final = out[n_fixed - 2 : n_fixed]
 
     t_final = (
         jnp.asarray(init_state.t, jnp.int32) + T
@@ -472,16 +531,20 @@ def ocean_trajectory_fused(
         rho=rho[:T],
         objective=obj[:T],
         num_selected=nsel[:T],
+        delivered=None if dlv is None else dlv[:T],
+        realloc=None if ral is None else ral[:T],
     )
     if spec is None:
         return state, decs
     n_traces = len(spec.full_trace_entries)
     traces = {
         metric_key(name, "full_trace"): tr[:T]
-        for name, tr in zip(spec.full_trace_entries, out[9 : 9 + n_traces])
+        for name, tr in zip(
+            spec.full_trace_entries, out[n_fixed : n_fixed + n_traces]
+        )
     }
     mstate = jax.tree_util.tree_unflatten(
-        m_treedef, [x[0] for x in out[9 + n_traces :]]
+        m_treedef, [x[0] for x in out[n_fixed + n_traces :]]
     )
     if raw_metrics:
         return state, decs, mstate, traces

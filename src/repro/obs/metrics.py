@@ -79,6 +79,10 @@ class RoundContext(NamedTuple):
     v: Array             # scalar control parameter V
     eta: Array           # scalar temporal weight eta^t
     b_min: Array         # scalar bandwidth floor (traced radio compatible)
+    # Failure extension (None without a failure process; the reliability
+    # collectors fall back to their perfect-delivery values):
+    delivered: Optional[Array] = None  # (K,) bool selected-and-delivered
+    realloc: Optional[Array] = None    # () int32 mid-round P4 re-solve flag
 
 
 def round_context(t, dec, new_state, v, eta, budget_inc, radio) -> RoundContext:
@@ -98,6 +102,8 @@ def round_context(t, dec, new_state, v, eta, budget_inc, radio) -> RoundContext:
         v=jnp.asarray(v, jnp.float32),
         eta=jnp.asarray(eta, jnp.float32),
         b_min=jnp.asarray(radio.b_min, jnp.float32),
+        delivered=getattr(dec, "delivered", None),
+        realloc=getattr(dec, "realloc", None),
     )
 
 
@@ -207,6 +213,30 @@ def _c_topm_saturated(cfg, ctx, state):
     n0 = jnp.sum(ctx.rho <= _RHO_ZERO_TOL)
     sat = (_f32(ctx.num_selected) - _f32(n0)) >= float(m_cands)
     return _f32(sat), state
+
+
+def _c_delivery_rate(cfg, ctx, state):
+    # Fraction of this round's selections whose update arrived; with no
+    # failure process every selection delivers by definition.
+    ns = _f32(ctx.num_selected)
+    dlv = ns if ctx.delivered is None else jnp.sum(_f32(ctx.delivered))
+    return dlv / jnp.maximum(ns, 1.0), state
+
+
+def _c_wasted_energy(cfg, ctx, state):
+    # Energy charged to selected-but-failed clients this round (the
+    # pessimistic accounting: the virtual queue billed them anyway).
+    if ctx.delivered is None:
+        return jnp.zeros((), jnp.float32), state
+    failed = ctx.a & ~ctx.delivered
+    return jnp.sum(_f32(ctx.e) * _f32(failed)), state
+
+
+def _c_reallocation_count(cfg, ctx, state):
+    # Running count of mid-round P4 re-solves (failure_mode='reallocate').
+    ral = 0.0 if ctx.realloc is None else _f32(ctx.realloc)
+    count = state + ral
+    return count, count
 
 
 def _no_state(cfg):
@@ -322,6 +352,30 @@ _register(
     _c_bmin_active,
     lambda cfg: (0.0, float(cfg.num_clients)),
     "selected clients pinned at the b_min bandwidth floor (clamp count)",
+)
+_register(
+    "delivery_rate",
+    lambda k: (),
+    _no_state,
+    _c_delivery_rate,
+    lambda cfg: (0.0, 1.0),
+    "fraction of selected clients whose update arrived (1.0 sans failures)",
+)
+_register(
+    "wasted_energy",
+    lambda k: (),
+    _no_state,
+    _c_wasted_energy,
+    lambda cfg: (0.0, _budget_hi(cfg)),
+    "energy charged to selected-but-failed clients this round",
+)
+_register(
+    "reallocation_count",
+    lambda k: (),
+    lambda cfg: jnp.zeros((), jnp.float32),
+    _c_reallocation_count,
+    lambda cfg: (0.0, float(cfg.num_rounds)),
+    "running count of mid-round P4 re-solves (failure_mode='reallocate')",
 )
 _register(
     "topm_saturated",

@@ -86,8 +86,9 @@ from repro.core.policy import (
 from repro.core.scenario import Scenario
 from repro.env.channel import sample_channel_process
 from repro.env.energy import sample_budget_process
+from repro.env.failure import TracedFailure, traced_failure
 from repro.env.radio import TracedRadio, sample_radio_process
-from repro.env.spec import env_cell_keys, radio_cell_key
+from repro.env.spec import env_cell_keys, failure_cell_key, radio_cell_key
 from repro.obs.metrics import MetricsSpec, finalize_metrics
 from repro.obs.spans import trace_span
 
@@ -116,6 +117,12 @@ class GridResult(NamedTuple):
     budget_inc: Optional[Array] = None    # (S, N, T, K) per-round increments
     budget_total: Optional[Array] = None  # (S, N, K) realized totals H_k
     radio_seq: Optional[TracedRadio] = None  # pytree of (S, N, T) radio leaves
+    # (P, S, N, T, K) selected-and-delivered masks plus the realized
+    # reliability streams ((S, N, T, K) masks, (S, N, K) declared rates);
+    # None for grids without an active repro.env.failure process — the
+    # legacy payloads stay byte-identical.
+    delivered: Optional[Array] = None
+    failure_seq: Optional[TracedFailure] = None
     # per-policy in-graph telemetry: one entry per policy-axis index (None
     # for policies without the Lyapunov machinery), each a dict of
     # "<collector>/<reduction>" -> (S, N, ...) arrays.  A tuple — not a
@@ -159,6 +166,9 @@ class GridResult(NamedTuple):
             e=self.e[p, s, n],
             num_selected=self.num_selected[p, s, n],
             metrics=mets,
+            delivered=(
+                None if self.delivered is None else self.delivered[p, s, n]
+            ),
         )
 
 
@@ -185,7 +195,7 @@ def _check_compatible(scenarios: Sequence[Scenario]) -> Scenario:
             for field in (
                 "num_rounds", "num_clients", "frame_len", "solver",
                 "ranking", "top_m", "block_k", "traj", "metrics",
-                "checkpoint",
+                "checkpoint", "failure_mode",
             )
             if getattr(base, field) != getattr(sc, field)
         ]
@@ -299,6 +309,19 @@ class GridEngine:
         self._radio_params = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *[l.radio for l in lowered]
         )
+        # Failure streams are gated by a Python static: grids where every
+        # scenario runs failure="none" trace the exact pre-failure program
+        # (and serialize the exact pre-failure payloads).
+        self._has_failure = any(
+            sc.env_spec().failure != "none" for sc in self.scenarios
+        )
+        self._failure_params = (
+            jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *[l.failure for l in lowered]
+            )
+            if self._has_failure
+            else None
+        )
         self._env_salts = jnp.asarray(
             [l.key_salt for l in lowered], jnp.uint32
         )
@@ -313,7 +336,7 @@ class GridEngine:
             fn = shard_map(
                 self._build_flat,
                 mesh=mesh,
-                in_specs=(pc, pc, pc, pc, pc, pc, pc, rep, pc),
+                in_specs=(pc, pc, pc, pc, pc, pc, pc, pc, rep, pc),
                 out_specs=pc,
                 check_rep=False,
             )
@@ -323,7 +346,7 @@ class GridEngine:
             donate = (
                 ()
                 if jax.default_backend() == "cpu"
-                else (0, 1, 2, 3, 4, 5, 6, 8)
+                else (0, 1, 2, 3, 4, 5, 6, 7, 9)
             )
             self._fn = jax.jit(fn, donate_argnums=donate)
         else:
@@ -348,19 +371,23 @@ class GridEngine:
 
     # -- environment sampling (shared by the legacy and segmented paths) -----
     def _sample_grid_env(
-        self, seed_arr, chan_params, budget_params, radio_params, env_salts
+        self, seed_arr, chan_params, budget_params, radio_params, env_salts,
+        failure_params=None,
     ):
         """Sample every (scenario, seed) cell's environment streams.
 
         The exact traced ops of the legacy ``_build`` sampling block — the
         segmented driver re-runs this same program, so a resumed sweep
         re-derives bit-identical streams from the seeds instead of
-        snapshotting them.
+        snapshotting them.  ``failure_params=None`` (a leafless pytree)
+        skips reliability sampling entirely, keeping pre-failure grids
+        byte-identical; active failures draw from their own dedicated key
+        stream, so they never perturb the channel/budget/radio draws.
         """
         cfg = self.cfg
         T, K = cfg.num_rounds, cfg.num_clients
 
-        def sample_cell(cp, bp, rp, salt, seed):
+        def sample_cell(cp, bp, rp, fp, salt, seed):
             # The fading key mirrors ChannelModel.sample exactly (shared
             # across scenarios); scenario-specific streams fold in the
             # spec's stable content salt (see module docstring).
@@ -370,14 +397,19 @@ class GridEngine:
             h2 = sample_channel_process(cp, fade_key, k_chan, T, K)
             dh, total = sample_budget_process(bp, k_budget, T, K)
             radio_seq = sample_radio_process(rp, k_radio, T)
-            return h2, dh, total, radio_seq
+            failure_seq = None
+            if fp is not None:
+                k_fail = failure_cell_key(fade_key, salt)
+                failure_seq = traced_failure(fp, k_fail, T, K)
+            return h2, dh, total, radio_seq, failure_seq
 
         over_seeds = jax.vmap(
-            sample_cell, in_axes=(None, None, None, None, 0)
+            sample_cell, in_axes=(None, None, None, None, None, 0)
         )
         return jax.vmap(
-            over_seeds, in_axes=(0, 0, 0, 0, None)
-        )(chan_params, budget_params, radio_params, env_salts, seed_arr)
+            over_seeds, in_axes=(0, 0, 0, 0, 0, None)
+        )(chan_params, budget_params, radio_params, failure_params, env_salts,
+          seed_arr)
 
     def _grid_keys(self, seed_arr, base_key):
         def cell_keys(s_idx):
@@ -390,18 +422,32 @@ class GridEngine:
         return jax.vmap(cell_keys)(jnp.arange(len(self.scenarios)))
 
     # -- the single compiled program ----------------------------------------
+    @staticmethod
+    def _stack_delivered(traces):
+        """(P, ...) delivered stack; policies that ignore failures (e.g.
+        ``pattern``) report their selections as delivered."""
+        if all(t.delivered is None for t in traces):
+            return None
+        return jnp.stack(
+            [t.a if t.delivered is None else t.delivered for t in traces]
+        )
+
     def _build(
         self, seed_arr, chan_params, budget_params, radio_params, env_salts,
-        etas, base_key, learn_keys,
+        etas, base_key, learn_keys, failure_params=None,
     ):
         cfg = self.cfg
 
         with trace_span("grid/sample_env"):
-            h2, budget_inc, budget_total, radio_seq = self._sample_grid_env(
-                seed_arr, chan_params, budget_params, radio_params, env_salts
+            (
+                h2, budget_inc, budget_total, radio_seq, failure_seq,
+            ) = self._sample_grid_env(
+                seed_arr, chan_params, budget_params, radio_params, env_salts,
+                failure_params,
             )
         # h2/budget_inc: (S, N, T, K); budget_total: (S, N, K);
-        # radio_seq: TracedRadio of (S, N, T) leaves
+        # radio_seq: TracedRadio of (S, N, T) leaves;
+        # failure_seq: TracedFailure of (S, N, T, K)/(S, N, K) leaves or None
 
         keys = self._grid_keys(seed_arr, base_key)  # (S, N, 2)
 
@@ -409,8 +455,8 @@ class GridEngine:
         histories = []
         for pol, pp in self._resolved:
             def cell(
-                h2_cell, eta_s, total_cell, inc_cell, radio_cell, key_cell,
-                pol=pol, pp=pp,
+                h2_cell, eta_s, total_cell, inc_cell, radio_cell, failure_cell,
+                key_cell, pol=pol, pp=pp,
             ):
                 params = resolve_params(
                     pol,
@@ -420,13 +466,15 @@ class GridEngine:
                     scenario_budgets=total_cell,
                     scenario_budget_seq=inc_cell,
                     scenario_radio_seq=radio_cell,
+                    scenario_failure_seq=failure_cell,
                 )
                 return pol.trace_fn(cfg, h2_cell, params)
 
             with trace_span(f"grid/policy/{pol.name}"):
-                over_seeds = jax.vmap(cell, in_axes=(0, None, 0, 0, 0, 0))
+                over_seeds = jax.vmap(cell, in_axes=(0, None, 0, 0, 0, 0, 0))
                 tr = jax.vmap(over_seeds)(
-                    h2, etas, budget_total, budget_inc, radio_seq, keys
+                    h2, etas, budget_total, budget_inc, radio_seq, failure_seq,
+                    keys,
                 )                                                 # (S, N, ...)
             traces.append(tr)
             if self.experiment is not None:
@@ -437,6 +485,7 @@ class GridEngine:
         b = jnp.stack([t.b for t in traces])
         e = jnp.stack([t.e for t in traces])
         ns = jnp.stack([t.num_selected for t in traces])
+        dlv = self._stack_delivered(traces)
         metrics = tuple(t.metrics for t in traces)
         history = (
             {k: jnp.stack([h[k] for h in histories]) for k in histories[0]}
@@ -445,13 +494,13 @@ class GridEngine:
         )
         return (
             a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
-            metrics,
+            metrics, dlv, failure_seq,
         )
 
     # -- the sharded program: one vmap over the flattened (S*N) cell axis ----
     def _build_flat(
         self, seed_flat, sidx_flat, chan_params, budget_params, radio_params,
-        env_salts, etas, base_key, learn_keys,
+        failure_params, env_salts, etas, base_key, learn_keys,
     ):
         """Per-cell program over the flattened (padded) cell axis.
 
@@ -464,13 +513,17 @@ class GridEngine:
         cfg = self.cfg
         T, K = cfg.num_rounds, cfg.num_clients
 
-        def cell(seed, s_idx, cp, bp, rp, salt, eta_s, lkey):
+        def cell(seed, s_idx, cp, bp, rp, fp, salt, eta_s, lkey):
             fade_key = jax.random.PRNGKey(seed)
             k_chan, k_budget = env_cell_keys(fade_key, salt)
             k_radio = radio_cell_key(fade_key, salt)
             h2 = sample_channel_process(cp, fade_key, k_chan, T, K)
             dh, total = sample_budget_process(bp, k_budget, T, K)
             radio_seq = sample_radio_process(rp, k_radio, T)
+            failure_seq = None
+            if fp is not None:
+                k_fail = failure_cell_key(fade_key, salt)
+                failure_seq = traced_failure(fp, k_fail, T, K)
             key_cell = jax.random.fold_in(
                 jax.random.fold_in(base_key, s_idx), seed
             )
@@ -485,6 +538,7 @@ class GridEngine:
                     scenario_budgets=total,
                     scenario_budget_seq=dh,
                     scenario_radio_seq=radio_seq,
+                    scenario_failure_seq=failure_seq,
                 )
                 with trace_span(f"grid/policy/{pol.name}"):
                     tr = pol.trace_fn(cfg, h2, params)
@@ -495,17 +549,21 @@ class GridEngine:
             b = jnp.stack([t.b for t in traces])
             e = jnp.stack([t.e for t in traces])
             ns = jnp.stack([t.num_selected for t in traces])
+            dlv = self._stack_delivered(traces)
             metrics = tuple(t.metrics for t in traces)
             history = (
                 {k: jnp.stack([h[k] for h in hists]) for k in hists[0]}
                 if hists
                 else {}
             )
-            return a, b, e, ns, h2, dh, total, radio_seq, history, metrics
+            return (
+                a, b, e, ns, h2, dh, total, radio_seq, history, metrics,
+                dlv, failure_seq,
+            )
 
         return jax.vmap(cell)(
             seed_flat, sidx_flat, chan_params, budget_params, radio_params,
-            env_salts, etas, learn_keys,
+            failure_params, env_salts, etas, learn_keys,
         )
 
     def _run_sharded(self, seed_arr, base_key, learn_keys):
@@ -534,6 +592,7 @@ class GridEngine:
             per_scenario(self._chan_params),
             per_scenario(self._budget_params),
             per_scenario(self._radio_params),
+            per_scenario(self._failure_params),
             pad_cells(jnp.repeat(self._env_salts, N, axis=0)),
             per_scenario(self._etas),
             base_key,
@@ -547,10 +606,12 @@ class GridEngine:
 
         (
             a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
-            metrics,
+            metrics, dlv, failure_seq,
         ) = outs
         # per-cell policy stacks sit on axis 2 after to_grid; lead with P.
         a, b, e, ns = (jnp.moveaxis(to_grid(x), 2, 0) for x in (a, b, e, ns))
+        if dlv is not None:
+            dlv = jnp.moveaxis(to_grid(dlv), 2, 0)
         history = (
             {k: jnp.moveaxis(v, 2, 0) for k, v in to_grid(history).items()}
             if history
@@ -562,6 +623,7 @@ class GridEngine:
             a, b, e, ns,
             to_grid(h2), to_grid(budget_inc), to_grid(budget_total),
             to_grid(radio_seq), history, to_grid(metrics),
+            dlv, to_grid(failure_seq),
         )
 
     # -- segmented (checkpointed) execution ----------------------------------
@@ -588,12 +650,12 @@ class GridEngine:
             return self._seg_cache[n]
         cfg = self.cfg
 
-        def seg(carries, h2, etas, total, inc, radio_seq, keys, t0):
+        def seg(carries, h2, etas, total, inc, radio_seq, failure_seq, keys, t0):
             new_carries, traces = [], []
             for i, (pol, pp) in enumerate(self._resolved):
                 def cell(
                     carry, h2_cell, eta_s, total_cell, inc_cell, radio_cell,
-                    key_cell, pol=pol, pp=pp,
+                    failure_cell, key_cell, pol=pol, pp=pp,
                 ):
                     params = resolve_params(
                         pol,
@@ -605,15 +667,17 @@ class GridEngine:
                         scenario_budgets=total_cell,
                         scenario_budget_seq=inc_cell,
                         scenario_radio_seq=radio_cell,
+                        scenario_failure_seq=failure_cell,
                     )
                     return pol.seg_fn(cfg, carry, h2_cell, params, t0, n)
 
                 with trace_span(f"grid/policy/{pol.name}"):
                     over_seeds = jax.vmap(
-                        cell, in_axes=(0, 0, None, 0, 0, 0, 0)
+                        cell, in_axes=(0, 0, None, 0, 0, 0, 0, 0)
                     )
                     c2, tr = jax.vmap(over_seeds)(
-                        carries[i], h2, etas, total, inc, radio_seq, keys
+                        carries[i], h2, etas, total, inc, radio_seq,
+                        failure_seq, keys
                     )
                 new_carries.append(c2)
                 traces.append(tr)
@@ -645,9 +709,9 @@ class GridEngine:
             )
         every = ckpt_spec.every_rounds if ckpt_spec is not None else T
 
-        h2, budget_inc, budget_total, radio_seq = self._sample_fn(
+        h2, budget_inc, budget_total, radio_seq, failure_seq = self._sample_fn(
             seed_arr, self._chan_params, self._budget_params,
-            self._radio_params, self._env_salts,
+            self._radio_params, self._env_salts, self._failure_params,
         )
         keys = self._keys_fn(seed_arr, base_key)
         etas = self._etas
@@ -656,6 +720,13 @@ class GridEngine:
             return jax.tree_util.tree_map(
                 lambda x: x[:, :, :r], tree
             )
+
+        def fsl(fs, r):
+            # Only the (S, N, T, K) delivered mask has a round axis; the
+            # (S, N, K) declared rates must pass through unsliced.
+            if fs is None:
+                return None
+            return fs._replace(delivered=fs.delivered[:, :, :r])
 
         carries = self._init_carries(S, N)
         trace_parts = []
@@ -678,11 +749,11 @@ class GridEngine:
                     f"resume_from: no committed snapshots in {directory!r}"
                 )
 
-            def prefix_like(h2p, incp, radp):
+            def prefix_like(h2p, incp, radp, flp):
                 c0 = self._init_carries(S, N)
                 seg = self._segment_fn(r)
                 c1, tr = seg(
-                    c0, h2p, etas, budget_total, incp, radp, keys,
+                    c0, h2p, etas, budget_total, incp, radp, flp, keys,
                     jnp.asarray(0, jnp.int32),
                 )
                 return {"carries": c1, "traces": tr}
@@ -690,6 +761,7 @@ class GridEngine:
             like = jax.eval_shape(
                 prefix_like, sl(h2, r), sl(budget_inc, r),
                 jax.tree_util.tree_map(lambda x: x[:, :, :r], radio_seq),
+                fsl(failure_seq, r),
             )
             snap, _ = ckpt_io.load_snapshot(directory, like, r)
             carries = snap["carries"]
@@ -699,8 +771,8 @@ class GridEngine:
         for t0, t1 in ckpt_io.segment_bounds(T, every, start):
             seg = self._segment_fn(t1 - t0)
             carries, traces_s = seg(
-                carries, h2, etas, budget_total, budget_inc, radio_seq, keys,
-                jnp.asarray(t0, jnp.int32),
+                carries, h2, etas, budget_total, budget_inc, radio_seq,
+                failure_seq, keys, jnp.asarray(t0, jnp.int32),
             )
             trace_parts.append(traces_s)
             if ckpt_spec is not None:
@@ -743,10 +815,11 @@ class GridEngine:
         b = jnp.stack([t.b for t in traces])
         e = jnp.stack([t.e for t in traces])
         ns = jnp.stack([t.num_selected for t in traces])
+        dlv = self._stack_delivered(traces)
         metrics = tuple(t.metrics for t in traces)
         return (
             a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
-            metrics,
+            metrics, dlv, failure_seq,
         )
 
     # -- public API ----------------------------------------------------------
@@ -802,17 +875,17 @@ class GridEngine:
         ):
             (
                 a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
-                metrics,
+                metrics, dlv, failure_seq,
             ) = self._run_segmented(seed_arr, base_key, learn_keys, resume_from)
         elif self._shard:
             (
                 a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
-                metrics,
+                metrics, dlv, failure_seq,
             ) = self._run_sharded(seed_arr, base_key, learn_keys)
         else:
             (
                 a, b, e, ns, h2, budget_inc, budget_total, radio_seq, history,
-                metrics,
+                metrics, dlv, failure_seq,
             ) = self._fn(
                 seed_arr,
                 self._chan_params,
@@ -822,6 +895,7 @@ class GridEngine:
                 self._etas,
                 base_key,
                 learn_keys,
+                self._failure_params,
             )
         if all(m is None for m in metrics):
             metrics = None  # metrics-off grid: keep the legacy None field
@@ -840,6 +914,8 @@ class GridEngine:
             budget_total=budget_total,
             radio_seq=radio_seq,
             metrics=metrics,
+            delivered=dlv,
+            failure_seq=failure_seq,
         )
 
 

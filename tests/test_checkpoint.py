@@ -121,6 +121,83 @@ def test_save_is_atomic_via_replace(tmp_path, monkeypatch):
 
 
 # --------------------------------------------------------------------------
+# write hardening: transient-OSError retry; actionable resume errors
+# --------------------------------------------------------------------------
+def test_save_retries_transient_oserror(tmp_path, monkeypatch):
+    """Two spurious EIOs on the rename (NFS-style) are retried and the
+    snapshot still commits, bit-exact."""
+    import repro.checkpoint.ckpt as ck
+
+    real_replace = os.replace
+    failures = {"left": 2}
+    sleeps = []
+
+    def flaky_replace(src, dst):
+        if failures["left"] > 0:
+            failures["left"] -= 1
+            raise OSError("flaky filesystem: EIO")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(ck.os, "replace", flaky_replace)
+    monkeypatch.setattr(ck.time, "sleep", sleeps.append)
+    tree = {"x": jnp.arange(5, dtype=jnp.float32)}
+    save_pytree(str(tmp_path), tree, step=1, backoff_s=0.01)
+    assert failures["left"] == 0
+    assert sleeps == [0.01, 0.02]  # exponential backoff, one per retry
+    restored, step = load_pytree(str(tmp_path), tree)
+    assert step == 1
+    _trees_bitwise_equal(tree, restored)
+
+
+def test_save_gives_up_after_bounded_retries(tmp_path, monkeypatch):
+    """A persistently broken filesystem fails loudly after the bounded
+    retries, with the path in the message and no committed step."""
+    import repro.checkpoint.ckpt as ck
+
+    attempts = []
+
+    def broken_replace(src, dst):
+        attempts.append(src)
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(ck.os, "replace", broken_replace)
+    monkeypatch.setattr(ck.time, "sleep", lambda s: None)
+    with pytest.raises(OSError, match=r"save_pytree: writing .* failed 3"):
+        save_pytree(
+            str(tmp_path), {"x": jnp.zeros(2)}, step=1,
+            retries=2, backoff_s=0.0,
+        )
+    assert len(attempts) == 3  # initial try + 2 retries
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_load_missing_directory_is_actionable(tmp_path):
+    with pytest.raises(FileNotFoundError, match="directory does not exist"):
+        load_pytree(str(tmp_path / "never_written"), {"x": jnp.zeros(2)})
+
+
+def test_load_empty_directory_is_actionable(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no committed step"):
+        load_pytree(str(tmp_path), {"x": jnp.zeros(2)})
+
+
+def test_load_missing_explicit_step_reports_latest(tmp_path):
+    save_pytree(str(tmp_path), {"x": jnp.zeros(2)}, step=3)
+    with pytest.raises(FileNotFoundError, match="latest committed step .* 3"):
+        load_pytree(str(tmp_path), {"x": jnp.zeros(2)}, step=7)
+
+
+def test_load_corrupt_snapshot_is_actionable(tmp_path):
+    """A torn/corrupt npz (e.g. truncated by a dying disk AFTER the
+    rename) raises a clear error naming the file, not a raw zipfile
+    traceback."""
+    save_pytree(str(tmp_path), {"x": jnp.zeros(2)}, step=2)
+    (tmp_path / "step_00000002.npz").write_bytes(b"PK\x03\x04 torn!")
+    with pytest.raises(ValueError, match="corrupt or torn"):
+        load_pytree(str(tmp_path), {"x": jnp.zeros(2)})
+
+
+# --------------------------------------------------------------------------
 # CheckpointSpec / segment_bounds / snapshot events
 # --------------------------------------------------------------------------
 def test_checkpoint_spec_validation():

@@ -1,0 +1,356 @@
+"""Failure processes and failure-aware OCEAN: acceptance criteria.
+
+* registry fail-fast errors are uniform across ALL repro.env registries
+  (channel / budget / radio / failure);
+* sampled reliability masks are {0,1}-valued, ``none`` is an exact
+  all-ones mask, and adding a failure process never perturbs the
+  channel/budget/radio draws of an existing scenario (dedicated key
+  stream);
+* ``failure_mode='plain'`` keeps OCEAN's decisions bitwise identical to
+  the failure-free run — failures only gate delivery — and selected-but-
+  failed clients still pay transmission energy (pessimistic accounting);
+* the fused trajectory kernel reproduces the scan path bit for bit for
+  every failure process x OCEAN variant;
+* without an active failure process everything stays byte-stable:
+  serialized scenario payloads carry no failure keys and traces/grids
+  report ``delivered is None``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnvSpec, OceanConfig, PolicyParams, RadioParams, Scenario
+from repro.core.ocean import FAILURE_MODES, init_state, ocean_round, simulate
+from repro.core.patterns import eta_schedule
+from repro.core.policy import run_policy
+from repro.env import (
+    available_budget_processes,
+    available_channel_processes,
+    available_failure_processes,
+    available_radio_processes,
+    get_budget_process,
+    get_channel_process,
+    get_failure_process,
+    get_radio_process,
+)
+from repro.sim import run_grid
+
+T, K = 40, 6
+RADIO = RadioParams()
+
+FAILURE_CELLS = {
+    "none": {},
+    "iid_dropout": {"p_deliver": 0.8},
+    "markov_availability": {"p_fail": 0.2, "p_recover": 0.5},
+    "straggler_slowdown": {"sigma": 0.6, "compute_frac": 0.8},
+}
+
+
+def _scenario(process, params, **overrides):
+    base = dict(num_clients=K, num_rounds=T, frame_len=16)
+    base.update(overrides)
+    return Scenario(
+        name=process,
+        env=EnvSpec(failure=process, failure_params=params),
+        **base,
+    )
+
+
+def _failure_scenarios(**overrides):
+    return [
+        _scenario(p, params, **overrides)
+        for p, params in FAILURE_CELLS.items()
+    ]
+
+
+# --------------------------------------------------------------------------
+# registries: uniform fail-fast errors (all four env registries)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "kind,getter,available",
+    [
+        ("channel", get_channel_process, available_channel_processes),
+        ("budget", get_budget_process, available_budget_processes),
+        ("radio", get_radio_process, available_radio_processes),
+        ("failure", get_failure_process, available_failure_processes),
+    ],
+    ids=("channel", "budget", "radio", "failure"),
+)
+def test_unknown_process_error_uniform_across_registries(
+    kind, getter, available
+):
+    with pytest.raises(ValueError) as ei:
+        getter("definitely_not_registered")
+    msg = str(ei.value)
+    assert msg.startswith(
+        f"unknown {kind} process 'definitely_not_registered'; available: "
+    )
+    for name in available():
+        assert name in msg
+
+
+def test_failure_registry_covers_expected_processes():
+    assert set(FAILURE_CELLS) == set(available_failure_processes())
+
+
+def test_unknown_failure_process_rejected_at_spec_time():
+    with pytest.raises(ValueError, match="unknown failure process"):
+        Scenario(env=EnvSpec(failure="nope"))
+
+
+def test_unknown_failure_mode_rejected_at_spec_time():
+    with pytest.raises(ValueError, match="unknown failure mode"):
+        Scenario(failure_mode="nope")
+    assert set(FAILURE_MODES) == {"plain", "overprovision", "reallocate"}
+
+
+# --------------------------------------------------------------------------
+# sampling invariants
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("process", sorted(FAILURE_CELLS))
+def test_mask_is_binary_and_correctly_shaped(process):
+    tf = _scenario(process, FAILURE_CELLS[process]).sample_failure(0)
+    mask = np.asarray(tf.delivered)
+    assert mask.shape == (T, K)
+    assert np.isin(mask, (0.0, 1.0)).all()
+    rate = np.asarray(tf.rate)
+    assert rate.shape == (K,)
+    assert np.all((rate >= 0.0) & (rate <= 1.0))
+
+
+def test_none_process_is_exact_all_ones():
+    for seed in range(5):
+        tf = _scenario("none", {}).sample_failure(seed)
+        np.testing.assert_array_equal(
+            np.asarray(tf.delivered), np.ones((T, K), np.float32)
+        )
+        np.testing.assert_array_equal(np.asarray(tf.rate), np.ones(K, np.float32))
+
+
+@pytest.mark.parametrize(
+    "process", sorted(set(FAILURE_CELLS) - {"none"})
+)
+def test_realized_delivery_rate_matches_declared(process):
+    sc = _scenario(process, FAILURE_CELLS[process], num_rounds=400)
+    tf = sc.sample_failure(0)
+    realized = np.asarray(tf.delivered).mean(axis=0)   # (K,)
+    declared = np.asarray(tf.rate)
+    assert np.max(np.abs(realized - declared)) <= 0.12, (realized, declared)
+
+
+def test_failure_stream_never_perturbs_other_draws():
+    clean = Scenario(num_clients=K, num_rounds=T, env=EnvSpec())
+    faulty = _scenario("iid_dropout", {"p_deliver": 0.5})
+    np.testing.assert_array_equal(
+        np.asarray(clean.sample_channel(3)), np.asarray(faulty.sample_channel(3))
+    )
+    for c, f in zip(clean.sample_budget(3), faulty.sample_budget(3)):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(f))
+    for c, f in zip(
+        jax.tree_util.tree_leaves(clean.sample_radio(3)),
+        jax.tree_util.tree_leaves(faulty.sample_radio(3)),
+    ):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(f))
+
+
+# --------------------------------------------------------------------------
+# round semantics: plain gates delivery only; variants stay feasible
+# --------------------------------------------------------------------------
+def _sim_inputs(seed=0):
+    h2 = jax.random.exponential(jax.random.PRNGKey(seed), (T, K)) * 2.5e-4
+    return h2, eta_schedule("uniform", T)
+
+
+def test_plain_mode_decisions_bitwise_unchanged_by_failures():
+    cfg = OceanConfig(
+        num_clients=K, num_rounds=T, radio=RADIO, frame_len=16
+    )
+    h2, eta = _sim_inputs()
+    tf = _scenario("iid_dropout", {"p_deliver": 0.6}).sample_failure(0)
+    ref_state, ref = simulate(cfg, h2, eta, 1e-5)
+    got_state, got = simulate(cfg, h2, eta, 1e-5, failure_seq=tf)
+    for f in ("a", "b", "e", "q", "num_selected"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)), err_msg=f
+        )
+    # pessimistic accounting: failed clients still charged, queues equal
+    np.testing.assert_array_equal(
+        np.asarray(ref_state.q), np.asarray(got_state.q)
+    )
+    assert ref.delivered is None
+    dlv = np.asarray(got.delivered)
+    np.testing.assert_array_equal(
+        dlv, np.asarray(got.a) & (np.asarray(tf.delivered) > 0)
+    )
+
+
+@pytest.mark.parametrize("mode", ("overprovision", "reallocate"))
+def test_variants_deliver_submasks_and_finite_energy(mode):
+    cfg = OceanConfig(
+        num_clients=K, num_rounds=T, radio=RADIO, frame_len=16,
+        failure_mode=mode,
+    )
+    h2, eta = _sim_inputs()
+    tf = _scenario("markov_availability", FAILURE_CELLS["markov_availability"]
+                   ).sample_failure(0)
+    _, decs = simulate(cfg, h2, eta, 1e-5, failure_seq=tf)
+    a = np.asarray(decs.a)
+    dlv = np.asarray(decs.delivered)
+    assert np.all(dlv <= a)
+    assert np.all(dlv <= (np.asarray(tf.delivered) > 0))
+    e = np.asarray(decs.e)
+    assert np.all(np.isfinite(e)) and np.all(e >= 0)
+    ral = np.asarray(decs.realloc)
+    assert ral.shape == (T,)
+    if mode == "overprovision":
+        assert np.all(ral == 0)
+
+
+def test_overprovision_extends_prefix_from_equal_state():
+    """In-round dominance: from the SAME queue state, overprovisioning
+    never selects fewer clients than plain (it extends the rho-ascending
+    prefix until expected deliveries reach the plain cardinality)."""
+    base = OceanConfig(num_clients=K, num_rounds=T, radio=RADIO, frame_len=16)
+    state = init_state(base)
+    rate = jnp.full((K,), 0.6, jnp.float32)
+    ones = jnp.ones((K,), jnp.float32)
+    for seed in range(5):
+        h2 = jax.random.exponential(jax.random.PRNGKey(seed), (K,)) * 2.5e-4
+        _, plain = ocean_round(
+            state, h2, jnp.float32(1e-5), jnp.float32(1.0), base,
+            delivered=ones, fail_rate=rate,
+        )
+        _, over = ocean_round(
+            state, h2, jnp.float32(1e-5), jnp.float32(1.0),
+            dataclasses.replace(base, failure_mode="overprovision"),
+            delivered=ones, fail_rate=rate,
+        )
+        assert int(over.num_selected) >= int(plain.num_selected)
+
+
+def test_overprovision_requires_declared_rates():
+    cfg = OceanConfig(
+        num_clients=K, num_rounds=1, radio=RADIO,
+        failure_mode="overprovision",
+    )
+    state = init_state(cfg)
+    h2 = jax.random.exponential(jax.random.PRNGKey(0), (K,)) * 2.5e-4
+    with pytest.raises(ValueError, match="declared delivery rates"):
+        ocean_round(
+            state, h2, jnp.float32(1e-5), jnp.float32(1.0), cfg,
+            delivered=jnp.ones((K,), jnp.float32), fail_rate=None,
+        )
+
+
+# --------------------------------------------------------------------------
+# scan vs fused bit-identity, per process x variant (acceptance criterion)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("variant", ("ocean-u", "ocean-over", "ocean-realloc"))
+def test_fused_bit_identical_per_process_and_variant(variant):
+    scenarios = _failure_scenarios()
+    policies = [(variant, PolicyParams(v=1e-5)), ("smo", PolicyParams())]
+    seeds = (0, 7)
+    ref = run_grid(scenarios, policies, seeds=seeds)
+    got = run_grid(scenarios, policies, seeds=seeds, traj="fused")
+    for f in ("a", "b", "e", "num_selected", "delivered"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)), err_msg=f
+        )
+    for c, g in zip(
+        jax.tree_util.tree_leaves(ref.failure_seq),
+        jax.tree_util.tree_leaves(got.failure_seq),
+    ):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(g))
+
+
+# --------------------------------------------------------------------------
+# byte-stability without failures
+# --------------------------------------------------------------------------
+def test_serialized_payloads_omit_failure_fields_by_default():
+    sc = Scenario(num_clients=K, num_rounds=T)
+    assert "failure" not in sc.to_json()
+    assert "failure" not in EnvSpec().to_dict()
+    rt = Scenario.from_json(sc.to_json())
+    assert rt == sc
+    faulty = _scenario("iid_dropout", {"p_deliver": 0.5})
+    faulty = dataclasses.replace(faulty, failure_mode="reallocate")
+    rt = Scenario.from_json(faulty.to_json())
+    assert rt.env.failure == "iid_dropout"
+    assert rt.failure_mode == "reallocate"
+
+
+def test_traces_and_grids_report_none_without_failures():
+    cfg = OceanConfig(num_clients=K, num_rounds=T, radio=RADIO)
+    h2, eta = _sim_inputs()
+    _, decs = simulate(cfg, h2, eta, 1e-5)
+    assert decs.delivered is None
+    tr = run_policy("ocean-u", cfg, h2, PolicyParams(v=1e-5))
+    assert tr.delivered is None
+    res = run_grid(
+        [Scenario(num_clients=K, num_rounds=T)],
+        [("ocean-u", PolicyParams(v=1e-5))],
+        seeds=(0,),
+    )
+    assert res.delivered is None
+    assert res.failure_seq is None
+    assert res.cell("ocean-u", "stationary", 0).delivered is None
+
+
+def test_delivery_collectors_record_in_graph():
+    from repro.obs.metrics import MetricsSpec
+
+    spec = MetricsSpec.of(
+        "delivery_rate:mean", "wasted_energy:mean", "reallocation_count:last"
+    )
+    cfg = OceanConfig(
+        num_clients=K, num_rounds=T, radio=RADIO, frame_len=16,
+        failure_mode="reallocate", metrics=spec,
+    )
+    h2, eta = _sim_inputs()
+    tf = _scenario("iid_dropout", {"p_deliver": 0.5}).sample_failure(0)
+    _, decs, mets = simulate(cfg, h2, eta, 1e-5, failure_seq=tf)
+    rate = float(mets["delivery_rate/mean"])
+    assert 0.0 < rate < 1.0
+    # reallocate halves failed clients' spend, so in-graph wasted energy
+    # must equal the trace-level recomputation
+    a = np.asarray(decs.a)
+    dlv = np.asarray(decs.delivered)
+    e = np.asarray(decs.e)
+    np.testing.assert_allclose(
+        float(mets["wasted_energy/mean"]) * T,
+        float((e * a * ~dlv).sum()),
+        rtol=1e-4,
+    )
+    assert float(mets["reallocation_count/last"]) == float(
+        np.asarray(decs.realloc).sum()
+    )
+    # without failures every selection delivers: the rate is exactly 1 in
+    # every round that selects anyone (0/1 in empty rounds), nothing is
+    # wasted, nothing reallocates
+    clean_cfg = dataclasses.replace(cfg, failure_mode="plain")
+    _, d0, m0 = simulate(clean_cfg, h2, eta, 1e-5)
+    nonempty = np.asarray(d0.num_selected) > 0
+    np.testing.assert_allclose(
+        float(m0["delivery_rate/mean"]), nonempty.mean(), rtol=1e-6
+    )
+    assert float(m0["wasted_energy/mean"]) == 0.0
+    assert float(m0["reallocation_count/last"]) == 0.0
+
+
+def test_variant_policies_equal_plain_without_failures():
+    """With no failure process the registered variants trace the exact
+    legacy program: same decisions bit for bit."""
+    sc = [Scenario(num_clients=K, num_rounds=T, frame_len=16)]
+    seeds = (0, 3)
+    ref = run_grid(sc, [("ocean-u", PolicyParams(v=1e-5))], seeds=seeds)
+    for variant in ("ocean-over", "ocean-realloc"):
+        got = run_grid(sc, [(variant, PolicyParams(v=1e-5))], seeds=seeds)
+        for f in ("a", "b", "e", "num_selected"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)),
+                np.asarray(getattr(got, f)),
+                err_msg=f"{variant}:{f}",
+            )

@@ -1,0 +1,121 @@
+"""Preemption drill under failures: SIGKILL mid-grid, resume, bitwise.
+
+The reliability extension must survive the same fault-injection drill as
+the clean path (tests/test_resume.py): a child process running a grid
+with an ACTIVE failure process and failure-aware policies is killed by
+SIGKILL right after its first committed snapshot; a resumed child must
+reproduce the uninterrupted child's results — including the per-round
+``delivered`` masks and the realized failure streams — bit for bit.
+This pins down two things at once: the segmented drivers slice
+``TracedFailure`` correctly across the kill boundary, and the dedicated
+failure key stream re-derives identical draws on resume.
+"""
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_CHILD_SCRIPT = """
+import os, signal, sys
+import numpy as np
+import jax
+mode, ckdir, outpath = sys.argv[1], sys.argv[2], sys.argv[3]
+from repro.checkpoint.trajectory import CheckpointSpec
+from repro.core import EnvSpec, PolicyParams, Scenario
+from repro.sim import run_grid
+T, K = 25, 6
+base = dict(num_clients=K, num_rounds=T, frame_len=10)
+scenarios = [
+    Scenario(name="clean", **base),
+    Scenario(
+        name="dropout",
+        env=EnvSpec(failure="iid_dropout", failure_params={"p_deliver": 0.7}),
+        **base,
+    ),
+    Scenario(
+        name="bursty",
+        env=EnvSpec(
+            failure="markov_availability",
+            failure_params={"p_fail": 0.2, "p_recover": 0.5},
+        ),
+        **base,
+    ),
+]
+policies = [
+    ("ocean-u", PolicyParams(v=1e-5)),
+    ("ocean-over", PolicyParams(v=1e-5)),
+    ("ocean-realloc", PolicyParams(v=1e-5)),
+    ("smo", PolicyParams()),
+]
+ck = CheckpointSpec(directory=ckdir, every_rounds=7)
+if mode == "kill":
+    # commit the first snapshot, then die with no cleanup whatsoever
+    from repro.checkpoint import trajectory
+    orig = trajectory.save_snapshot
+    def killing_save(spec, snapshot, round_idx):
+        path = orig(spec, snapshot, round_idx)
+        os.kill(os.getpid(), signal.SIGKILL)
+    trajectory.save_snapshot = killing_save
+res = run_grid(
+    scenarios, policies, seeds=(0, 7), checkpoint=ck,
+    resume_from=(mode == "resume"),
+)
+leaves = jax.tree_util.tree_leaves({
+    "a": res.a, "b": res.b, "e": res.e, "num_selected": res.num_selected,
+    "delivered": res.delivered, "failure_seq": res.failure_seq,
+})
+assert res.delivered is not None and res.failure_seq is not None
+np.savez(outpath, **{str(i): np.asarray(x) for i, x in enumerate(leaves)})
+print("DONE", mode)
+"""
+
+
+def _run_child(mode, ckdir, outpath, tmp_path):
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = (
+        os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    return subprocess.run(
+        [sys.executable, "-c", _CHILD_SCRIPT, mode, ckdir, outpath],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+        cwd=str(tmp_path),
+    )
+
+
+@pytest.mark.slow
+def test_sigkill_mid_failure_grid_resume_bit_identical(tmp_path):
+    """SIGKILL after the first committed snapshot of a failure grid; the
+    resumed child must reproduce delivered masks and failure streams
+    bitwise."""
+    ckdir = str(tmp_path / "snaps")
+    ref_out = str(tmp_path / "ref.npz")
+    res_out = str(tmp_path / "res.npz")
+
+    full = _run_child("full", str(tmp_path / "snaps_full"), ref_out, tmp_path)
+    assert full.returncode == 0, full.stderr[-2000:]
+    assert "DONE full" in full.stdout
+
+    killed = _run_child("kill", ckdir, str(tmp_path / "never.npz"), tmp_path)
+    assert killed.returncode == -signal.SIGKILL, (
+        killed.returncode, killed.stderr[-2000:]
+    )
+    assert sorted(os.listdir(ckdir)) == ["step_00000007.npz"]
+    assert not os.path.exists(str(tmp_path / "never.npz"))
+
+    resumed = _run_child("resume", ckdir, res_out, tmp_path)
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    assert "DONE resume" in resumed.stdout
+
+    with np.load(ref_out) as ref, np.load(res_out) as res:
+        assert sorted(ref.files) == sorted(res.files)
+        for k in ref.files:
+            assert ref[k].dtype == res[k].dtype, k
+            assert ref[k].tobytes() == res[k].tobytes(), f"leaf {k} differs"

@@ -1,0 +1,88 @@
+"""Property tests for failure processes (hypothesis, dev extra).
+
+Mirrors test_env_properties.py: skipped unless the ``hypothesis`` dev
+extra is installed (CI runs it; the pinned runtime image may not).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core import EnvSpec, Scenario  # noqa: E402
+from repro.env import available_failure_processes  # noqa: E402
+
+T, K = 200, 5
+
+_DEFAULT_PARAMS = {
+    "none": {},
+    "iid_dropout": {"p_deliver": 0.85},
+    "markov_availability": {"p_fail": 0.15, "p_recover": 0.45},
+    "straggler_slowdown": {"sigma": 0.5, "compute_frac": 0.8},
+}
+
+
+def _scenario(name, params):
+    return Scenario(
+        num_clients=K,
+        num_rounds=T,
+        env=EnvSpec(failure=name, failure_params=params),
+    )
+
+
+def test_all_registered_processes_covered():
+    # keep _DEFAULT_PARAMS in sync with the registry
+    assert set(_DEFAULT_PARAMS) == set(available_failure_processes())
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    name=st.sampled_from(sorted(_DEFAULT_PARAMS)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mask_is_binary_for_every_process_and_seed(name, seed):
+    tf = _scenario(name, _DEFAULT_PARAMS[name]).sample_failure(seed)
+    mask = np.asarray(tf.delivered)
+    assert mask.shape == (T, K)
+    assert np.isin(mask, (0.0, 1.0)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_none_is_all_ones_bitwise(seed):
+    tf = _scenario("none", {}).sample_failure(seed)
+    assert np.asarray(tf.delivered).tobytes() == (
+        np.ones((T, K), np.float32).tobytes()
+    )
+    assert np.asarray(tf.rate).tobytes() == np.ones(K, np.float32).tobytes()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    name=st.sampled_from(sorted(set(_DEFAULT_PARAMS) - {"none"})),
+    base_seed=st.integers(0, 2**16),
+)
+def test_realized_rate_tracks_declared_stationary_rate(name, base_seed):
+    """Averaged over seeds x rounds, each client's realized delivery
+    frequency matches the process's declared stationary rate."""
+    sc = _scenario(name, _DEFAULT_PARAMS[name])
+    masks, declared = [], None
+    for s in range(base_seed, base_seed + 5):
+        tf = sc.sample_failure(s)
+        masks.append(np.asarray(tf.delivered))
+        declared = np.asarray(tf.rate)
+    realized = np.stack(masks).mean(axis=(0, 1))  # (K,) over 1000 draws
+    assert np.max(np.abs(realized - declared)) <= 0.08
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    name=st.sampled_from(sorted(_DEFAULT_PARAMS)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sampling_is_deterministic_per_seed(name, seed):
+    sc = _scenario(name, _DEFAULT_PARAMS[name])
+    a = np.asarray(sc.sample_failure(seed).delivered)
+    b = np.asarray(sc.sample_failure(seed).delivered)
+    assert a.tobytes() == b.tobytes()

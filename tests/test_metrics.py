@@ -325,6 +325,7 @@ def test_registry_table_covers_every_collector():
         "queue", "queue_next", "lyapunov", "lyapunov_drift", "dpp_penalty",
         "dpp_drift", "energy_headroom", "num_selected", "selection_count",
         "selection_gap", "solver_residual", "bmin_active", "topm_saturated",
+        "delivery_rate", "wasted_energy", "reallocation_count",
     ):
         assert expected in names
 
