@@ -10,6 +10,7 @@ Two renderers behind one CLI:
   sparklines, and client-by-round selection matrices.
 
     PYTHONPATH=src python -m benchmarks.report --manifest results/manifest.jsonl
+    PYTHONPATH=src python -m benchmarks.report --compare old.jsonl new.jsonl
     PYTHONPATH=src python -m benchmarks.report --demo -o REPORT.md
 
 Pure stdlib + numpy; the grid renderer only touches host arrays, so it
@@ -295,6 +296,123 @@ def render_manifest(records: Sequence[Dict[str, Any]]) -> str:
     return "\n".join(lines)
 
 
+def _last_run(records: Sequence[Dict[str, Any]]):
+    """(run_id, records) of the most recent run in a manifest."""
+    from repro.obs.manifest import runs_in_manifest
+
+    runs = runs_in_manifest(records)
+    if not runs:
+        raise ValueError("manifest contains no runs")
+    run_id = list(runs)[-1]
+    return run_id, runs[run_id]
+
+
+def _module_index(recs: Sequence[Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
+    return {r["name"]: r for r in recs if r.get("record") == "module"}
+
+
+def _claim_status(module: Optional[Dict[str, Any]]) -> Dict[str, bool]:
+    if module is None:
+        return {}
+    return {c.get("description", "?"): bool(c.get("ok")) for c in
+            module.get("claims", [])}
+
+
+def _baseline_status(module: Optional[Dict[str, Any]]) -> Dict[str, str]:
+    if module is None:
+        return {}
+    return {b.get("metric", "?"): b.get("status", "?") for b in
+            module.get("baseline", [])}
+
+
+def compare_manifests(
+    records_a: Sequence[Dict[str, Any]],
+    records_b: Sequence[Dict[str, Any]],
+    label_a: str = "A",
+    label_b: str = "B",
+) -> str:
+    """Markdown diff of the most recent run in two manifests.
+
+    Per-module: runtime delta, claim pass-counts, and baseline status
+    transitions; then a changed-claims table listing every claim whose
+    outcome flipped (or that only one side ran).  Modules present in
+    only one manifest are flagged instead of silently dropped.
+    """
+    id_a, recs_a = _last_run(records_a)
+    id_b, recs_b = _last_run(records_b)
+    mods_a, mods_b = _module_index(recs_a), _module_index(recs_b)
+    head_a = next((r for r in recs_a if r.get("record") == "run"), {})
+    head_b = next((r for r in recs_b if r.get("record") == "run"), {})
+
+    lines = [
+        "# Manifest comparison",
+        "",
+        f"- {label_a}: run `{id_a}` — config `{head_a.get('config_hash', '?')}`,"
+        f" jax {head_a.get('jax_version', '?')} on {head_a.get('backend', '?')}",
+        f"- {label_b}: run `{id_b}` — config `{head_b.get('config_hash', '?')}`,"
+        f" jax {head_b.get('jax_version', '?')} on {head_b.get('backend', '?')}",
+        "",
+        "## Modules",
+        "",
+        f"| module | runtime {label_a} (s) | runtime {label_b} (s) | delta "
+        f"| claims {label_a} | claims {label_b} | baseline |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for name in sorted(set(mods_a) | set(mods_b)):
+        ma, mb = mods_a.get(name), mods_b.get(name)
+        if ma is None or mb is None:
+            side = f"only in {label_b if ma is None else label_a}"
+            m = mb if ma is None else ma
+            rt = _fmt(float(m.get("runtime_s", 0.0)))
+            ca = _claim_status(ma)
+            cb = _claim_status(mb)
+            lines.append(
+                f"| {name} | {'—' if ma is None else rt} "
+                f"| {'—' if mb is None else rt} | {side} "
+                f"| {sum(ca.values())}/{len(ca)} | {sum(cb.values())}/{len(cb)}"
+                f" | — |"
+            )
+            continue
+        rt_a = float(ma.get("runtime_s", 0.0))
+        rt_b = float(mb.get("runtime_s", 0.0))
+        delta = f"{100.0 * (rt_b - rt_a) / rt_a:+.1f}%" if rt_a > 0 else "n/a"
+        ca, cb = _claim_status(ma), _claim_status(mb)
+        base_a, base_b = _baseline_status(ma), _baseline_status(mb)
+        transitions = [
+            f"{m}: {base_a.get(m, '—')}→{base_b.get(m, '—')}"
+            for m in sorted(set(base_a) | set(base_b))
+            if base_a.get(m) != base_b.get(m)
+        ]
+        base_cell = "; ".join(transitions) if transitions else (
+            "unchanged" if base_a or base_b else "n/a"
+        )
+        lines.append(
+            f"| {name} | {_fmt(rt_a)} | {_fmt(rt_b)} | {delta} "
+            f"| {sum(ca.values())}/{len(ca)} | {sum(cb.values())}/{len(cb)} "
+            f"| {base_cell} |"
+        )
+
+    changed = []
+    for name in sorted(set(mods_a) | set(mods_b)):
+        ca = _claim_status(mods_a.get(name))
+        cb = _claim_status(mods_b.get(name))
+        for desc in sorted(set(ca) | set(cb)):
+            a_s = {True: "PASS", False: "FAIL"}.get(ca.get(desc), "—")
+            b_s = {True: "PASS", False: "FAIL"}.get(cb.get(desc), "—")
+            if a_s != b_s:
+                changed.append((name, desc, a_s, b_s))
+    lines += ["", "## Changed claims", ""]
+    if changed:
+        lines += [
+            f"| module | claim | {label_a} | {label_b} |",
+            "|---|---|---|---|",
+        ]
+        lines += [f"| {n} | {d} | {a} | {b} |" for n, d, a, b in changed]
+    else:
+        lines.append("No claim outcomes changed.")
+    return "\n".join(lines) + "\n"
+
+
 def _demo_report() -> str:
     """A small metrics-on grid rendered end to end (CLI ``--demo``)."""
     from repro.core import EnvSpec, PolicyParams, Scenario
@@ -336,6 +454,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         help="render a JSONL run manifest written by benchmarks/run.py",
     )
     ap.add_argument(
+        "--compare",
+        nargs=2,
+        metavar=("A", "B"),
+        default=None,
+        help="diff the most recent runs of two JSONL manifests "
+        "(runtime deltas, claim flips, baseline transitions)",
+    )
+    ap.add_argument(
         "--demo",
         action="store_true",
         help="run a small metrics-on grid and render it (no manifest needed)",
@@ -347,14 +473,24 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         help="write the markdown here instead of stdout",
     )
     args = ap.parse_args(argv)
-    if not args.manifest and not args.demo:
-        ap.error("nothing to render: pass --manifest PATH and/or --demo")
+    if not args.manifest and not args.demo and not args.compare:
+        ap.error(
+            "nothing to render: pass --manifest PATH, --compare A B, "
+            "and/or --demo"
+        )
 
     parts = []
     if args.manifest:
         from repro.obs.manifest import read_manifest
 
         parts.append(render_manifest(read_manifest(args.manifest)))
+    if args.compare:
+        from repro.obs.manifest import read_manifest
+
+        a, b = args.compare
+        parts.append(
+            compare_manifests(read_manifest(a), read_manifest(b))
+        )
     if args.demo:
         parts.append(_demo_report())
     doc = "\n".join(parts)

@@ -63,6 +63,7 @@ from benchmarks import (
     learning_performance,
     radio_sweep,
     reliability_sweep,
+    robustness_sweep,
     roofline,
     scenarios,
     selection_patterns,
@@ -163,6 +164,7 @@ BENCHMARKS = {
     "adaptivity_env_zoo": adaptivity.run,
     "radio_sweep": radio_sweep.run,
     "reliability_sweep": reliability_sweep.run,
+    "robustness_sweep": robustness_sweep.run,
     "grid_scaling": grid_scaling.run,
     "solver_bench": solver_bench.run,
     "traj_bench": traj_bench.run,

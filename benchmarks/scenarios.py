@@ -33,7 +33,12 @@ claim re-pins"):
   *typical* client tracks the budget (median 1.03-1.06x H across
   seeds), so the claim is re-pinned to the median, the heavy tail is
   emitted as `ocean-a_energy_max`, and AMO's hard per-client cap
-  (energy <= H by construction) is claimed as the contrast.
+  (energy <= H by construction) is claimed as the contrast.  The tail
+  is defusable: ``GuardSpec(energy_cap=...)`` (``repro.guard``) demotes
+  any client whose E(b_min | h^2) exceeds cap x H_k before P4 — by
+  Lemma 1 a hard per-round bound.  ``benchmarks/robustness_sweep.py``
+  reproduces this exact cell unguarded (2.45 J) and pins the guarded
+  maximum at <= cap x H.
 """
 from __future__ import annotations
 

@@ -31,6 +31,16 @@ Scalar = Union[float, Array]
 # float32 while never overflowing.
 _EXP2_CLIP = 80.0
 
+# Shared safe-division floor for b (and other strictly-positive physical
+# quantities) before they hit a denominator.  1e-30 is far below any
+# feasible bandwidth ratio (b_min ~ 1e-2) yet large enough that
+# ``beta / SAFE_DIV_FLOOR`` stays finite in float32 after the _EXP2_CLIP
+# above, so f(0), f'(0), f''(0) and p(0) all evaluate to huge-but-finite
+# saturations instead of inf/nan inside the optimizer.  Every safe
+# division in this module (and the rho = q/h2 priority in
+# ``repro.core.selection``) uses this one constant.
+SAFE_DIV_FLOOR = 1e-30
+
 
 _RADIO_FIELDS = ("bandwidth_hz", "noise_w", "deadline_s", "model_bits", "b_min")
 
@@ -118,14 +128,14 @@ def exp2m1(x: Array) -> Array:
 def f_shannon(b: Array, beta: Scalar) -> Array:
     """f(b) = b * (2^{beta/b} - 1); Lemma 1: decreasing & convex on b>0."""
     b = jnp.asarray(b)
-    safe_b = jnp.maximum(b, 1e-30)
+    safe_b = jnp.maximum(b, SAFE_DIV_FLOOR)
     return safe_b * exp2m1(beta / safe_b)
 
 
 def f_shannon_prime(b: Array, beta: Scalar) -> Array:
     """f'(b) = 2^{beta/b} (1 - ln2 * beta/b) - 1  (Eq. 21; negative, increasing)."""
     b = jnp.asarray(b)
-    safe_b = jnp.maximum(b, 1e-30)
+    safe_b = jnp.maximum(b, SAFE_DIV_FLOOR)
     y = beta / safe_b
     p = jnp.exp2(jnp.clip(y, -_EXP2_CLIP, _EXP2_CLIP))
     return p * (1.0 - jnp.log(2.0) * y) - 1.0
@@ -134,7 +144,7 @@ def f_shannon_prime(b: Array, beta: Scalar) -> Array:
 def f_shannon_second(b: Array, beta: Scalar) -> Array:
     """f''(b) = (ln2)^2 2^{beta/b} beta^2 / b^3  (Eq. 22; positive on b>0)."""
     b = jnp.asarray(b)
-    safe_b = jnp.maximum(b, 1e-30)
+    safe_b = jnp.maximum(b, SAFE_DIV_FLOOR)
     y = beta / safe_b
     p = jnp.exp2(jnp.clip(y, -_EXP2_CLIP, _EXP2_CLIP))
     return (jnp.log(2.0) ** 2) * p * beta**2 / safe_b**3
@@ -143,7 +153,7 @@ def f_shannon_second(b: Array, beta: Scalar) -> Array:
 def transmit_power_w_per_hz(b: Array, h2: Array, radio: RadioParams) -> Array:
     """p = N0 (2^{L/(tau B b)} - 1) / h^2 — inverted from Shannon (Eq. 1)."""
     b = jnp.asarray(b)
-    return radio.noise_w * exp2m1(radio.beta / jnp.maximum(b, 1e-30)) / h2
+    return radio.noise_w * exp2m1(radio.beta / jnp.maximum(b, SAFE_DIV_FLOOR)) / h2
 
 
 def energy(

@@ -32,6 +32,7 @@ from repro.core.selection import (
 )
 from repro.core.solvers import get_solver
 from repro.checkpoint.trajectory import CheckpointSpec
+from repro.guard.spec import GuardSpec
 from repro.obs.metrics import (
     MetricsSpec,
     finalize_metrics,
@@ -127,6 +128,19 @@ class OceanConfig:
                    compiled-program static (grid must-agree); with no
                    failure process the knob is inert and every legacy
                    path stays byte-identical.
+      guard:       optional ``repro.guard.GuardSpec`` enabling guarded
+                   execution: bounded-energy admission (clients whose
+                   minimum-allocation energy exceeds
+                   ``energy_cap x H_k`` — or whose gain sits below
+                   ``gain_floor`` — are demoted out of the rho ranking
+                   for the round), an in-graph solver fallback cascade
+                   (invalid backend output falls back to the bit-stable
+                   bisect solve), and stream sanitization (non-finite
+                   channel draws quarantine the client; the queue carry
+                   never ingests a NaN).  Works identically on both
+                   trajectory backends; ``None`` (default) keeps every
+                   legacy path byte-identical.  A compiled-program
+                   static (grid must-agree).
       checkpoint:  optional ``repro.checkpoint.CheckpointSpec`` enabling
                    preemption-safe segmented execution: ``simulate``
                    splits the T rounds into ``every_rounds``-sized
@@ -151,6 +165,7 @@ class OceanConfig:
     traj: str = "scan"
     failure_mode: str = "plain"
     metrics: Optional[MetricsSpec] = None
+    guard: Optional[GuardSpec] = None
     checkpoint: Optional[CheckpointSpec] = None
 
     def __post_init__(self):
@@ -172,6 +187,11 @@ class OceanConfig:
             # eager lowering-time validation (unknown collectors raised at
             # MetricsSpec construction; the full_trace memory cap needs T/K)
             self.metrics.validate(self.num_rounds, self.num_clients)
+        if self.guard is not None and not isinstance(self.guard, GuardSpec):
+            raise TypeError(
+                f"guard must be a repro.guard.GuardSpec or None; got "
+                f"{self.guard!r}"
+            )
         if self.frame_len is not None and self.frame_len <= 0:
             raise ValueError(
                 f"frame_len={self.frame_len} must be a positive number of "
@@ -210,6 +230,10 @@ class RoundDecision(NamedTuple):
     # flatten to zero pytree leaves, keeping legacy traces byte-identical):
     delivered: Optional[Array] = None  # (K,) bool: selected AND delivered
     realloc: Optional[Array] = None    # () int32: 1 if P4 re-ran mid-round
+    # Guard extension (None without a GuardSpec — same zero-leaf trick):
+    fault_count: Optional[Array] = None  # () int32: quarantined draws
+    demoted: Optional[Array] = None      # () int32: cap/floor demotions
+    fallback: Optional[Array] = None     # () int32: 1 if bisect fallback fired
 
 
 def init_state(cfg: OceanConfig) -> OceanState:
@@ -239,7 +263,82 @@ def _masked_p4(cfg, rho, in_s0, mask, radio):
     return jnp.where(pos, b_pos, jnp.where(mask & in_s0, b0_each, 0.0))
 
 
-def _failure_adjust(cfg, q, h2, v, eta, sol, e, radio, delivered, fail_rate):
+def _guard_admission(cfg, h2, budgets, radio):
+    """The guard's pre-P4 screens: sanitize h2, build the admission mask.
+
+    Returns ``(h2, admit, fault_count, demoted)``: the (possibly
+    sanitized) channel gains, the (K,) admission mask for ``ocean_p``
+    (``None`` when the spec demotes nobody), the quarantined-draw count,
+    and the cap/floor demotion count.  Eq. (2) energy is decreasing in b
+    (Lemma 1), so ``E(b_min | h^2) <= energy_cap x H_k`` bounds every
+    feasible allocation's spend — admission is a per-round per-client
+    energy guarantee, not a heuristic.
+    """
+    g = cfg.guard
+    k = cfg.num_clients
+    ok = jnp.ones((k,), bool)
+    fault_count = jnp.zeros((), jnp.int32)
+    if g.quarantine:
+        finite = jnp.isfinite(h2) & (h2 > 0.0)
+        fault_count = jnp.sum(~finite).astype(jnp.int32)
+        # Sanitize before ANY arithmetic touches the draw: downstream
+        # math (rho, energy, the admission test itself) sees a benign
+        # placeholder gain, never the corrupt value.
+        h2 = jnp.where(finite, h2, jnp.ones_like(h2))
+        ok = finite
+    admit = ok
+    if g.gain_floor is not None:
+        admit = admit & (h2 >= jnp.asarray(g.gain_floor, h2.dtype))
+    if g.energy_cap is not None:
+        caps = jnp.asarray(g.energy_cap, jnp.float32) * (
+            cfg.budgets() if budgets is None else jnp.asarray(budgets, jnp.float32)
+        )
+        b_min = jnp.broadcast_to(jnp.asarray(radio.b_min, h2.dtype), h2.shape)
+        admit = admit & (energy(b_min, h2, radio) <= caps)
+    demoted = jnp.sum(ok & ~admit).astype(jnp.int32)
+    return h2, (admit if g.admits else None), fault_count, demoted
+
+
+def _guard_fallback(cfg, q, h2, v, eta, radio, admit, sol):
+    """Validate the backend's P3/P4 output; fall back to bisect on violation.
+
+    In-graph checks: all-finite decision, budget residual
+    ``|sum b - 1| <= residual_tol`` whenever anything is selected, and
+    ``b >= b_min`` on every selected client.  The fallback solve runs the
+    bit-stable ``bisect`` backend on the SAME guarded inputs (same
+    ranking/admission), and a per-leaf select commits whichever solution
+    survived — ``lax.cond`` would lower to the same select under the grid
+    engine's vmaps anyway.
+    """
+    b_min = jnp.asarray(radio.b_min, jnp.float32)
+    finite_ok = (
+        jnp.all(jnp.isfinite(sol.b))
+        & jnp.isfinite(sol.objective)
+        & jnp.all(jnp.isfinite(sol.rho))
+    )
+    residual = jnp.abs(jnp.sum(jnp.where(jnp.isfinite(sol.b), sol.b, 0.0)) - 1.0)
+    residual_ok = (sol.num_selected == 0) | (residual <= cfg.guard.residual_tol)
+    bmin_ok = jnp.all(
+        ~sol.a | (jnp.where(jnp.isfinite(sol.b), sol.b, 0.0) >= b_min * (1.0 - 1e-6))
+    )
+    bad = ~(finite_ok & residual_ok & bmin_ok)
+    fb = ocean_p(
+        q, h2, v, eta, radio,
+        solver="bisect",
+        ranking=cfg.ranking,
+        top_m=cfg.top_m,
+        block_k=cfg.block_k,
+        admit=admit,
+    )
+    sol = OceanPSolution(*(
+        jnp.where(bad, f, s) for s, f in zip(sol, fb)
+    ))
+    return sol, bad.astype(jnp.int32)
+
+
+def _failure_adjust(
+    cfg, q, h2, v, eta, sol, e, radio, delivered, fail_rate, admit=None
+):
     """Apply the configured failure-aware variant to one committed round.
 
     Returns ``(a, b, e, objective, num_selected, delivered, realloc)``.
@@ -278,6 +377,13 @@ def _failure_adjust(cfg, q, h2, v, eta, sol, e, radio, delivered, fail_rate):
             jnp.asarray(cfg.num_clients, jnp.int32),
             jnp.floor((1.0 + 1e-9) / b_min).astype(jnp.int32),
         )
+        if admit is not None:
+            # Guarded runs: the rho-ascending extension must never reach
+            # into demoted clients (they sit at the tail of the order
+            # behind the RHO_DEMOTED sentinel) — cap the extended prefix
+            # at the admitted-client count.  Gated on the guard being
+            # active so unguarded programs trace byte-identically.
+            n_max = jnp.minimum(n_max, jnp.sum(admit).astype(jnp.int32))
         n_ext = jnp.clip(jnp.maximum(n_exp, m_plain), 0, n_max)
         n_ext = jnp.where(m_plain > 0, n_ext, 0)
         a = inv < n_ext
@@ -331,12 +437,28 @@ def ocean_round(
     (K,) declared stationary delivery rate (``TracedFailure.rate``),
     required by ``overprovision``.  Both ``None`` (the default) keeps the
     pre-failure program byte-identical.
+
+    With ``cfg.guard`` set (``repro.guard.GuardSpec``) the round runs
+    guarded: channel draws are quarantined/sanitized and the energy
+    cap / gain floor demotes clients out of the ranking *before* P4
+    (``ocean_p(admit=...)``), the backend's output is validated in-graph
+    with a bisect fallback, and the queue update's increment is
+    sanitized — reported through the ``fault_count``/``demoted``/
+    ``fallback`` decision fields.  ``cfg.guard=None`` (default) traces
+    the legacy round byte-for-byte.
     """
     R = cfg.R
     radio = cfg.radio if radio is None else radio
     # Frame boundary reset (Alg. 1 line 3-5): at t = m*R, m >= 1.
     at_boundary = (state.t > 0) & (jnp.mod(state.t, R) == 0)
     q = jnp.where(at_boundary, jnp.zeros_like(state.q), state.q)
+
+    admit = fault_count = demoted = fb_flag = None
+    if cfg.guard is not None:
+        h2 = jnp.asarray(h2)
+        h2, admit, fault_count, demoted = _guard_admission(
+            cfg, h2, budgets, radio
+        )
 
     sol: OceanPSolution = ocean_p(
         q,
@@ -348,20 +470,33 @@ def ocean_round(
         ranking=cfg.ranking,
         top_m=cfg.top_m,
         block_k=cfg.block_k,
+        admit=admit,
     )
+    if cfg.guard is not None:
+        if cfg.guard.fallback:
+            sol, fb_flag = _guard_fallback(cfg, q, h2, v, eta, radio, admit, sol)
+        else:
+            fb_flag = jnp.zeros((), jnp.int32)
     e = energy(sol.b, h2, radio, sol.a)
 
     a, b, objective, num_selected = sol.a, sol.b, sol.objective, sol.num_selected
     dlv = ral = None
     if delivered is not None:
         a, b, e, objective, num_selected, dlv, ral = _failure_adjust(
-            cfg, q, h2, v, eta, sol, e, radio, delivered, fail_rate
+            cfg, q, h2, v, eta, sol, e, radio, delivered, fail_rate,
+            admit=admit,
         )
 
     if budget_inc is None:
         if budgets is None:
             budgets = cfg.budgets()
         budget_inc = budgets / cfg.num_rounds
+    if cfg.guard is not None and cfg.guard.quarantine:
+        # A corrupt budget draw must never reach the queue carry: a
+        # non-finite increment is treated as "no allowance this round".
+        budget_inc = jnp.where(
+            jnp.isfinite(budget_inc), budget_inc, jnp.zeros_like(budget_inc)
+        )
     q_next = jnp.maximum(q + e - budget_inc, 0.0)
 
     new_state = OceanState(
@@ -379,6 +514,9 @@ def ocean_round(
         num_selected=num_selected,
         delivered=dlv,
         realloc=ral,
+        fault_count=fault_count,
+        demoted=demoted,
+        fallback=fb_flag,
     )
     return new_state, dec
 

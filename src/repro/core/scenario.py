@@ -38,6 +38,7 @@ from repro.core.ocean import OceanConfig, check_failure_mode, check_traj_backend
 from repro.core.patterns import eta_schedule
 from repro.core.selection import DEFAULT_BLOCK_K, DEFAULT_TOP_M, check_ranking
 from repro.core.solvers import get_solver
+from repro.guard.spec import GuardSpec
 from repro.obs.metrics import MetricsSpec
 from repro.env.channel import LowerCtx, get_channel_process, sample_channel_process
 from repro.env.energy import sample_budget_process
@@ -114,6 +115,13 @@ class Scenario:
                        ``reallocate`` (re-run P4 on the survivor set at
                        the deadline midpoint).  A compiled-program
                        static; ``plain`` keeps payloads byte-stable.
+      guard:           optional ``repro.guard.GuardSpec`` enabling the
+                       guarded-execution layer (bounded-energy admission,
+                       solver fallback cascade, stream sanitization — see
+                       ``OceanConfig.guard``).  ``None`` (default) keeps
+                       every legacy path byte-identical.  Also a
+                       compiled-program static joining the grid's
+                       must-agree set.
     """
 
     name: str = "stationary"
@@ -134,6 +142,7 @@ class Scenario:
     metrics: Optional[MetricsSpec] = None
     checkpoint: Optional[CheckpointSpec] = None
     failure_mode: str = "plain"
+    guard: Optional[GuardSpec] = None
 
     def __post_init__(self):
         backend = get_solver(self.solver)  # fail fast on unknown backend names
@@ -163,6 +172,11 @@ class Scenario:
             # eager at spec time: unknown collectors raised by MetricsSpec
             # itself; the full_trace memory cap needs this scenario's (T, K)
             self.metrics.validate(self.num_rounds, self.num_clients)
+        if self.guard is not None and not isinstance(self.guard, GuardSpec):
+            raise TypeError(
+                f"guard must be a repro.guard.GuardSpec or None, got "
+                f"{type(self.guard).__name__}"
+            )
 
     # -- derived objects ----------------------------------------------------
     def ocean_config(self) -> OceanConfig:
@@ -180,6 +194,7 @@ class Scenario:
             metrics=self.metrics,
             checkpoint=self.checkpoint,
             failure_mode=self.failure_mode,
+            guard=self.guard,
         )
 
     def channel_model(self) -> ChannelModel:
@@ -333,6 +348,10 @@ class Scenario:
             d["checkpoint"] = self.checkpoint.to_dict()
         if self.failure_mode == "plain":
             d.pop("failure_mode")  # keep pre-failure payloads byte-stable
+        if self.guard is None:
+            d.pop("guard")  # keep pre-guard payloads byte-stable
+        else:
+            d["guard"] = self.guard.to_dict()
         return d
 
     @classmethod
@@ -359,6 +378,8 @@ class Scenario:
             d["metrics"] = MetricsSpec.from_dict(d["metrics"])
         if isinstance(d.get("checkpoint"), dict):
             d["checkpoint"] = CheckpointSpec.from_dict(d["checkpoint"])
+        if isinstance(d.get("guard"), dict):
+            d["guard"] = GuardSpec.from_dict(d["guard"])
         return cls(**d)
 
     def to_json(self) -> str:

@@ -23,12 +23,12 @@ makes the ``fused`` trajectory backend bit-identical to ``scan``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Union
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.energy import RadioParams, f_shannon
+from repro.core.energy import RadioParams, SAFE_DIV_FLOOR, f_shannon
 from repro.core.solvers import SolverBackend, get_solver
 from repro.obs.spans import trace_span
 
@@ -50,6 +50,16 @@ RANKINGS = ("sort", "topm")
 DEFAULT_RANKING = "sort"
 DEFAULT_TOP_M = 128
 DEFAULT_BLOCK_K = 128
+
+# Priority sentinel for clients demoted by the guard's ``admit`` mask
+# (``repro.guard``).  Huge but FINITE: it must dominate every admitted
+# client's rho (natural priorities top out around q / SAFE_DIV_FLOOR
+# ~ 1e29 only for effectively-dead channels the guard demotes anyway),
+# yet stay far enough below float32 max that ``rho * |f'(b_min)|`` in
+# the solvers' bracket seeding cannot overflow to inf — selection safety
+# itself never depends on the ordering, only on the prefix objective a
+# demoted member poisons.
+RHO_DEMOTED = 1e30
 
 
 def check_ranking(name: str) -> str:
@@ -73,7 +83,7 @@ class OceanPSolution(NamedTuple):
 
 def priorities(q: Array, h2: Array) -> Array:
     """rho_k = q_k / h_k^2 — lower is higher selection priority."""
-    return jnp.asarray(q) / jnp.maximum(jnp.asarray(h2), 1e-30)
+    return jnp.asarray(q) / jnp.maximum(jnp.asarray(h2), SAFE_DIV_FLOOR)
 
 
 def topm_extract(rho: Array, top_m: int) -> tuple[Array, Array]:
@@ -144,6 +154,7 @@ def ocean_p(
     ranking: Union[str, None] = None,
     top_m: Union[int, None] = None,
     block_k: Union[int, None] = None,
+    admit: Optional[Array] = None,
 ) -> OceanPSolution:
     """Solve P3 exactly.  All args jittable; shapes: q, h2 -> (K,).
 
@@ -160,6 +171,18 @@ def ocean_p(
     ``sort`` per solver whenever m* <= top_m, and O((top_m + G) K) per
     round instead of O(K^2 iters)).  ``block_k`` is the client-tile width
     of the ``pallas_tiled`` kernel (ignored elsewhere).
+
+    ``admit`` is an optional (K,) boolean availability mask (the guarded
+    execution layer, ``repro.guard``): demoted clients get
+    rho = ``RHO_DEMOTED`` — a huge *finite* sentinel (1e30, above any
+    admitted priority in practice) so they sort last, fall outside S0
+    (sentinel > tol), and any candidate prefix containing one carries an
+    astronomically negative objective and always loses to the
+    always-finite m = 0 candidate.  Finite by design: +inf here would
+    reach the solvers' log-space bracket seeding as ``inf * 0`` NaNs,
+    and the guarded paths must be NaN-free by construction
+    (``JAX_DEBUG_NANS`` CI gate).  ``admit=None`` (the default) traces
+    the legacy program byte-for-byte.
     """
     q = _promote_real(q)
     h2 = _promote_real(h2)
@@ -172,6 +195,10 @@ def ocean_p(
     ranking = check_ranking(DEFAULT_RANKING if ranking is None else ranking)
     backend = get_solver(solver)
     rho = priorities(q, h2)
+    if admit is not None:
+        rho = jnp.where(
+            jnp.asarray(admit, bool), rho, jnp.asarray(RHO_DEMOTED, dtype)
+        )
 
     if ranking == "topm":
         return _ocean_p_topm(

@@ -144,19 +144,46 @@ def env_key_salt(spec: EnvSpec, ctx: LowerCtx) -> int:
     return zlib.crc32(payload.encode()) & 0xFFFFFFFF
 
 
+def _screen_lowered(name: str, params) -> None:
+    """Eager finite-value screen on one lowered param pytree.
+
+    Lowering happens host-side on concrete leaves (the grid engine calls
+    it at construction), so a corrupt user-supplied parameter — an inf
+    path loss, a NaN budget rate — is caught *here*, before it ever
+    parameterizes a stream sampler.  Traced leaves pass through (they
+    are screened in-graph by the guard layer's quarantine instead).
+    """
+    import numpy as np
+
+    for leaf in jax.tree_util.tree_leaves(params):
+        if isinstance(leaf, jax.core.Tracer):
+            continue
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "f" and not np.all(np.isfinite(arr)):
+            raise ValueError(
+                f"lowered {name} params contain non-finite values "
+                f"({np.size(arr) - int(np.sum(np.isfinite(arr)))} of "
+                f"{np.size(arr)} entries); refusing to sample a stream "
+                f"from corrupt parameters"
+            )
+
+
 def lower_env(spec: EnvSpec, ctx: LowerCtx) -> LoweredEnv:
     """Resolve registry entries and lower to the unified param pytrees."""
     chan = get_channel_process(spec.channel)
     budg = get_budget_process(spec.budget)
     radio = get_radio_process(spec.radio)
     failure = get_failure_process(spec.failure)
-    return LoweredEnv(
+    lowered = LoweredEnv(
         channel=chan.lower(spec.channel_params, ctx),
         budget=budg.lower(spec.budget_params, ctx),
         radio=radio.lower(spec.radio_params, ctx),
         failure=failure.lower(spec.failure_params, ctx),
         key_salt=env_key_salt(spec, ctx),
     )
+    for name in ("channel", "budget", "radio", "failure"):
+        _screen_lowered(name, getattr(lowered, name))
+    return lowered
 
 
 def env_cell_keys(fade_key: Array, key_salt) -> Tuple[Array, Array]:

@@ -1,0 +1,34 @@
+"""Guarded OCEAN execution (``repro.guard``).
+
+The guarded-execution layer turns numerical failure modes of the OCEAN
+trajectory — heavy-tail channel draws whose Eq. (2) energy dwarfs the
+long-term budget, non-converged or corrupted solver output, non-finite
+environment streams — into *bounded, traced* degradation instead of
+silent blowups.  ``GuardSpec`` is the static configuration (it rides
+``OceanConfig.guard`` / ``Scenario.guard`` / ``GridEngine(guard=)`` and
+joins the grid's must-agree set); ``repro.guard.chaos`` is the
+fault-injection harness that exercises every defense and drives
+``benchmarks/robustness_sweep.py``.
+"""
+from repro.guard.chaos import (
+    FAULT_KINDS,
+    QUARANTINE_KINDS,
+    FaultReport,
+    inject_h2_faults,
+    register_chaos_solver,
+    starved_newton_budgets,
+)
+from repro.guard.screen import screen_streams
+from repro.guard.spec import DEFAULT_RESIDUAL_TOL, GuardSpec
+
+__all__ = [
+    "DEFAULT_RESIDUAL_TOL",
+    "FAULT_KINDS",
+    "QUARANTINE_KINDS",
+    "FaultReport",
+    "GuardSpec",
+    "inject_h2_faults",
+    "register_chaos_solver",
+    "screen_streams",
+    "starved_newton_budgets",
+]

@@ -1,0 +1,222 @@
+"""Fault-injection harness for the guarded OCEAN layer.
+
+One injector per defense of ``repro.guard.GuardSpec``:
+
+* ``inject_h2_faults`` corrupts a concrete (T, K) channel-gain sequence
+  with an *exact* number of faults per kind at distinct positions —
+  non-finite / non-positive draws (``nan``/``inf``/``zero``/``negative``)
+  exercise the quarantine screen, ``subnormal`` gains (finite, positive,
+  but with an Eq. (2) energy ~1e36 J) exercise the bounded-energy
+  admission test.  The returned ``FaultReport`` carries the ground truth
+  the traced ``fault_count`` telemetry must match exactly.
+* ``register_chaos_solver`` registers a wrapped solver backend whose P4
+  output is deterministically corrupted, exercising the fallback
+  cascade.  ``kind="objective"`` poisons the P3 objective to ``+inf`` so
+  the in-graph validation fails on *every* round (``fallback_rounds ==
+  num_rounds``, and the committed trajectory bitwise-equals the guarded
+  bisect trajectory); ``kind="budget"`` over-allocates the waterfilled
+  bandwidth by ``scale`` so the budget-residual check fires exactly on
+  rounds that select a positive-rho client.  Both corruptions are
+  finite-value or ``inf`` (never NaN), so the harness stays clean under
+  ``JAX_DEBUG_NANS=1``.
+* ``starved_newton_budgets`` temporarily collapses the newton backend's
+  safeguarded-iteration budgets so it genuinely under-converges — the
+  "real" fault the validation checks were designed for, as opposed to
+  the synthetic corruptions above.
+
+Injection happens on *concrete host arrays / Python registries* before
+``simulate`` traces anything: the compiled program under test is the
+production guarded program, not an instrumented variant.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.solvers as _solvers
+from repro.core.solvers import SolverBackend, get_solver, register_solver
+
+# Injectable fault kinds for channel-gain streams.  The quarantine screen
+# (isfinite AND > 0) catches the first four; ``subnormal`` passes it —
+# the draw is a legal float — and must instead be stopped by the
+# bounded-energy admission test (E(b_min | h^2) ~ 1/h^2 explodes).
+FAULT_KINDS: Tuple[str, ...] = ("nan", "inf", "zero", "negative", "subnormal")
+QUARANTINE_KINDS: Tuple[str, ...] = ("nan", "inf", "zero", "negative")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultReport:
+    """Ground truth of one ``inject_h2_faults`` call.
+
+    Attributes:
+      counts:    injected faults per kind (every kind present, 0 allowed).
+      positions: per kind, the exact ``(t, k)`` cells corrupted.
+    """
+
+    counts: Dict[str, int]
+    positions: Dict[str, Tuple[Tuple[int, int], ...]]
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def quarantined(self) -> int:
+        """Faults the quarantine screen must flag (== traced ``fault_count``)."""
+        return sum(self.counts[k] for k in QUARANTINE_KINDS)
+
+    def per_round_quarantined(self, num_rounds: int) -> np.ndarray:
+        """(T,) quarantined-fault count per round (for trace comparisons)."""
+        out = np.zeros((num_rounds,), np.int64)
+        for kind in QUARANTINE_KINDS:
+            for t, _ in self.positions[kind]:
+                out[t] += 1
+        return out
+
+
+def _fault_value(kind: str, dtype: np.dtype) -> float:
+    if kind == "nan":
+        return float("nan")
+    if kind == "inf":
+        return float("inf")
+    if kind == "zero":
+        return 0.0
+    if kind == "negative":
+        return -1.0
+    if kind == "subnormal":
+        # tiny = smallest *normal* float of the dtype; 1e-4 of it is a
+        # subnormal for both float32 and float64 — finite, positive, and
+        # with a b_min-allocation energy ~36 orders of magnitude past any
+        # budget, so only the admission test can stop it.
+        return float(np.finfo(dtype).tiny) * 1e-4
+    raise ValueError(f"unknown fault kind {kind!r}; known: {FAULT_KINDS}")
+
+
+def inject_h2_faults(
+    h2_seq,
+    seed: int,
+    *,
+    num_nan: int = 0,
+    num_inf: int = 0,
+    num_zero: int = 0,
+    num_negative: int = 0,
+    num_subnormal: int = 0,
+) -> Tuple[np.ndarray, FaultReport]:
+    """Corrupt a concrete (T, K) gain sequence with exact fault counts.
+
+    Positions are drawn without replacement from a ``numpy`` Generator
+    seeded with ``seed`` — deterministic, and disjoint across kinds, so
+    the report's counts are exact (no fault overwrites another).
+    Returns ``(corrupted copy, FaultReport)``; the input is not mutated.
+    """
+    h2 = np.array(h2_seq, copy=True)
+    if h2.ndim != 2:
+        raise ValueError(f"h2_seq must be a (T, K) array, got shape {h2.shape}")
+    want = {
+        "nan": int(num_nan),
+        "inf": int(num_inf),
+        "zero": int(num_zero),
+        "negative": int(num_negative),
+        "subnormal": int(num_subnormal),
+    }
+    if any(n < 0 for n in want.values()):
+        raise ValueError(f"fault counts must be >= 0, got {want}")
+    total = sum(want.values())
+    if total > h2.size:
+        raise ValueError(
+            f"cannot place {total} faults in a {h2.shape} sequence "
+            f"({h2.size} cells)"
+        )
+    rng = np.random.default_rng(seed)
+    flat = rng.choice(h2.size, size=total, replace=False)
+    kinds = [kind for kind in FAULT_KINDS for _ in range(want[kind])]
+    positions: Dict[str, list] = {kind: [] for kind in FAULT_KINDS}
+    for idx, kind in zip(flat, kinds):
+        t, k = divmod(int(idx), h2.shape[1])
+        h2[t, k] = _fault_value(kind, h2.dtype)
+        positions[kind].append((t, k))
+    report = FaultReport(
+        counts=want,
+        positions={kind: tuple(v) for kind, v in positions.items()},
+    )
+    return h2, report
+
+
+# -- solver corruption -------------------------------------------------------
+
+CHAOS_KINDS: Tuple[str, ...] = ("objective", "budget")
+
+
+def register_chaos_solver(
+    base: Union[str, SolverBackend] = "bisect",
+    name: Optional[str] = None,
+    *,
+    kind: str = "objective",
+    scale: float = 1.5,
+) -> SolverBackend:
+    """Register a solver backend with deterministically corrupted output.
+
+    ``kind="objective"``: the P3 objective becomes ``+inf`` — the
+    fallback's all-finite validation fails on every round, so a guarded
+    run must report ``fallback_rounds == num_rounds`` and commit the
+    bisect solution each time.  ``kind="budget"``: the winning prefix's
+    waterfilled bandwidth is multiplied by ``scale``, violating the
+    ``|sum b - 1| <= residual_tol`` check exactly on rounds whose argmax
+    selects a positive-rho client (``m* > 0``; the S0-only solution
+    carries no waterfilled mass to corrupt).
+
+    The wrapper preserves the base backend's selection (``m*``, the
+    membership mask) and its ``waterfill``/``topm`` capabilities, so it
+    is registry-compatible anywhere the base was (including the
+    ``ranking="topm"`` requirement of sort-free backends).
+    """
+    if kind not in CHAOS_KINDS:
+        raise ValueError(f"unknown chaos kind {kind!r}; known: {CHAOS_KINDS}")
+    backend = get_solver(base)
+    if name is None:
+        name = f"chaos_{kind}_{backend.name}"
+
+    def prefixes(*args, **kwargs):
+        sol = backend.prefixes(*args, **kwargs)
+        if kind == "objective":
+            return sol._replace(w_star=sol.w_star + jnp.inf)
+        return sol._replace(b_pos_sorted=sol.b_pos_sorted * scale)
+
+    topm = None
+    if backend.topm is not None:
+
+        def topm(*args, **kwargs):
+            m_star, w_star, b_pos, sel_pos = backend.topm(*args, **kwargs)
+            if kind == "objective":
+                return m_star, w_star + jnp.inf, b_pos, sel_pos
+            return m_star, w_star, b_pos * scale, sel_pos
+
+    return register_solver(name, prefixes, backend.waterfill, topm)
+
+
+@contextlib.contextmanager
+def starved_newton_budgets(outer: int = 1, inner: int = 1, grid: int = 2):
+    """Temporarily collapse the newton backend's iteration budgets.
+
+    Every (dtype, K) bucket resolves to ``(outer, inner, grid)`` inside
+    the context — far below convergence, so newton's waterfilling level
+    is genuinely wrong and the guard's in-graph validation (not a
+    synthetic corruption) must catch the damage.
+
+    Budgets are baked into programs at *trace* time: callers must force
+    a fresh trace inside the context (``jax.clear_caches()``, or a
+    config not yet compiled) or the cached converged program runs
+    instead.
+    """
+    saved = _solvers._NEWTON_BUDGET_TABLE
+    _solvers._NEWTON_BUDGET_TABLE = (
+        (None, (int(outer), int(inner), int(grid)), (int(outer), int(inner), int(grid))),
+    )
+    try:
+        yield
+    finally:
+        _solvers._NEWTON_BUDGET_TABLE = saved

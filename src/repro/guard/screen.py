@@ -1,0 +1,92 @@
+"""Eager (host-side) stream screens of the guarded-execution layer.
+
+The guard defends streams twice, at different trust boundaries:
+
+* **Eagerly at lowering** — ``repro.env.spec.lower_env`` refuses
+  non-finite process *parameters* before they seed a sampler, and
+  ``screen_streams`` below validates concrete user-supplied *sequences*
+  (an externally measured channel trace, a replayed budget log) before
+  they enter a compiled program.  Host-side numpy, zero in-graph cost.
+* **In-graph at run time** — draws produced inside the program (the
+  grid engine samples its streams under jit) can only be screened by
+  traced ops: ``GuardSpec.quarantine`` masks non-finite/non-positive
+  gains out of the round and sanitizes the budget increment (see
+  ``repro.core.ocean``).
+
+``screen_streams`` is deliberately *not* called by ``simulate`` itself:
+the chaos harness (``repro.guard.chaos``) feeds corrupted sequences
+straight into guarded programs to prove the in-graph quarantine works,
+and an unconditional eager screen would reject them at the door.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.env.radio import TracedRadio
+
+
+def _violations(x, *, positive: bool) -> Optional[int]:
+    """Count bad entries of one concrete leaf; None for traced leaves."""
+    if isinstance(x, jax.core.Tracer):
+        return None
+    arr = np.asarray(x)
+    if arr.dtype.kind != "f":
+        return 0
+    ok = np.isfinite(arr)
+    if positive:
+        ok = ok & (arr > 0.0)
+    return int(arr.size - np.sum(ok))
+
+
+def screen_streams(
+    *,
+    h2_seq=None,
+    budget_seq=None,
+    radio_seq: Optional[TracedRadio] = None,
+    strict: bool = True,
+) -> Dict[str, int]:
+    """Validate concrete per-round streams before they enter a program.
+
+    Checks: channel gains finite and positive, budget increments finite
+    and non-negative, every radio-sequence leaf finite and positive.
+    Returns the per-stream violation counts; with ``strict=True``
+    (default) raises ``ValueError`` naming every offending stream
+    instead.  Traced inputs are skipped (screen those in-graph via
+    ``GuardSpec.quarantine``).
+    """
+    counts: Dict[str, int] = {}
+    if h2_seq is not None:
+        n = _violations(h2_seq, positive=True)
+        if n is not None:
+            counts["h2_seq"] = n
+    if budget_seq is not None:
+        n = _violations(budget_seq, positive=False)
+        if n is None:
+            pass
+        else:
+            arr = np.asarray(budget_seq)
+            neg = int(np.sum(np.isfinite(arr) & (arr < 0.0)))
+            counts["budget_seq"] = n + neg
+    if radio_seq is not None:
+        total = 0
+        traced = False
+        for leaf in radio_seq:
+            n = _violations(leaf, positive=True)
+            if n is None:
+                traced = True
+            else:
+                total += n
+        if not traced:
+            counts["radio_seq"] = total
+    bad = {k: v for k, v in counts.items() if v}
+    if strict and bad:
+        raise ValueError(
+            f"stream screen failed: non-finite/out-of-range entries in "
+            f"{', '.join(f'{k} ({v})' for k, v in bad.items())}; sanitize "
+            f"the input or run with GuardSpec(quarantine=True) to contain "
+            f"it in-graph"
+        )
+    return counts

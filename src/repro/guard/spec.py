@@ -1,0 +1,133 @@
+"""Static guarded-execution spec for OCEAN trajectories (``GuardSpec``).
+
+PR 8 root-caused the heavy-tail hole in Eq. (2): energy is unbounded as
+h^2 -> 0 and the drift-plus-penalty objective prices energy only through
+the virtual queue, so a zero-queue client is selected at *any* cost (the
+pinned seed21/scenario2 case: h^2 = 1.2e-6 => 2.45 J, ~16x the total
+per-client budget H = 0.15 J).  A production scheduler also cannot ship
+non-converged solver output or let a non-finite environment draw poison
+the queue carry.  ``GuardSpec`` turns those failure modes into bounded,
+*traced* degradation — three independent in-graph defenses:
+
+1. **Bounded-energy admission** (``energy_cap`` / ``gain_floor``): before
+   the rho ranking reaches P4, clients whose *minimum-allocation* energy
+   ``E(b_min | h^2)`` exceeds ``energy_cap x H_k`` (or whose channel gain
+   sits below ``gain_floor``) are demoted out of the candidate set for
+   the round.  Eq. (2) energy is decreasing in b (Lemma 1), so the
+   b_min-allocation energy upper-bounds any feasible spend — admission
+   therefore guarantees every selected client's per-round energy is at
+   most ``energy_cap x H_k``, degrading gracefully (fewer clients this
+   round) instead of destroying the budget.
+2. **Solver fallback cascade** (``fallback``): the chosen backend's P4
+   output is validated in-graph — all-finite, budget residual
+   ``|sum b - 1| <= residual_tol`` when anything is selected, and
+   ``b >= b_min`` on selected clients.  On violation the round falls
+   back to the bit-stable bisect solve of the same (already guarded)
+   inputs, and the traced ``fallback`` flag records it.
+3. **Stream sanitization** (``quarantine``): non-finite or non-positive
+   channel draws quarantine the client for the round (treated as
+   unavailable, counted by the traced ``fault_count``), and a non-finite
+   budget increment is zeroed — the queue carry can never ingest a NaN.
+
+The spec is a compiled-program *static*: it rides ``OceanConfig.guard``
+/ ``Scenario.guard`` / ``GridEngine(guard=)`` exactly like
+``MetricsSpec``/``CheckpointSpec`` (grid must-agree), and ``guard=None``
+leaves every legacy code path byte-identical.  The fault-injection
+harness that exercises all three defenses lives in ``repro.guard.chaos``
+and drives ``benchmarks/robustness_sweep.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+DEFAULT_RESIDUAL_TOL = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardSpec:
+    """Static knobs of the guarded-execution layer (all defenses optional).
+
+    Attributes:
+      energy_cap:   admit a client only if its minimum-allocation energy
+                    ``E(b_min | h^2)`` is at most ``energy_cap x H_k``
+                    (H_k = the client's realized total budget).  ``None``
+                    disables the energy admission test.
+      gain_floor:   demote clients with channel power gain
+                    ``h^2 < gain_floor``.  ``None`` disables the floor.
+      fallback:     validate the configured solver backend's P4 output
+                    in-graph and fall back to the bit-stable bisect
+                    result for the round on violation.
+      quarantine:   treat clients with non-finite/non-positive channel
+                    draws as unavailable for the round and sanitize the
+                    budget increment (never a NaN in the queue carry).
+      residual_tol: budget-residual tolerance ``|sum b - 1|`` beyond
+                    which the fallback cascade fires (when anything is
+                    selected).
+    """
+
+    energy_cap: Optional[float] = None
+    gain_floor: Optional[float] = None
+    fallback: bool = True
+    quarantine: bool = True
+    residual_tol: float = DEFAULT_RESIDUAL_TOL
+
+    def __post_init__(self):
+        if self.energy_cap is not None:
+            object.__setattr__(self, "energy_cap", float(self.energy_cap))
+            if not self.energy_cap > 0.0:
+                raise ValueError(
+                    f"energy_cap={self.energy_cap} must be positive: it "
+                    f"scales the per-client budget H_k into the per-round "
+                    f"admission ceiling"
+                )
+        if self.gain_floor is not None:
+            object.__setattr__(self, "gain_floor", float(self.gain_floor))
+            if not self.gain_floor > 0.0:
+                raise ValueError(
+                    f"gain_floor={self.gain_floor} must be positive (it is "
+                    f"a channel power-gain threshold)"
+                )
+        object.__setattr__(self, "fallback", bool(self.fallback))
+        object.__setattr__(self, "quarantine", bool(self.quarantine))
+        object.__setattr__(self, "residual_tol", float(self.residual_tol))
+        if not self.residual_tol > 0.0:
+            raise ValueError(
+                f"residual_tol={self.residual_tol} must be positive "
+                f"(solve_p4's own repair step leaves residuals ~1e-7; a "
+                f"zero tolerance would fire the fallback every round)"
+            )
+
+    @property
+    def admits(self) -> bool:
+        """True when the spec demotes anyone (admission or quarantine)."""
+        return (
+            self.energy_cap is not None
+            or self.gain_floor is not None
+            or self.quarantine
+        )
+
+    # -- serialization (rides on Scenario.to_dict) --------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {}
+        if self.energy_cap is not None:
+            d["energy_cap"] = self.energy_cap
+        if self.gain_floor is not None:
+            d["gain_floor"] = self.gain_floor
+        if not self.fallback:
+            d["fallback"] = False
+        if not self.quarantine:
+            d["quarantine"] = False
+        if self.residual_tol != DEFAULT_RESIDUAL_TOL:
+            d["residual_tol"] = self.residual_tol
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "GuardSpec":
+        return cls(
+            energy_cap=d.get("energy_cap"),
+            gain_floor=d.get("gain_floor"),
+            fallback=bool(d.get("fallback", True)),
+            quarantine=bool(d.get("quarantine", True)),
+            residual_tol=float(d.get("residual_tol", DEFAULT_RESIDUAL_TOL)),
+        )

@@ -119,6 +119,8 @@ def _traj_kernel(
                per restored MetricsState leaf, iff has_init]
       outputs: a, b, e, q_pre, rho (chunk, K); obj, nsel (chunk,);
                [+ dlv (chunk, K) and ral (chunk,) iff has_failure;]
+               [+ fault_count, demoted, fallback (chunk,) int32 guard
+               telemetry iff cfg.guard is set;]
                q_final, es_final (1, K) — rewritten every step, so after
                the last step they hold the end-of-trajectory state;
                [+ one (chunk, ...) streamed tile per full_trace metrics
@@ -130,6 +132,10 @@ def _traj_kernel(
                chunks exactly like the queues]
     """
     spec = cfg.metrics
+    # Guard telemetry rides exactly like the failure extension: a Python
+    # static derived from cfg gates three extra (chunk,) int32 outputs,
+    # so guard-free programs keep the legacy ref layout byte-identical.
+    has_guard = cfg.guard is not None
     if spec is None:
         n_traces = n_mleaves = 0
         m_treedef = None
@@ -150,14 +156,17 @@ def _traj_kernel(
         q0_ref, es0_ref, t0_ref = refs[n_in : n_in + 3]
         minit_refs = refs[n_in + 3 : n_in + 3 + n_mleaves]
         n_in += 3 + n_mleaves
-    n_out = 9 + (2 if has_failure else 0)
+    n_out = 9 + (2 if has_failure else 0) + (3 if has_guard else 0)
     fixed = refs[n_in : n_in + n_out]
     a_ref, b_ref, e_ref, qp_ref, rho_ref, obj_ref, ns_ref = fixed[:7]
+    off = 7
     if has_failure:
-        dlvo_ref, ral_ref = fixed[7:9]
-        qf_ref, esf_ref = fixed[9:11]
-    else:
-        qf_ref, esf_ref = fixed[7:9]
+        dlvo_ref, ral_ref = fixed[off : off + 2]
+        off += 2
+    if has_guard:
+        fco_ref, dmo_ref, fbo_ref = fixed[off : off + 3]
+        off += 3
+    qf_ref, esf_ref = fixed[off : off + 2]
     trace_refs = refs[n_in + n_out : n_in + n_out + n_traces]
     mfinal_refs = refs[
         n_in + n_out + n_traces : n_in + n_out + n_traces + n_mleaves
@@ -189,7 +198,7 @@ def _traj_kernel(
     def step(i, carry):
         (
             q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c, fail_bufs,
-            m_leaves, t_bufs,
+            guard_bufs, m_leaves, t_bufs,
         ) = carry
         # tl indexes rounds within THIS launch (drives validity masking of
         # chunk-padded tails); t is the global Alg. 1 round (drives frame
@@ -217,6 +226,13 @@ def _traj_kernel(
             fail_bufs = (
                 dlv_c.at[i].set(dec.delivered),
                 ral_c.at[i].set(dec.realloc),
+            )
+        if has_guard:
+            fc_c, dm_c, fb_c = guard_bufs
+            guard_bufs = (
+                fc_c.at[i].set(dec.fault_count),
+                dm_c.at[i].set(dec.demoted),
+                fb_c.at[i].set(dec.fallback),
             )
         # Chunk-padded tail rounds (tl >= T) stream edge-replicated inputs:
         # their math runs but must not advance the resident carry.
@@ -248,6 +264,7 @@ def _traj_kernel(
             obj_c.at[i].set(dec.objective),
             ns_c.at[i].set(dec.num_selected),
             fail_bufs,
+            guard_bufs,
             m_leaves,
             t_bufs,
         )
@@ -265,12 +282,17 @@ def _traj_kernel(
             if has_failure
             else ()
         ),
+        (
+            tuple(jnp.zeros((chunk,), jnp.int32) for _ in range(3))
+            if has_guard
+            else ()
+        ),
         tuple(ref[0] for ref in m_scrs),
         tuple(jnp.zeros(ref.shape, ref.dtype) for ref in trace_refs),
     )
     (
         q, es, a_c, b_c, e_c, qp_c, rho_c, obj_c, ns_c, fail_bufs,
-        m_leaves, t_bufs,
+        guard_bufs, m_leaves, t_bufs,
     ) = jax.lax.fori_loop(0, chunk, step, carry0)
     with trace_span("traj/chunk_io"):
         q_scr[0] = q
@@ -285,6 +307,10 @@ def _traj_kernel(
         if has_failure:
             dlvo_ref[...] = fail_bufs[0]
             ral_ref[...] = fail_bufs[1]
+        if has_guard:
+            fco_ref[...] = guard_bufs[0]
+            dmo_ref[...] = guard_bufs[1]
+            fbo_ref[...] = guard_bufs[2]
         qf_ref[0] = q
         esf_ref[0] = es
         for ref, buf in zip(trace_refs, t_bufs):
@@ -377,6 +403,7 @@ def ocean_trajectory_fused(
 
     has_radio = radio_seq is not None
     has_failure = failure_seq is not None
+    has_guard = cfg.guard is not None
     inputs = [
         _pad_rounds(jnp.asarray(h2_seq, fdtype), pad),
         _pad_rounds(jnp.asarray(v_seq, jnp.float32), pad),
@@ -468,6 +495,12 @@ def ocean_trajectory_fused(
         out_specs.append(pl.BlockSpec((chunk,), lambda ic: (ic,)))      # ral
         out_shape.append(jax.ShapeDtypeStruct((Tp, K), jnp.bool_))
         out_shape.append(jax.ShapeDtypeStruct((Tp,), jnp.int32))
+    if has_guard:
+        # fault_count / demoted / fallback guard telemetry, streamed like
+        # the failure extension's realloc counter.
+        for _ in range(3):
+            out_specs.append(pl.BlockSpec((chunk,), lambda ic: (ic,)))
+            out_shape.append(jax.ShapeDtypeStruct((Tp,), jnp.int32))
     out_specs.append(pl.BlockSpec((1, K), lambda ic: (0, 0)))           # q_final
     out_specs.append(pl.BlockSpec((1, K), lambda ic: (0, 0)))           # es_final
     out_shape.append(jax.ShapeDtypeStruct((1, K), fdtype))
@@ -505,12 +538,19 @@ def ocean_trajectory_fused(
         scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(*inputs)
-    n_fixed = 9 + (2 if has_failure else 0)
+    n_fixed = 9 + (2 if has_failure else 0) + (3 if has_guard else 0)
     a, b, e, q_pre, rho, obj, nsel = out[:7]
+    off = 7
     if has_failure:
-        dlv, ral = out[7:9]
+        dlv, ral = out[off : off + 2]
+        off += 2
     else:
         dlv = ral = None
+    if has_guard:
+        fc, dm, fb = out[off : off + 3]
+        off += 3
+    else:
+        fc = dm = fb = None
     q_final, es_final = out[n_fixed - 2 : n_fixed]
 
     t_final = (
@@ -533,6 +573,9 @@ def ocean_trajectory_fused(
         num_selected=nsel[:T],
         delivered=None if dlv is None else dlv[:T],
         realloc=None if ral is None else ral[:T],
+        fault_count=None if fc is None else fc[:T],
+        demoted=None if dm is None else dm[:T],
+        fallback=None if fb is None else fb[:T],
     )
     if spec is None:
         return state, decs

@@ -46,7 +46,7 @@ Array = jax.Array
 # tests assert the two stay equal.
 _RHO_ZERO_TOL = 1e-30
 
-REDUCTIONS = ("last", "mean", "histogram", "full_trace")
+REDUCTIONS = ("last", "mean", "histogram", "full_trace", "full_trace_ds")
 
 # Eager ceiling on any single full_trace stream: T * prod(value shape)
 # elements (~134 MB as float32).  At the paper's T = 300 even K = 10^5
@@ -55,6 +55,34 @@ REDUCTIONS = ("last", "mean", "histogram", "full_trace")
 FULL_TRACE_ELEM_CAP = 1 << 25
 
 DEFAULT_HIST_BINS = 32
+
+# Default slot budget of the ``full_trace_ds`` downsampled-trace
+# reduction: the stream keeps at most this many strided samples no
+# matter how long the horizon is, so long-horizon (T >> 1e4) sweeps can
+# still record trace-shaped telemetry within a bounded accumulator.
+DEFAULT_DS_SAMPLES = 256
+
+
+def ds_stride(num_rounds: int, ds_samples: int) -> int:
+    """Static sampling stride of ``full_trace_ds``: ceil(T / ds_samples).
+
+    Rounds ``t`` with ``t % stride == 0`` are recorded, so the sampled
+    indices are exactly ``ds_indices(T, ds_samples)`` and at most
+    ``ds_samples`` slots exist.
+    """
+    return -(-int(num_rounds) // int(ds_samples))
+
+
+def ds_indices(num_rounds: int, ds_samples: int):
+    """The round indices ``full_trace_ds`` records (host-side helper).
+
+    ``full_trace[ds_indices(T, n)] == full_trace_ds`` — the agreement
+    contract pinned by ``tests/test_obs.py``.
+    """
+    import numpy as np
+
+    stride = ds_stride(num_rounds, ds_samples)
+    return np.arange(0, int(num_rounds), stride)
 
 
 class RoundContext(NamedTuple):
@@ -83,6 +111,11 @@ class RoundContext(NamedTuple):
     # collectors fall back to their perfect-delivery values):
     delivered: Optional[Array] = None  # (K,) bool selected-and-delivered
     realloc: Optional[Array] = None    # () int32 mid-round P4 re-solve flag
+    # Guard extension (None without a GuardSpec; the guard collectors
+    # then report zeros — nothing was quarantined, demoted, or re-solved):
+    fault_count: Optional[Array] = None  # () int32 quarantined draws
+    demoted: Optional[Array] = None      # () int32 cap/floor demotions
+    fallback: Optional[Array] = None     # () int32 bisect-fallback flag
 
 
 def round_context(t, dec, new_state, v, eta, budget_inc, radio) -> RoundContext:
@@ -104,6 +137,9 @@ def round_context(t, dec, new_state, v, eta, budget_inc, radio) -> RoundContext:
         b_min=jnp.asarray(radio.b_min, jnp.float32),
         delivered=getattr(dec, "delivered", None),
         realloc=getattr(dec, "realloc", None),
+        fault_count=getattr(dec, "fault_count", None),
+        demoted=getattr(dec, "demoted", None),
+        fallback=getattr(dec, "fallback", None),
     )
 
 
@@ -236,6 +272,30 @@ def _c_reallocation_count(cfg, ctx, state):
     # Running count of mid-round P4 re-solves (failure_mode='reallocate').
     ral = 0.0 if ctx.realloc is None else _f32(ctx.realloc)
     count = state + ral
+    return count, count
+
+
+def _c_fault_count(cfg, ctx, state):
+    # Running count of quarantined channel draws (repro.guard stream
+    # sanitization); identically zero without a GuardSpec.
+    faults = 0.0 if ctx.fault_count is None else _f32(ctx.fault_count)
+    count = state + faults
+    return count, count
+
+
+def _c_demoted_clients(cfg, ctx, state):
+    # Running count of bounded-energy admission demotions (energy cap /
+    # gain floor); identically zero without a GuardSpec.
+    dem = 0.0 if ctx.demoted is None else _f32(ctx.demoted)
+    count = state + dem
+    return count, count
+
+
+def _c_fallback_rounds(cfg, ctx, state):
+    # Running count of rounds the solver fallback cascade fired
+    # (backend output rejected, bisect result committed).
+    fb = 0.0 if ctx.fallback is None else _f32(ctx.fallback)
+    count = state + fb
     return count, count
 
 
@@ -378,6 +438,30 @@ _register(
     "running count of mid-round P4 re-solves (failure_mode='reallocate')",
 )
 _register(
+    "fault_count",
+    lambda k: (),
+    lambda cfg: jnp.zeros((), jnp.float32),
+    _c_fault_count,
+    lambda cfg: (0.0, float(cfg.num_rounds * cfg.num_clients)),
+    "running count of quarantined (non-finite/non-positive) channel draws",
+)
+_register(
+    "demoted_clients",
+    lambda k: (),
+    lambda cfg: jnp.zeros((), jnp.float32),
+    _c_demoted_clients,
+    lambda cfg: (0.0, float(cfg.num_rounds * cfg.num_clients)),
+    "running count of bounded-energy admission demotions (cap/gain floor)",
+)
+_register(
+    "fallback_rounds",
+    lambda k: (),
+    lambda cfg: jnp.zeros((), jnp.float32),
+    _c_fallback_rounds,
+    lambda cfg: (0.0, float(cfg.num_rounds)),
+    "running count of rounds the solver fallback cascade committed bisect",
+)
+_register(
     "topm_saturated",
     lambda k: (),
     _no_state,
@@ -426,13 +510,19 @@ class MetricsSpec:
                  are ``last`` (final value), ``mean`` (running mean over T),
                  ``histogram`` (static-bin counts over all rounds/elements),
                  ``full_trace`` (the whole (T, ...) stream, capped by
-                 ``FULL_TRACE_ELEM_CAP``).
+                 ``FULL_TRACE_ELEM_CAP``), ``full_trace_ds`` (a strided
+                 downsample of the stream — at most ``ds_samples`` slots,
+                 recorded at rounds ``t % ds_stride(T, ds_samples) == 0``,
+                 so trace-shaped telemetry stays bounded at T >> 1e4).
       hist_bins: number of histogram bins (collector-specific static
                  support; out-of-range values clip into the edge bins).
+      ds_samples: slot budget of every ``full_trace_ds`` entry (the
+                 sampling stride derives statically from T).
     """
 
     collect: Tuple[Tuple[str, str], ...]
     hist_bins: int = DEFAULT_HIST_BINS
+    ds_samples: int = DEFAULT_DS_SAMPLES
 
     def __post_init__(self):
         entries = tuple((str(n), str(r)) for n, r in self.collect)
@@ -453,9 +543,19 @@ class MetricsSpec:
             seen.add((name, red))
         if self.hist_bins < 2:
             raise ValueError(f"hist_bins={self.hist_bins} must be >= 2")
+        if self.ds_samples < 1:
+            raise ValueError(
+                f"ds_samples={self.ds_samples} must be >= 1 (it is the "
+                f"slot budget of every full_trace_ds entry)"
+            )
 
     @classmethod
-    def of(cls, *entries: str, hist_bins: int = DEFAULT_HIST_BINS) -> "MetricsSpec":
+    def of(
+        cls,
+        *entries: str,
+        hist_bins: int = DEFAULT_HIST_BINS,
+        ds_samples: int = DEFAULT_DS_SAMPLES,
+    ) -> "MetricsSpec":
         """Parse ``"collector:reduction"`` strings, e.g.
         ``MetricsSpec.of("queue:full_trace", "lyapunov_drift:mean")``."""
         pairs = []
@@ -467,7 +567,7 @@ class MetricsSpec:
                     f"(e.g. 'queue:full_trace')"
                 )
             pairs.append((name, red))
-        return cls(collect=tuple(pairs), hist_bins=hist_bins)
+        return cls(collect=tuple(pairs), hist_bins=hist_bins, ds_samples=ds_samples)
 
     def validate(self, num_rounds: int, num_clients: int) -> "MetricsSpec":
         """Eager memory check at lowering: full traces must stay bounded.
@@ -476,15 +576,20 @@ class MetricsSpec:
         program traces, not an OOM after.
         """
         for name, red in self.collect:
-            if red != "full_trace":
+            if red not in ("full_trace", "full_trace_ds"):
                 continue
             shape = get_collector(name).shape(num_clients)
-            elems = num_rounds
+            if red == "full_trace_ds":
+                # Bounded by construction (<= ds_samples slots) — but the
+                # slot budget itself still honors the memory cap.
+                elems = min(self.ds_samples, num_rounds)
+            else:
+                elems = num_rounds
             for d in shape:
                 elems *= d
             if elems > FULL_TRACE_ELEM_CAP:
                 raise ValueError(
-                    f"metrics entry ('{name}', 'full_trace') would stream "
+                    f"metrics entry ('{name}', '{red}') would stream "
                     f"{elems} elements (T={num_rounds} x shape {shape}), "
                     f"above the FULL_TRACE_ELEM_CAP={FULL_TRACE_ELEM_CAP} "
                     f"memory cap; record a bounded reduction instead "
@@ -511,6 +616,8 @@ class MetricsSpec:
         d: Dict[str, Any] = {"collect": [list(p) for p in self.collect]}
         if self.hist_bins != DEFAULT_HIST_BINS:
             d["hist_bins"] = self.hist_bins
+        if self.ds_samples != DEFAULT_DS_SAMPLES:
+            d["ds_samples"] = self.ds_samples
         return d
 
     @classmethod
@@ -518,6 +625,7 @@ class MetricsSpec:
         return cls(
             collect=tuple(tuple(p) for p in d.get("collect", ())),
             hist_bins=int(d.get("hist_bins", DEFAULT_HIST_BINS)),
+            ds_samples=int(d.get("ds_samples", DEFAULT_DS_SAMPLES)),
         )
 
 
@@ -537,6 +645,15 @@ def init_metrics(spec: MetricsSpec, cfg) -> MetricsState:
         key = metric_key(name, red)
         if red == "histogram":
             accs[key] = jnp.zeros((spec.hist_bins,), jnp.float32)
+        elif red == "full_trace_ds":
+            # A (n_slots,)+shape scatter accumulator riding the carry —
+            # bounded at any horizon, and because it is an ordinary accs
+            # leaf it flows through the fused kernel's generic metrics
+            # scratch with zero kernel changes.
+            stride = ds_stride(cfg.num_rounds, spec.ds_samples)
+            n_slots = -(-cfg.num_rounds // stride)
+            shape = get_collector(name).shape(cfg.num_clients)
+            accs[key] = jnp.zeros((n_slots,) + shape, jnp.float32)
         else:
             shape = get_collector(name).shape(cfg.num_clients)
             accs[key] = jnp.zeros(shape, jnp.float32)
@@ -580,6 +697,13 @@ def metrics_round(
             accs[key] = jnp.where(valid, value, acc)
         elif red == "mean":
             accs[key] = acc + jnp.where(valid, value, jnp.zeros_like(value))
+        elif red == "full_trace_ds":
+            stride = ds_stride(cfg.num_rounds, spec.ds_samples)
+            slot = ctx.t // stride
+            take = valid & (jnp.mod(ctx.t, stride) == 0)
+            accs[key] = acc.at[slot].set(
+                jnp.where(take, _f32(value), acc[slot])
+            )
         else:  # histogram
             lo, hi = get_collector(name).hist_range(cfg)
             width = (hi - lo) / spec.hist_bins
@@ -614,7 +738,7 @@ def finalize_metrics(
             out[key] = traces[key]
         elif red == "mean":
             out[key] = mstate.accs[key] / float(cfg.num_rounds)
-        else:
+        else:  # last / histogram / full_trace_ds: the accumulator itself
             out[key] = mstate.accs[key]
     return out
 

@@ -75,6 +75,7 @@ from jax.sharding import Mesh, PartitionSpec
 
 from repro.checkpoint import trajectory as ckpt_io
 from repro.checkpoint.trajectory import CheckpointSpec
+from repro.guard.spec import GuardSpec
 from repro.core.baselines import PolicyTrace
 from repro.core.ocean import OceanConfig
 from repro.core.policy import (
@@ -195,7 +196,7 @@ def _check_compatible(scenarios: Sequence[Scenario]) -> Scenario:
             for field in (
                 "num_rounds", "num_clients", "frame_len", "solver",
                 "ranking", "top_m", "block_k", "traj", "metrics",
-                "checkpoint", "failure_mode",
+                "checkpoint", "failure_mode", "guard",
             )
             if getattr(base, field) != getattr(sc, field)
         ]
@@ -249,6 +250,12 @@ class GridEngine:
                  ``run(..., resume_from=...)`` restores the latest
                  snapshot.  Joins the must-agree statics; the segmented
                  driver runs unsharded (``shard=`` is ignored).
+      guard:     guarded-execution override (a ``repro.guard.GuardSpec``:
+                 bounded-energy admission, solver fallback cascade,
+                 stream sanitization); None keeps the scenarios' ``guard``
+                 field (default off — every legacy path byte-identical).
+                 Also a compiled-program static joining the must-agree
+                 set.
       shard:     multi-device execution: the flattened (S*N) cell axis is
                  ``shard_map``-ped over an auto-built mesh of all local
                  devices, with donated input buffers (off-CPU).  None =
@@ -271,6 +278,7 @@ class GridEngine:
         traj: Optional[str] = None,
         metrics: Optional[MetricsSpec] = None,
         checkpoint: Optional[CheckpointSpec] = None,
+        guard: Optional[GuardSpec] = None,
     ):
         if not scenarios or not policies:
             raise ValueError("need at least one scenario and one policy")
@@ -287,6 +295,7 @@ class GridEngine:
                 ("traj", traj),
                 ("metrics", metrics),
                 ("checkpoint", checkpoint),
+                ("guard", guard),
             )
             if v is not None
         }
@@ -933,6 +942,7 @@ def run_grid(
     traj: Optional[str] = None,
     metrics: Optional[MetricsSpec] = None,
     checkpoint: Optional[CheckpointSpec] = None,
+    guard: Optional[GuardSpec] = None,
     base_key: Optional[Array] = None,
     learn_keys: Optional[Array] = None,
     learn_seed: int = 0,
@@ -942,7 +952,7 @@ def run_grid(
     return GridEngine(
         scenarios, policies, experiment=experiment, solver=solver, shard=shard,
         ranking=ranking, top_m=top_m, block_k=block_k, traj=traj,
-        metrics=metrics, checkpoint=checkpoint,
+        metrics=metrics, checkpoint=checkpoint, guard=guard,
     ).run(
         seeds, base_key=base_key, learn_keys=learn_keys, learn_seed=learn_seed,
         resume_from=resume_from,

@@ -115,3 +115,68 @@ def test_model_bits_scaling():
     assert float(energy(jnp.asarray(0.5), jnp.asarray(2.5e-4), big)) > float(
         energy(jnp.asarray(0.5), jnp.asarray(2.5e-4), RADIO)
     )
+
+
+# -- extreme values (the SAFE_DIV_FLOOR regime) ------------------------------
+def test_safe_div_floor_unifies_the_literal():
+    """One named constant guards every division by bandwidth; the four
+    call sites must share it (a drifted literal would let one path
+    overflow where the others clip)."""
+    from repro.core.energy import SAFE_DIV_FLOOR
+
+    assert SAFE_DIV_FLOOR == 1e-30
+    b0 = jnp.asarray(0.0)
+    floor = jnp.asarray(SAFE_DIV_FLOOR)
+    # b = 0 and b = SAFE_DIV_FLOOR must land on the identical clipped value.
+    assert float(f_shannon(b0, RADIO.beta)) == float(f_shannon(floor, RADIO.beta))
+    assert float(f_shannon_prime(b0, RADIO.beta)) == float(
+        f_shannon_prime(floor, RADIO.beta)
+    )
+    assert float(f_shannon_second(b0, RADIO.beta)) == float(
+        f_shannon_second(floor, RADIO.beta)
+    )
+    assert float(
+        transmit_power_w_per_hz(b0, jnp.asarray(2.5e-4), RADIO)
+    ) == float(transmit_power_w_per_hz(floor, jnp.asarray(2.5e-4), RADIO))
+
+
+def test_shannon_family_nan_free_at_zero_bandwidth():
+    """b = 0 hits the floored denominator: f and the transmit power stay
+    finite (the exp2 clip bounds 2^{beta/b}); the derivatives may
+    overflow float32 to +-inf but keep their Lemma-1 signs and never
+    produce NaN (inf is maskable, NaN poisons every comparison)."""
+    b0 = jnp.asarray(0.0)
+    assert np.isfinite(float(f_shannon(b0, RADIO.beta)))
+    fp = float(f_shannon_prime(b0, RADIO.beta))
+    fs = float(f_shannon_second(b0, RADIO.beta))
+    assert not np.isnan(fp) and fp <= 0.0  # f decreasing
+    assert not np.isnan(fs) and fs >= 0.0  # f convex
+    assert np.isfinite(float(transmit_power_w_per_hz(b0, jnp.asarray(1e-6), RADIO)))
+
+
+def test_energy_extreme_gains():
+    """Subnormal and infinite gains stay NaN-free: a subnormal h^2
+    overflows float32 to +inf (which the guard's admission screen
+    rejects via E > cap x H), infinite h^2 gives zero energy (free
+    channel)."""
+    b = jnp.asarray(0.5)
+    tiny = float(np.finfo(np.float32).tiny) * 1e-4  # subnormal
+    e_tiny = float(energy(b, jnp.asarray(tiny), RADIO))
+    assert not np.isnan(e_tiny) and e_tiny > 0.0  # +inf: maskable, not NaN
+    e_inf = float(energy(b, jnp.asarray(np.inf), RADIO))
+    assert e_inf == 0.0
+    # b = 0 short-circuits to exactly zero regardless of the gain.
+    assert float(energy(jnp.asarray(0.0), jnp.asarray(tiny), RADIO)) == 0.0
+
+
+def test_min_bandwidth_inf_masks_infeasible():
+    """A gain so bad that even b = 1 busts the budget returns +inf (the
+    baselines mask on it), and the inf never leaks NaN downstream."""
+    h2 = jnp.asarray([1e-12, 2.5e-4])
+    b = min_bandwidth_for_energy(jnp.asarray(0.05), h2, RADIO)
+    b_np = np.asarray(b)
+    assert np.isinf(b_np[0]) and np.isfinite(b_np[1])
+    assert b_np[1] == RADIO.b_min  # E(b_min) already meets this budget
+    # Masking idiom used by the SMO/AMO baselines:
+    feasible = np.isfinite(b_np)
+    assert feasible.tolist() == [False, True]

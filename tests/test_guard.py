@@ -1,0 +1,318 @@
+"""Guarded OCEAN execution: GuardSpec, admission, fallback, quarantine.
+
+Chaos-driven exactness tests: the injected fault counts of
+``repro.guard.chaos`` must match the traced telemetry *exactly*, the
+bounded-energy admission must hold on the PR-8 pinned heavy-tail cell,
+and ``guard=None`` (or a guard that never fires) must leave every
+decision bitwise identical to the unguarded program on scan AND fused
+backends.
+
+NaN-kind injections self-skip under ``JAX_DEBUG_NANS=1``: the checker
+flags any op *output* containing NaN, so even slicing a corrupted input
+trips it before the quarantine can sanitize — the inf/zero/negative
+kinds exercise the identical screen and stay debug-nans-clean.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ocean import OceanConfig, simulate
+from repro.core.scenario import Scenario
+from repro.core.selection import RHO_DEMOTED, ocean_p, priorities
+from repro.guard import (
+    GuardSpec,
+    inject_h2_faults,
+    register_chaos_solver,
+    screen_streams,
+)
+from repro.sim.engine import GridEngine
+
+T, K = 24, 6
+SC = Scenario(name="guard-base", num_rounds=T, num_clients=K)
+H2 = np.asarray(SC.sample_channel(3))
+ETA = SC.eta_seq()
+V = 1e-5
+
+
+def _run(cfg, h2=H2):
+    st, d = simulate(cfg, h2, ETA, V)
+    return st, d
+
+
+def _debug_nans() -> bool:
+    return bool(jax.config.jax_debug_nans)
+
+
+# -- spec -------------------------------------------------------------------
+def test_guardspec_validation():
+    with pytest.raises(ValueError, match="energy_cap"):
+        GuardSpec(energy_cap=0.0)
+    with pytest.raises(ValueError, match="gain_floor"):
+        GuardSpec(gain_floor=-1.0)
+    with pytest.raises(ValueError, match="residual_tol"):
+        GuardSpec(residual_tol=0.0)
+    assert not GuardSpec(quarantine=False).admits
+    assert GuardSpec().admits  # quarantine alone builds an admission mask
+
+
+def test_guardspec_serialization_round_trip():
+    for g in (
+        GuardSpec(),
+        GuardSpec(energy_cap=2.0),
+        GuardSpec(gain_floor=1e-7, fallback=False),
+        GuardSpec(energy_cap=1.0, quarantine=False, residual_tol=1e-2),
+    ):
+        assert GuardSpec.from_dict(g.to_dict()) == g
+    assert GuardSpec().to_dict() == {}  # all-default spec serializes empty
+
+
+def test_scenario_guard_round_trip_and_omission():
+    sc = dataclasses.replace(SC, guard=GuardSpec(energy_cap=2.0))
+    assert Scenario.from_json(sc.to_json()) == sc
+    assert "guard" not in SC.to_dict()  # pre-guard payloads byte-stable
+    assert sc.ocean_config().guard == sc.guard
+
+
+def test_config_rejects_non_spec_guard():
+    with pytest.raises(TypeError, match="guard"):
+        dataclasses.replace(SC.ocean_config(), guard={"energy_cap": 1.0})
+    with pytest.raises(TypeError, match="guard"):
+        dataclasses.replace(SC, guard={"energy_cap": 1.0})
+
+
+# -- byte-identity of the legacy path ---------------------------------------
+@pytest.mark.parametrize("traj", ["scan", "fused"])
+def test_guard_none_is_legacy(traj):
+    cfg = dataclasses.replace(SC.ocean_config(), traj=traj)
+    st, d = _run(cfg)
+    assert d.fault_count is None and d.demoted is None and d.fallback is None
+
+
+@pytest.mark.parametrize("traj", ["scan", "fused"])
+@pytest.mark.parametrize("solver", ["bisect", "newton"])
+def test_never_firing_guard_is_bitwise_identical(traj, solver):
+    """A guard whose screens never trip must not perturb a single bit."""
+    cfg = dataclasses.replace(SC.ocean_config(), traj=traj, solver=solver)
+    st0, d0 = _run(cfg)
+    cfg_g = dataclasses.replace(cfg, guard=GuardSpec(energy_cap=1e6))
+    st1, d1 = _run(cfg_g)
+    np.testing.assert_array_equal(np.asarray(d0.a), np.asarray(d1.a))
+    np.testing.assert_array_equal(np.asarray(d0.b), np.asarray(d1.b))
+    np.testing.assert_array_equal(np.asarray(d0.e), np.asarray(d1.e))
+    np.testing.assert_array_equal(np.asarray(st0.q), np.asarray(st1.q))
+    assert int(np.sum(np.asarray(d1.fault_count))) == 0
+    assert int(np.sum(np.asarray(d1.demoted))) == 0
+    assert int(np.sum(np.asarray(d1.fallback))) == 0
+
+
+# -- quarantine / fault counting --------------------------------------------
+@pytest.mark.parametrize("traj", ["scan", "fused"])
+def test_fault_count_matches_injection_exactly(traj):
+    kinds = dict(num_inf=3, num_zero=2, num_negative=2)
+    if not _debug_nans():
+        kinds["num_nan"] = 3
+    h2c, rep = inject_h2_faults(H2, 11, **kinds)
+    cfg = dataclasses.replace(
+        SC.ocean_config(), traj=traj, guard=GuardSpec()
+    )
+    st, d = _run(cfg, h2c)
+    fc = np.asarray(d.fault_count)
+    assert int(fc.sum()) == rep.quarantined
+    np.testing.assert_array_equal(
+        fc, rep.per_round_quarantined(T).astype(np.int32)
+    )
+    # queues survive the corruption
+    assert bool(np.all(np.isfinite(np.asarray(st.q))))
+    # a quarantined client is never selected in its corrupted round
+    a = np.asarray(d.a)
+    for kind in ("nan", "inf", "zero", "negative"):
+        for (t, k) in rep.positions[kind]:
+            assert not a[t, k], f"{kind} draw at ({t},{k}) was selected"
+
+
+def test_scan_and_fused_agree_under_faults():
+    h2c, rep = inject_h2_faults(
+        H2, 5, num_inf=2, num_zero=1, num_subnormal=2
+    )
+    g = GuardSpec(energy_cap=1.0)
+    cfg = dataclasses.replace(SC.ocean_config(), guard=g)
+    st_s, d_s = _run(cfg, h2c)
+    st_f, d_f = _run(dataclasses.replace(cfg, traj="fused"), h2c)
+    for name in ("a", "b", "e", "fault_count", "demoted", "fallback"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(d_s, name)), np.asarray(getattr(d_f, name))
+        )
+    np.testing.assert_array_equal(np.asarray(st_s.q), np.asarray(st_f.q))
+
+
+def test_subnormal_gain_is_demoted_not_quarantined():
+    """A subnormal draw is a legal float: the quarantine must pass it and
+    the energy admission must stop it."""
+    h2c, rep = inject_h2_faults(H2, 9, num_subnormal=3)
+    cfg = dataclasses.replace(
+        SC.ocean_config(), guard=GuardSpec(energy_cap=1.0)
+    )
+    st, d = _run(cfg, h2c)
+    assert int(np.sum(np.asarray(d.fault_count))) == 0
+    assert int(np.sum(np.asarray(d.demoted))) >= rep.counts["subnormal"]
+    a = np.asarray(d.a)
+    for (t, k) in rep.positions["subnormal"]:
+        assert not a[t, k]
+    # and the cap held: every realized round energy is bounded
+    assert float(np.max(np.asarray(d.e))) <= 1.0 * 0.15 * (1 + 1e-6)
+
+
+def test_gain_floor_demotes():
+    h2c = np.array(H2, copy=True)
+    h2c[4, 2] = 1e-9  # finite, positive, below the floor
+    cfg = dataclasses.replace(
+        SC.ocean_config(), guard=GuardSpec(gain_floor=1e-8)
+    )
+    st, d = _run(cfg, h2c)
+    assert int(np.sum(np.asarray(d.demoted))) >= 1
+    assert not np.asarray(d.a)[4, 2]
+
+
+def test_budget_increment_sanitized():
+    """An inf budget increment is zeroed before the queue carry."""
+    inc = np.full((T, K), 0.15 / T, np.float32)
+    inc[7, 3] = np.inf
+    cfg = dataclasses.replace(SC.ocean_config(), guard=GuardSpec())
+    st, d = simulate(cfg, H2, ETA, V, budget_seq=jnp.asarray(inc))
+    assert bool(np.all(np.isfinite(np.asarray(st.q))))
+
+
+# -- the PR-8 pinned heavy-tail cell ----------------------------------------
+def test_energy_cap_defuses_pinned_heavy_tail_cell():
+    """seed 21 / scenario 2 / ocean-a: h^2 = 1.2e-6 at a zero-queue round
+    costs 2.45 J (~16x the 0.15 J budget) unguarded — the exact cell
+    benchmarks/scenarios.py pins.  With energy_cap=1 every realized round
+    energy must stay within H."""
+    from benchmarks.common import SCENARIO_DRIFT_TOWARD, V_DEFAULT
+    from repro.core import PolicyParams
+    from repro.sim import run_grid
+
+    pols = [("ocean-a", PolicyParams(v=V_DEFAULT))]
+    res = run_grid([SCENARIO_DRIFT_TOWARD], pols, seeds=[21])
+    e0 = np.asarray(res.e)
+    # conftest flips jax_threefry_partitionable, which shifts the draw
+    # stream: the blowup is 2.45 J under the benchmark's default PRNG
+    # and 1.04 J here — either way several times the 0.15 J budget.
+    assert float(e0.max()) > 3.0 * 0.15
+    res_g = run_grid(
+        [SCENARIO_DRIFT_TOWARD], pols, seeds=[21],
+        guard=GuardSpec(energy_cap=1.0),
+    )
+    eg = np.asarray(res_g.e)
+    assert float(eg.max()) <= 1.0 * 0.15 * (1 + 1e-6)
+
+
+# -- solver fallback cascade -------------------------------------------------
+@pytest.mark.parametrize("traj", ["scan", "fused"])
+def test_chaos_objective_fallback_fires_every_round(traj):
+    register_chaos_solver("bisect", kind="objective")
+    cfg0 = dataclasses.replace(SC.ocean_config(), traj=traj)
+    st0, d0 = _run(cfg0)
+    cfg_c = dataclasses.replace(
+        cfg0, solver="chaos_objective_bisect", guard=GuardSpec()
+    )
+    st_c, d_c = _run(cfg_c)
+    assert int(np.sum(np.asarray(d_c.fallback))) == T
+    # every committed round is the bit-stable bisect solution
+    np.testing.assert_array_equal(np.asarray(d_c.a), np.asarray(d0.a))
+    np.testing.assert_array_equal(np.asarray(d_c.b), np.asarray(d0.b))
+    np.testing.assert_array_equal(np.asarray(st_c.q), np.asarray(st0.q))
+
+
+def test_chaos_budget_violation_caught():
+    """The budget-residual chaos (b x 1.5) is caught whenever the round
+    carries waterfilled mass, and the committed trajectory still equals
+    the clean bisect one."""
+    register_chaos_solver("bisect", kind="budget", scale=1.5)
+    cfg0 = SC.ocean_config()
+    st0, d0 = _run(cfg0)
+    cfg_c = dataclasses.replace(
+        cfg0, solver="chaos_budget_bisect", guard=GuardSpec()
+    )
+    st_c, d_c = _run(cfg_c)
+    np.testing.assert_array_equal(np.asarray(d_c.b), np.asarray(d0.b))
+    np.testing.assert_array_equal(np.asarray(st_c.q), np.asarray(st0.q))
+    # rounds with m* > 0 (some selected client has rho > 0) must all fire
+    q_pre = np.asarray(d0.q)
+    pos_selected = np.asarray(d0.a) & (q_pre > 0.0)
+    expected = pos_selected.any(axis=1).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(d_c.fallback), expected)
+
+
+def test_fallback_off_keeps_counter_zero():
+    cfg = dataclasses.replace(
+        SC.ocean_config(), guard=GuardSpec(fallback=False)
+    )
+    st, d = _run(cfg)
+    assert int(np.sum(np.asarray(d.fallback))) == 0
+
+
+# -- admission internals -----------------------------------------------------
+def test_demoted_rho_sorts_last_and_never_wins():
+    q = jnp.asarray(np.linspace(0.0, 0.2, K), jnp.float32)
+    h2 = jnp.asarray(H2[0])
+    admit = jnp.asarray([True, True, False, True, False, True])
+    sol = ocean_p(q, h2, 1e-5, 1.0, SC.radio, admit=admit)
+    a = np.asarray(sol.a)
+    assert not a[2] and not a[4]
+    rho = np.asarray(sol.rho)
+    assert rho[2] == RHO_DEMOTED and rho[4] == RHO_DEMOTED
+    assert bool(np.all(np.isfinite(rho)))  # finite sentinel, NaN-free
+
+
+# -- grid engine -------------------------------------------------------------
+def test_grid_guard_is_must_agree_static():
+    sc1 = dataclasses.replace(SC, name="a")
+    sc2 = dataclasses.replace(SC, name="b", guard=GuardSpec())
+    with pytest.raises(ValueError, match="guard"):
+        GridEngine([sc1, sc2], ["ocean-u"])
+
+
+def test_grid_guard_override_single_program():
+    scenarios = [
+        dataclasses.replace(SC, name="a"),
+        dataclasses.replace(SC, name="b", pathloss_db=(45.0, 32.0)),
+    ]
+    eng = GridEngine(scenarios, ["ocean-u"], guard=GuardSpec(energy_cap=1.0))
+    assert eng.cfg.guard == GuardSpec(energy_cap=1.0)
+    res = eng.run([0, 1])
+    if hasattr(eng._fn, "_cache_size"):
+        assert eng._fn._cache_size() == 1
+    assert bool(np.all(np.isfinite(np.asarray(res.e))))
+
+
+# -- eager screens -----------------------------------------------------------
+def test_screen_streams_raises_and_counts():
+    h2c, rep = inject_h2_faults(H2, 13, num_inf=2, num_zero=1)
+    with pytest.raises(ValueError, match="h2_seq"):
+        screen_streams(h2_seq=h2c)
+    counts = screen_streams(h2_seq=h2c, strict=False)
+    assert counts["h2_seq"] == rep.quarantined
+    assert screen_streams(h2_seq=H2, budget_seq=np.zeros((T, K)))["h2_seq"] == 0
+
+
+def test_lowering_rejects_non_finite_params():
+    if _debug_nans():
+        pytest.skip(
+            "the NaN param flows through pathloss_schedule arithmetic "
+            "before the screen raises; the checker flags that op first"
+        )
+    from repro.env.spec import EnvSpec
+
+    sc = dataclasses.replace(
+        SC,
+        env=EnvSpec(
+            channel="iid_rayleigh",
+            channel_params={"pathloss_db": (float("nan"), 36.0)},
+        ),
+    )
+    with pytest.raises(ValueError, match="non-finite"):
+        sc.lower_env()

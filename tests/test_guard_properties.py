@@ -1,0 +1,156 @@
+"""Guarded-execution property tests (hypothesis).
+
+Three invariants of ``repro.guard`` that must hold for *any* spec /
+channel draw, not just the pinned chaos cells of ``test_guard.py``:
+
+  * **cap monotonicity** — raising ``energy_cap`` can only grow the
+    admitted set (Eq. (2) energy at ``b_min`` is a fixed per-client
+    number; the cap is a threshold on it), and a guard that demotes
+    nobody leaves the round decision bitwise identical;
+  * **quarantine completeness** — a client whose gain draw is
+    non-finite or non-positive is never selected that round, and the
+    queue carry stays finite no matter how many draws are corrupted;
+  * **fallback feasibility** — whatever garbage the primary solver
+    emits, the committed allocation satisfies the P4 constraints:
+    ``sum b <= 1 + residual_tol`` and ``b >= b_min`` on every selected
+    client.
+
+Shapes are compiled statics: hypothesis draws values (caps, seeds,
+fault counts), never shapes, so each property compiles one program.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (dev extra)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core.ocean import _guard_admission, simulate  # noqa: E402
+from repro.core.scenario import Scenario  # noqa: E402
+from repro.guard import (  # noqa: E402
+    GuardSpec,
+    inject_h2_faults,
+    register_chaos_solver,
+)
+
+T, K = 16, 5
+SC = Scenario(name="guard-prop", num_rounds=T, num_clients=K)
+CFG = SC.ocean_config()
+H2 = np.asarray(SC.sample_channel(7))
+ETA = SC.eta_seq()
+V = 1e-5
+
+_DEBUG_NANS = bool(jax.config.jax_debug_nans)
+
+# One chaos solver for the whole module: scales the positive-rho
+# bandwidths by 1.5x, so the primary emits a budget-infeasible b
+# exactly on rounds with m* > 0.
+_CHAOS_BUDGET = register_chaos_solver(base="bisect", kind="budget").name
+
+
+def _round_admission(cap, h2_row):
+    cfg = dataclasses.replace(
+        CFG, guard=GuardSpec(energy_cap=float(cap), quarantine=True)
+    )
+    _, admit, _, _ = _guard_admission(
+        cfg, jnp.asarray(h2_row, jnp.float32), None, cfg.radio
+    )
+    return np.asarray(admit)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    cap_lo=st.floats(1e-2, 1e2),
+    ratio=st.floats(1.0, 1e4),
+    t=st.integers(0, T - 1),
+)
+def test_energy_cap_admission_monotone(cap_lo, ratio, t):
+    """admit(cap) is monotone in cap: a client admitted at a lower cap
+    stays admitted at any higher one."""
+    lo = _round_admission(cap_lo, H2[t])
+    hi = _round_admission(cap_lo * ratio, H2[t])
+    assert np.all(~lo | hi)  # lo is a subset of hi
+
+
+@settings(max_examples=12, deadline=None)
+@given(cap=st.floats(1e4, 1e8), seed=st.integers(0, 2**31 - 1))
+def test_never_demoting_cap_is_bitwise_legacy(cap, seed):
+    """A cap generous enough to demote nobody must not perturb a single
+    bit of the decision trace (the guard's only effect is the masks)."""
+    h2 = np.asarray(
+        Scenario(name="guard-prop", num_rounds=T, num_clients=K).sample_channel(
+            seed % 64
+        )
+    )
+    if not all(np.all(_round_admission(cap, h2[t])) for t in range(T)):
+        return  # hypothesis found a tail even this cap demotes; vacuous
+    _, d0 = simulate(CFG, h2, ETA, V)
+    cfg_g = dataclasses.replace(CFG, guard=GuardSpec(energy_cap=float(cap)))
+    _, dg = simulate(cfg_g, h2, ETA, V)
+    for name in ("a", "b", "e", "q", "rho", "objective", "num_selected"):
+        assert np.array_equal(
+            np.asarray(getattr(d0, name)), np.asarray(getattr(dg, name))
+        ), name
+    assert int(np.sum(np.asarray(dg.demoted))) == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    num_inf=st.integers(0, 8),
+    num_zero=st.integers(0, 8),
+    num_negative=st.integers(0, 8),
+)
+def test_quarantined_clients_never_selected(seed, num_inf, num_zero, num_negative):
+    """Every corrupted (t, k) cell is unselected that round, gets zero
+    bandwidth and zero energy, and the queue carry stays finite."""
+    h2_bad, report = inject_h2_faults(
+        H2, seed, num_inf=num_inf, num_zero=num_zero, num_negative=num_negative
+    )
+    cfg = dataclasses.replace(CFG, guard=GuardSpec(quarantine=True))
+    state, d = simulate(cfg, h2_bad, ETA, V)
+    a = np.asarray(d.a)
+    b = np.asarray(d.b)
+    e = np.asarray(d.e)
+    for kind, cells in report.positions.items():
+        for t, k in cells:
+            assert not a[t, k], (kind, t, k)
+            assert b[t, k] == 0.0, (kind, t, k)
+            assert e[t, k] == 0.0, (kind, t, k)
+    assert np.all(np.isfinite(np.asarray(d.q)))
+    assert np.all(np.isfinite(np.asarray(state.q)))
+    assert int(np.sum(np.asarray(d.fault_count))) == report.quarantined
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 63),
+    v_exp=st.floats(-6.0, -3.0),
+)
+def test_fallback_commit_is_always_budget_feasible(seed, v_exp):
+    """With a solver that inflates every positive-rho bandwidth 1.5x,
+    the committed allocation must still satisfy the P4 constraints on
+    every round — the fallback cascade repairs what the primary broke."""
+    h2 = np.asarray(
+        Scenario(name="guard-prop", num_rounds=T, num_clients=K).sample_channel(seed)
+    )
+    guard = GuardSpec(quarantine=True, fallback=True)
+    cfg = dataclasses.replace(CFG, solver=_CHAOS_BUDGET, guard=guard)
+    _, d = simulate(cfg, h2, ETA, 10.0 ** v_exp)
+    a = np.asarray(d.a)
+    b = np.asarray(d.b)
+    n_sel = np.asarray(d.num_selected)
+    b_min = float(CFG.radio.b_min)
+    assert np.all(np.isfinite(b))
+    # Budget: sum b within residual_tol of 1 whenever anyone is selected.
+    sums = b.sum(axis=1)
+    sel_rounds = n_sel > 0
+    assert np.all(np.abs(sums[sel_rounds] - 1.0) <= guard.residual_tol)
+    assert np.all(sums[~sel_rounds] == 0.0)
+    # Floor: b >= b_min on selected, exactly 0 on unselected.
+    assert np.all(b[a] >= b_min * (1.0 - 1e-6))
+    assert np.all(b[~a] == 0.0)

@@ -294,3 +294,141 @@ def test_report_cli_requires_an_input():
 
     with pytest.raises(SystemExit):
         main([])
+
+
+# --------------------------------------------------------------------------
+# manifest comparison (--compare)
+# --------------------------------------------------------------------------
+def test_compare_manifests_diffs_runtime_claims_and_baseline(tmp_path):
+    from benchmarks.report import compare_manifests
+
+    path_a = tmp_path / "a.jsonl"
+    path_b = tmp_path / "b.jsonl"
+    _write_run(path_a, ok=True)
+    _write_run(path_b, ok=False)
+    doc = compare_manifests(
+        read_manifest(str(path_a)), read_manifest(str(path_b))
+    )
+    assert "# Manifest comparison" in doc
+    assert "fig16_tradeoff" in doc
+    # identical runtimes -> +0.0% delta
+    assert "+0.0%" in doc
+    # claim pass counts: 2/2 in A, 1/2 in B
+    assert "| 2/2 | 1/2 |" in doc
+    # the flipped claim lands in the changed-claims table
+    assert "## Changed claims" in doc
+    assert "| fig16_tradeoff | violation stays small | PASS | FAIL |" in doc
+    # the unchanged claim does not
+    assert "| fig16_tradeoff | monotone in V |" not in doc
+    # identical baselines -> unchanged
+    assert "unchanged" in doc
+
+
+def test_compare_manifests_baseline_transition_and_missing_module(tmp_path):
+    from benchmarks.report import compare_manifests
+
+    def write(path, *, status, extra_module=False):
+        mw = ManifestWriter(str(path))
+        mw.start()
+        mw.module(
+            "grid_scaling", ok=True, runtime_s=2.0,
+            baseline=[{"metric": "rounds_per_s", "status": status, "note": ""}],
+        )
+        if extra_module:
+            mw.module("robustness_sweep", ok=True, runtime_s=1.0,
+                      rows=[_claim_row("guarded energy bounded", True)])
+        mw.summary(ok=True)
+        return mw
+
+    path_a = tmp_path / "a.jsonl"
+    path_b = tmp_path / "b.jsonl"
+    write(path_a, status="OK")
+    write(path_b, status="REGRESSION", extra_module=True)
+    doc = compare_manifests(
+        read_manifest(str(path_a)), read_manifest(str(path_b))
+    )
+    assert "rounds_per_s: OK→REGRESSION" in doc
+    assert "only in B" in doc  # robustness_sweep ran only on one side
+    # its claim shows as — -> PASS in the changed table
+    assert "| robustness_sweep | guarded energy bounded | — | PASS |" in doc
+
+
+def test_compare_manifests_uses_most_recent_run(tmp_path):
+    from benchmarks.report import compare_manifests
+
+    path = tmp_path / "m.jsonl"
+    _write_run(path, ok=False)   # stale failing run
+    _write_run(path, ok=True)    # most recent run passes
+    doc = compare_manifests(
+        read_manifest(str(path)), read_manifest(str(path))
+    )
+    # comparing the latest run against itself: nothing changed
+    assert "No claim outcomes changed." in doc
+    assert "| 2/2 | 2/2 |" in doc
+
+
+def test_compare_manifests_empty_raises(tmp_path):
+    from benchmarks.report import compare_manifests
+
+    path = tmp_path / "m.jsonl"
+    _write_run(path)
+    with pytest.raises(ValueError, match="no runs"):
+        compare_manifests([], read_manifest(str(path)))
+
+
+def test_report_cli_compare(tmp_path):
+    from benchmarks.report import main
+
+    path_a = tmp_path / "a.jsonl"
+    path_b = tmp_path / "b.jsonl"
+    _write_run(path_a, ok=True)
+    _write_run(path_b, ok=False)
+    out = tmp_path / "DIFF.md"
+    assert main(["--compare", str(path_a), str(path_b), "-o", str(out)]) == 0
+    text = out.read_text()
+    assert "# Manifest comparison" in text
+    assert "## Changed claims" in text
+
+
+# --------------------------------------------------------------------------
+# full_trace_ds (strided downsampling)
+# --------------------------------------------------------------------------
+def test_full_trace_ds_agrees_with_strided_full_trace():
+    from repro.core import PolicyParams, Scenario
+    from repro.obs import MetricsSpec
+    from repro.obs.metrics import ds_indices, ds_stride
+    from repro.sim import run_grid
+
+    T = 40
+    spec = MetricsSpec.of(
+        "queue:full_trace",
+        "queue:full_trace_ds",
+        "num_selected:full_trace",
+        "num_selected:full_trace_ds",
+        ds_samples=16,
+    )
+    res = run_grid(
+        [Scenario(name="tiny", num_rounds=T, num_clients=4)],
+        [("ocean-a", PolicyParams(v=1e-5))],
+        seeds=[0],
+        metrics=spec,
+    )
+    mets = res.metrics[0]
+    idx = ds_indices(T, 16)
+    assert ds_stride(T, 16) == 3 and len(idx) == 14  # ceil(40/16)=3 slots
+    for name in ("queue", "num_selected"):
+        full = np.asarray(mets[f"{name}/full_trace"])  # (S, N, T, ...)
+        ds = np.asarray(mets[f"{name}/full_trace_ds"])
+        assert ds.shape[2] == len(idx)
+        np.testing.assert_array_equal(full[:, :, idx], ds)
+
+
+def test_metrics_spec_ds_samples_roundtrip():
+    from repro.obs import MetricsSpec
+
+    spec = MetricsSpec.of("queue:full_trace_ds", ds_samples=32)
+    again = MetricsSpec.from_dict(spec.to_dict())
+    assert again == spec
+    assert again.ds_samples == 32
+    with pytest.raises(ValueError, match="ds_samples"):
+        MetricsSpec.of("queue:full_trace_ds", ds_samples=0)
